@@ -1,0 +1,62 @@
+"""Paper Figs 12 & 13: batched decoding throughput — matrix path (MXU/AMX)
+vs vector path (VPU/AVX), bf16 and int8.
+
+The paper's observation: the vector path wins only at batch ~1 (the matrix
+unit's input tile is mostly wasted rows); the matrix path pulls ahead as
+batch grows; in the compute-bound regime (high batch) sparse loses to dense
+(decompression overhead with no byte savings on the critical path).
+
+TPU mapping: MXU macro-tiles process 128 input rows/pass, so batch<128
+wastes (128-B)/128 of the MXU (paper: 15/16 of the AMX tile at batch 1).
+The VPU path has no such waste but 8x lower peak.  Crossovers below.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from .roofline import arch_params, HBM_BW, PEAK_FLOPS
+from .common import emit, INT8_PEAK
+
+BATCHES = [1, 2, 4, 8, 16, 32, 64, 128, 256]
+VPU_PEAK = PEAK_FLOPS / 8      # VPU vs MXU throughput ratio on v5e-class
+
+
+def step_time(cfg, batch, sparsity, path: str, int8: bool = False):
+    p = arch_params(cfg)
+    bpe = 1 if int8 else 2
+    w_bytes = p["active"] * ((1 - sparsity) + (1 / 16 / bpe)
+                             if sparsity > 0 else 1) * bpe \
+        + p["embed"] * 2
+    flops = 2 * p["active"] * batch
+    if path == "mxu":
+        eff_batch = max(batch, 128)      # macro-tile row occupancy
+        peak = INT8_PEAK if int8 else PEAK_FLOPS
+        t_c = flops * (eff_batch / batch) / peak
+    else:
+        t_c = flops / (VPU_PEAK * (2 if int8 else 1))
+    return max(t_c, w_bytes / HBM_BW)
+
+
+def run():
+    cfg = get_config("llama3-8b")
+    for b in BATCHES:
+        t_mxu_d = step_time(cfg, b, 0.0, "mxu")
+        t_mxu_s = step_time(cfg, b, 0.5, "mxu")
+        t_vpu_s = step_time(cfg, b, 0.5, "vpu")
+        tput = lambda t: b / t
+        emit(f"fig12/batch={b}", t_mxu_s * 1e6,
+             f"tput_mxu_sparse={tput(t_mxu_s):.0f}tok/s;"
+             f"tput_mxu_dense={tput(t_mxu_d):.0f};"
+             f"tput_vpu_sparse={tput(t_vpu_s):.0f};"
+             f"mxu_over_vpu={t_vpu_s/t_mxu_s:.2f}x")
+    # Fig 13: int8, Llama-2-7B-ish (paper uses the largest DeepSparse model)
+    cfg7 = get_config("llama3-8b")
+    for b in (1, 8, 32, 128):
+        t_d = step_time(cfg7, b, 0.0, "mxu", int8=True)
+        t_s = step_time(cfg7, b, 0.5, "mxu", int8=True)
+        emit(f"fig13/int8/batch={b}", t_s * 1e6,
+             f"sparse_over_dense={t_d/t_s:.2f}x"
+             f"{';compute_bound' if t_d/t_s < 1.01 and b >= 128 else ''}")
+
+
+if __name__ == "__main__":
+    run()

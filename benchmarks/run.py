@@ -1,0 +1,28 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  The roofline table (§Roofline of
+EXPERIMENTS.md) additionally needs the dry-run artifacts; run
+``python -m repro.launch.dryrun --all`` / ``repro.launch.probe --all``
+first, then ``python -m benchmarks.roofline``.
+"""
+import sys
+import time
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    from . import (bench_linear, bench_e2e, bench_batch, bench_table1,
+                   bench_cache_layout, bench_column_groups, bench_kv)
+    bench_linear.run(measure=("--fast" not in sys.argv))
+    bench_e2e.run()
+    bench_batch.run()
+    bench_table1.run()
+    bench_cache_layout.run()
+    bench_column_groups.run()
+    bench_kv.run(train_steps=8 if "--fast" in sys.argv else 40)
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

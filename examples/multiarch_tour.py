@@ -1,0 +1,45 @@
+"""Tour: the paper's technique on every assigned architecture family.
+
+SparAMX's claim — "can speed up any PyTorch model by automatically
+replacing all linear layers" — translated: one conversion call covers a
+dense GQA transformer, an MoE, an encoder-decoder, an attention-free RWKV,
+and a hybrid Mamba+MoE model, with family-specific caches (sparse KV vs
+recurrent state).
+
+  PYTHONPATH=src python examples/multiarch_tour.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import sparsity_report
+from repro.distributed import NULL_CTX
+from repro.distributed.convert_plan import convert_concrete
+from repro.models import lm
+from repro.serving import Engine
+
+ARCHS = ["qwen3-0.6b", "phi3.5-moe-42b-a6.6b", "seamless-m4t-medium",
+         "rwkv6-7b", "jamba-1.5-large-398b"]
+
+for arch in ARCHS:
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    sp = convert_concrete(params, lm.model_specs(cfg), cfg, NULL_CTX)
+    rep = sparsity_report(sp)
+    d = sum(r["dense_bytes"] for r in rep.values())
+    c = sum(r["compressed_bytes"] for r in rep.values())
+
+    batch = {"tokens": jnp.ones((2, 32), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["src_embeds"] = jnp.zeros((2, 32, cfg.d_model), jnp.float32)
+    if cfg.frontend:
+        batch["frontend_embeds"] = jnp.zeros(
+            (2, cfg.frontend_tokens, cfg.d_model), jnp.float32)
+    eng = Engine(sp, cfg, kv_mode="sparse")
+    toks, cache = eng.generate(batch, steps=4)
+    kinds = {lm.layer_kind(cfg, j)[0] for j in range(lm.period_len(cfg))}
+    print(f"{arch:<26} [{cfg.family:>6}] mixers={sorted(kinds)} "
+          f"{len(rep):>2} sparse weights {d/1e6:6.1f}->{c/1e6:6.1f}MB "
+          f"decoded={np.asarray(toks)[0].tolist()}")
+print("OK — one technique, five architecture families")

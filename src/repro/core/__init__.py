@@ -1,0 +1,22 @@
+"""Core: the paper's contribution — blocked unstructured-sparse weight and
+KV-cache formats, pruning policies, int8 quantization, and conversion of
+dense parameter trees into sparse ones ("replace all linear layers")."""
+from .sparse_format import (BlockSparseWeight, pack, unpack, packed_spec,
+                            pack_bits, unpack_bits, balanced_capacity,
+                            DEFAULT_BLOCK)
+from .pruning import (make_mask, prune_global, prune_balanced, prune_wanda,
+                      prune_kv)
+from .quant import quantize_weight_int8, quantize_act_int8, dequantize
+from .sparse_kv import (SparseKVCache, freeze_prefix, append_token,
+                        abstract_cache, refreeze, maybe_refreeze,
+                        structure_kv, KV_BLOCK_TOKENS)
+from .convert import convert_to_sparse, sparsity_report
+
+__all__ = [
+    "BlockSparseWeight", "pack", "unpack", "packed_spec", "pack_bits",
+    "unpack_bits", "balanced_capacity", "DEFAULT_BLOCK", "make_mask",
+    "prune_global", "prune_balanced", "prune_wanda", "prune_kv",
+    "quantize_weight_int8", "quantize_act_int8", "dequantize",
+    "SparseKVCache", "freeze_prefix", "append_token", "abstract_cache",
+    "KV_BLOCK_TOKENS", "convert_to_sparse", "sparsity_report",
+]

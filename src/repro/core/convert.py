@@ -1,0 +1,101 @@
+"""Dense->sparse parameter-tree conversion.
+
+The run-time face of the paper's headline usability feature: "a set of
+open-source customized sparse kernels that can speed up any PyTorch model by
+automatically replacing all linear layers with our custom sparse
+implementation."  Here: walk any params pytree, prune + pack every leaf the
+predicate selects, and return a tree the same step functions consume
+(``repro.kernels.ops.linear`` dispatches on leaf type).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .sparse_format import BlockSparseWeight, pack, DEFAULT_BLOCK
+from .pruning import make_mask
+from .quant import quantize_weight_int8
+
+# Param-name suffixes that are linear-layer weights (matmul RHS, [K, N]).
+LINEAR_KEYS = ("wq", "wk", "wv", "wo", "w_up", "w_gate", "w_down", "w_in",
+               "w_out", "w_r", "w_k", "w_v", "w_g", "w_o", "w_ck", "w_cv",
+               "w_cr", "w_proj", "w1", "w2", "w3", "lm_head")
+EXCLUDE_KEYS = ("embed", "norm", "scale", "bias", "router", "pos",
+                "a_log", "dt", "mu_", "decay", "bonus")
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def default_predicate(path: str, leaf: Any) -> bool:
+    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return False
+    if any(k in path for k in EXCLUDE_KEYS):
+        return False
+    name = path.rsplit("/", 1)[-1]
+    return any(name == k or name.endswith("/" + k) for k in LINEAR_KEYS)
+
+
+def _pack_leaf(w: jax.Array, sparsity: float, policy: str,
+               block: Tuple[int, int], mode: str,
+               pad_to_blocks: Tuple[int, int],
+               capacity: Optional[int]) -> BlockSparseWeight:
+    if w.ndim == 3:
+        # stacked experts [E, K, N]: fold E into K; blocks never straddle
+        # experts as long as K % bk == 0 (asserted).
+        e, k, n = w.shape
+        assert k % block[0] == 0, (
+            f"expert in-dim {k} must be a multiple of bk={block[0]}")
+        w = w.reshape(e * k, n)
+    mask = make_mask(w, sparsity, policy, block)
+    if mode == "int8":
+        q, scale = quantize_weight_int8(jnp.where(mask, w, 0))
+        return pack(q, mask, block, capacity=capacity,
+                    pad_to_blocks=pad_to_blocks, scale=scale)
+    return pack(w.astype(jnp.bfloat16) if mode == "bf16" else w, mask, block,
+                capacity=capacity, pad_to_blocks=pad_to_blocks)
+
+
+def convert_to_sparse(params: Any,
+                      sparsity: float = 0.5,
+                      policy: str = "balanced",
+                      block: Tuple[int, int] = DEFAULT_BLOCK,
+                      mode: str = "bf16",
+                      pad_to_blocks: Tuple[int, int] = (1, 1),
+                      capacity: Optional[int] = None,
+                      predicate: Callable[[str, Any], bool] = default_predicate
+                      ) -> Any:
+    """Replace every selected dense weight with a BlockSparseWeight.
+
+    mode: "bf16" | "keep" | "int8" (int8 adds per-channel scales).
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    out = []
+    for path, leaf in flat:
+        p = _path_str(path)
+        if predicate(p, leaf):
+            out.append(_pack_leaf(leaf, sparsity, policy, block, mode,
+                                  pad_to_blocks, capacity))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def sparsity_report(params: Any) -> Dict[str, Dict[str, float]]:
+    """Per-leaf compression statistics for converted trees."""
+    report: Dict[str, Dict[str, float]] = {}
+    flat = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda x: isinstance(x, BlockSparseWeight))[0]
+    for path, leaf in flat:
+        if isinstance(leaf, BlockSparseWeight):
+            report[_path_str(path)] = {
+                "dense_bytes": leaf.nbytes_dense(),
+                "compressed_bytes": leaf.nbytes_compressed(),
+                "ratio": leaf.compression_ratio(),
+                "capacity": leaf.capacity,
+            }
+    return report

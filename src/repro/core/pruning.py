@@ -1,0 +1,90 @@
+"""Pruning policies producing unstructured keep-masks (paper §2.2, §6.1).
+
+Three policies:
+
+* ``global``   — magnitude threshold over the whole tensor: *exactly* the
+  paper's unstructured mask.  Block capacity is set by the densest block.
+* ``balanced`` — per-block top-k ("block-balanced unstructured"): every
+  ``(bk, bn)`` block keeps exactly ``round(density * bk * bn)`` entries, so
+  packed capacity — and therefore bytes moved — matches the nominal density
+  exactly.  This is the TPU-native variant (see DESIGN.md §2).
+* ``wanda``    — |w| * input-activation norm score (Sun et al., 2024), the
+  strongest one-shot unstructured criterion the paper cites; same mask
+  mechanics as ``global``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .sparse_format import DEFAULT_BLOCK, _to_blocks, _from_blocks
+
+
+def prune_global(w: jax.Array, sparsity: float) -> jax.Array:
+    """Keep the largest-|w| ``(1-sparsity)`` fraction globally. Returns mask."""
+    if sparsity <= 0.0:
+        return jnp.ones_like(w, dtype=jnp.bool_)
+    a = jnp.abs(w).reshape(-1)
+    k = jnp.clip(jnp.round(sparsity * a.size).astype(jnp.int32), 0, a.size - 1)
+    thr = jnp.sort(a)[k]
+    return jnp.abs(w) >= thr
+
+
+def prune_balanced(w: jax.Array, sparsity: float,
+                   block: Tuple[int, int] = DEFAULT_BLOCK) -> jax.Array:
+    """Per-block top-k magnitude mask: exactly-balanced occupancy per block."""
+    if sparsity <= 0.0:
+        return jnp.ones_like(w, dtype=jnp.bool_)
+    bk, bn = block
+    l = bk * bn
+    keep = max(int(round((1.0 - sparsity) * l)), 1)
+    wb = _to_blocks(jnp.abs(w), block)                     # [Kb, Nb, L]
+    # top-`keep` indices per block -> scatter a 0/1 mask
+    idx = jax.lax.top_k(wb, keep)[1]                       # [Kb, Nb, keep]
+    mb = jnp.zeros(wb.shape, jnp.int32)
+    mb = jax.vmap(jax.vmap(lambda m, i: m.at[i].set(1)))(mb, idx)
+    mask = _from_blocks(mb, block, w.shape)
+    return mask > 0
+
+
+def prune_wanda(w: jax.Array, act_norm: jax.Array, sparsity: float,
+                per_output: bool = True) -> jax.Array:
+    """Wanda: score = |w| * ||x_k||; prune per output channel (column)."""
+    score = jnp.abs(w) * act_norm[:, None]
+    if not per_output:
+        k = int(round(sparsity * score.size))
+        thr = jnp.sort(score.reshape(-1))[max(k - 1, 0)]
+        return score >= thr
+    keep = max(int(round((1.0 - sparsity) * w.shape[0])), 1)
+    thr = jnp.sort(score, axis=0)[-keep, :]
+    return score >= thr[None, :]
+
+
+def prune_kv(kv: jax.Array, sparsity: float) -> jax.Array:
+    """Magnitude mask for cached K or V values (paper §6.1).
+
+    ``kv``: ``[..., S, D]``; values with the lowest |.| are dropped per
+    (layer-wide) tensor, matching "values with the lowest magnitudes are
+    dropped within each layer".
+    """
+    if sparsity <= 0.0:
+        return jnp.ones_like(kv, dtype=jnp.bool_)
+    a = jnp.abs(kv).reshape(-1)
+    k = jnp.clip(jnp.round(sparsity * a.size).astype(jnp.int32), 0, a.size - 1)
+    thr = jnp.sort(a)[k]
+    return jnp.abs(kv) >= thr
+
+
+def make_mask(w: jax.Array, sparsity: float, policy: str = "balanced",
+              block: Tuple[int, int] = DEFAULT_BLOCK,
+              act_norm: Optional[jax.Array] = None) -> jax.Array:
+    if policy == "global":
+        return prune_global(w, sparsity)
+    if policy == "balanced":
+        return prune_balanced(w, sparsity, block)
+    if policy == "wanda":
+        assert act_norm is not None, "wanda needs per-input-channel act norms"
+        return prune_wanda(w, act_norm, sparsity)
+    raise ValueError(f"unknown pruning policy {policy!r}")

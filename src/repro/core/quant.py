@@ -1,0 +1,45 @@
+"""INT8 symmetric quantization (paper §4.5 INT8 kernels).
+
+Weights: per-output-channel symmetric int8 (scale fp32 ``[N]``).
+Activations: dynamic per-row (per-token) symmetric int8.
+Matmul accumulates in int32 on the MXU and rescales:
+``out[m, n] = acc_i32[m, n] * s_act[m] * s_w[n]``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_weight_int8(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """``[K, N]`` -> (int8 ``[K, N]``, fp32 scale ``[N]``)."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale[None, :]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def quantize_act_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """``[..., K]`` -> (int8, fp32 per-row scale ``[...]``)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def quantize_weight_int4(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """``[K, N]`` -> (int4-valued int8 ``[K, N]`` in [-7, 7], fp32 scale
+    ``[N]``) — paper §8's INT4 extension (nibble-packed at pack time)."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0)
+    scale = jnp.maximum(amax, 1e-8) / 7.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale[None, :]), -7, 7)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array, axis: int = -1,
+               dtype=jnp.float32) -> jax.Array:
+    shape = [1] * q.ndim
+    shape[axis] = q.shape[axis]
+    return (q.astype(jnp.float32) * scale.reshape(shape)).astype(dtype)

@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, host_batch, sharded_batch, iterate

@@ -1,0 +1,3 @@
+"""Distribution: logical-axis sharding rules, shard contexts, collectives."""
+from .sharding import (ShardCtx, NULL_CTX, default_rules, tree_param_specs,
+                       to_named, mesh_axis_size)

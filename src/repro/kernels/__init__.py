@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+SparAMX's contribution IS a set of kernels; the TPU ports live here:
+
+  dense_matmul       — §4.1 dense AMX kernel  -> MXU macro-tiled GEMM
+  sparse_matmul      — §4.3 sparse AMX kernel -> decompress-in-VMEM GEMM
+  sparse_gemv        — §4.4 AVX kernel        -> VPU vector path (batch<=8)
+  sparse_matmul_int8 — §4.5 INT8 kernels      -> int8 MXU + scales
+  sparse_attention   — §6   sparse-KV kernel  -> flash-decode over the
+                                                 compressed frozen prefix
+
+``ops`` holds the jit'd dispatch wrappers (+ backend switch), ``ref`` the
+pure-jnp oracles every kernel is validated against in interpret mode.
+"""
+from . import ops, ref
+from .ops import (linear, dense_matmul, sparse_matmul, sparse_matmul_int8,
+                  sparse_decode_attention, set_backend, get_backend, backend)

@@ -1,0 +1,43 @@
+"""Shared in-kernel helpers for the SparAMX-style Pallas kernels.
+
+``decompress_block`` is the TPU re-think of the paper's Algorithm 2
+(`vpexpandw` + `vpopcntd` + AVX prefix sum):
+
+* AVX bitmap fetch            -> uint32 words already staged in VMEM
+* vpopcntd per 32-bit word    -> row-sum of unpacked bits (VPU reduce)
+* Alg. 1 parallel prefix sum  -> two-level exclusive cumsum (lane log-shifts)
+* vpexpandw expand            -> vector gather ``values[prefix]`` masked by
+                                 the bitmap
+
+Crucially there is no AVX->memory->AMX round-trip (the paper's stated
+architectural bottleneck, §7): the expanded tile is produced in VMEM and fed
+straight to the MXU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def unpack_bits_block(words: jax.Array, bk: int, bn: int) -> jax.Array:
+    """uint32 ``(bk*bn//32,)`` -> int32 0/1 mask ``(bk, bn)`` (row-major)."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((words[:, None] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
+    return bits.reshape(bk, bn)
+
+
+def decompress_block(words: jax.Array, values: jax.Array,
+                     bk: int, bn: int, dtype=None) -> jax.Array:
+    """Expand one compressed block to a dense ``(bk, bn)`` tile in registers.
+
+    words: uint32 ``(bk*bn//32,)`` bitmap; values: ``(C,)`` packed non-zeros.
+    """
+    mask = unpack_bits_block(words, bk, bn)
+    # two-level exclusive prefix sum over the row-major flat order
+    within = jnp.cumsum(mask, axis=1) - mask                  # (bk, bn)
+    row_nnz = jnp.sum(mask, axis=1, keepdims=True)            # (bk, 1)
+    row_off = jnp.cumsum(row_nnz, axis=0) - row_nnz           # (bk, 1)
+    idx = jnp.minimum(row_off + within, values.shape[0] - 1)
+    dense = jnp.take(values, idx)                             # vector gather
+    dense = jnp.where(mask > 0, dense, jnp.zeros((), values.dtype))
+    return dense.astype(dtype or values.dtype)

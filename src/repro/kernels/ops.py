@@ -1,0 +1,178 @@
+"""Jit'd dispatch wrappers over the Pallas kernels and their XLA fallbacks.
+
+Backend policy (``set_backend`` / ``backend()`` context):
+  * ``"tpu"``        — real Pallas lowering (requires TPU devices).
+  * ``"interpret"``  — Pallas interpret mode: the kernel bodies execute in
+                        Python on CPU; used to *validate* the kernels here.
+  * ``"xla"``        — pure-jnp reference semantics (fast on CPU; used by the
+                        multi-pod dry-run, where roofline terms are then
+                        kernel-adjusted — see benchmarks/roofline.py).
+
+All entry points accept arbitrary leading batch dims on ``x``.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_format import BlockSparseWeight
+from repro.core.quant import quantize_act_int8
+from . import ref
+from .dense_matmul import dense_matmul_pallas
+from .sparse_matmul import sparse_matmul_pallas
+from .sparse_matmul_int8 import sparse_matmul_int8_pallas
+from .sparse_gemv import sparse_gemv_pallas
+from .sparse_attention import sparse_decode_attention_pallas
+
+_BACKEND = "tpu" if jax.default_backend() == "tpu" else "xla"
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    assert name in ("tpu", "interpret", "xla"), name
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+@contextlib.contextmanager
+def backend(name: str):
+    prev = get_backend()
+    set_backend(name)
+    try:
+        yield
+    finally:
+        set_backend(prev)
+
+
+def _pallas(interpret_ok=True) -> Optional[bool]:
+    """None -> use XLA ref; True -> interpret pallas; False -> real pallas."""
+    if _BACKEND == "xla":
+        return None
+    return _BACKEND == "interpret"
+
+
+def _flatten_leading(x):
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+# ---------------------------------------------------------------------------
+# matmuls
+# ---------------------------------------------------------------------------
+
+def dense_matmul(x: jax.Array, w: jax.Array, out_dtype=None) -> jax.Array:
+    x2, lead = _flatten_leading(x)
+    interp = _pallas()
+    if interp is None:
+        out = ref.dense_matmul_ref(x2, w, out_dtype)
+    else:
+        out = dense_matmul_pallas(x2, w, out_dtype=out_dtype, interpret=interp)
+    return out.reshape(*lead, w.shape[-1])
+
+
+def sparse_matmul(x: jax.Array, sw: BlockSparseWeight,
+                  out_dtype=None) -> jax.Array:
+    x2, lead = _flatten_leading(x)
+    interp = _pallas()
+    if interp is None:
+        out = ref.sparse_matmul_ref(x2, sw, out_dtype)
+    elif x2.shape[0] <= 8:
+        out = sparse_gemv_pallas(x2, sw, out_dtype=out_dtype, interpret=interp)
+    else:
+        out = sparse_matmul_pallas(x2, sw, out_dtype=out_dtype,
+                                   interpret=interp)
+    return out.reshape(*lead, out.shape[-1])
+
+
+def sparse_matmul_int8(x: jax.Array, sw: BlockSparseWeight,
+                       out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or x.dtype
+    x2, lead = _flatten_leading(x)
+    interp = _pallas()
+    if interp is None:
+        out = ref.sparse_matmul_int8_ref(x2, sw, out_dtype)
+    else:
+        xq, sx = quantize_act_int8(x2)
+        if sw.packed4:
+            from .sparse_matmul_int4 import sparse_matmul_int4_pallas
+            out = sparse_matmul_int4_pallas(xq, sx, sw, out_dtype=out_dtype,
+                                            interpret=interp)
+        else:
+            out = sparse_matmul_int8_pallas(xq, sx, sw, out_dtype=out_dtype,
+                                            interpret=interp)
+    return out.reshape(*lead, out.shape[-1])
+
+
+def linear(x: jax.Array, w, out_dtype=None) -> jax.Array:
+    """Apply a linear layer whose weight is dense, sparse-bf16, or sparse-int8.
+
+    This is the run-time face of the paper's "automatically replace all
+    linear layers" feature: callers never branch on the storage format.
+    """
+    if isinstance(w, BlockSparseWeight):
+        if w.packed4 or w.values.dtype == jnp.int8:
+            return sparse_matmul_int8(x, w, out_dtype)
+        return sparse_matmul(x, w, out_dtype)
+    return dense_matmul(x, w, out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# sparse-KV decode attention
+# ---------------------------------------------------------------------------
+
+def sparse_decode_attention(q: jax.Array,
+                            k_sp: BlockSparseWeight,
+                            v_sp: BlockSparseWeight,
+                            hkv: int,
+                            sm_scale: float,
+                            k_tail: Optional[jax.Array] = None,
+                            v_tail: Optional[jax.Array] = None,
+                            tail_len: Optional[jax.Array] = None) -> jax.Array:
+    """Decode attention over a compressed frozen prefix + dense tail.
+
+    q: [B, Hq, D]; k_sp/v_sp packed from the [B*Hkv*S, D] cache view with
+    block (bs, D); k_tail/v_tail: [B, Hkv, T, D].
+    """
+    interp = _pallas()
+    if interp is None:
+        return ref.sparse_decode_attention_ref(
+            q, k_sp, v_sp, sm_scale, k_tail, v_tail, tail_len)
+
+    b, hq, d = q.shape
+    g = hq // hkv
+    bs = k_sp.block[0]
+    assert k_sp.block[1] == d
+    words = k_sp.bitmap.shape[-1]
+    if k_sp.bitmap.ndim == 5:       # structured [B, Hkv, Sb, 1, X]
+        sb = k_sp.bitmap.shape[2]
+    else:
+        sb = k_sp.bitmap.shape[0] // (b * hkv)
+    qg = q.reshape(b, hkv, g, d)
+    kbm = k_sp.bitmap.reshape(b, hkv, sb, words)
+    kvv = k_sp.values.reshape(b, hkv, sb, k_sp.capacity)
+    vbm = v_sp.bitmap.reshape(b, hkv, sb, words)
+    vvv = v_sp.values.reshape(b, hkv, sb, v_sp.capacity)
+    o, lse = sparse_decode_attention_pallas(
+        qg, kbm, kvv, vbm, vvv, bs=bs, sm_scale=sm_scale, interpret=interp)
+    o = o.reshape(b, hq, d)
+    lse = lse.reshape(b, hq)
+
+    if k_tail is not None and k_tail.shape[2] > 0:
+        t = k_tail.shape[2]
+        valid = jnp.arange(t)[None, :] < (
+            tail_len if tail_len is not None else t)
+        valid = jnp.broadcast_to(valid, (b, t))
+        kt = jnp.repeat(k_tail, g, axis=1)
+        vt = jnp.repeat(v_tail, g, axis=1)
+        o2, lse2 = ref.attn_partial_ref(q, kt, vt, sm_scale, valid)
+        empty = ~jnp.any(valid, axis=-1)
+        lse2 = jnp.where(empty[:, None], -jnp.inf, lse2)
+        lse2 = jnp.where(jnp.isfinite(lse2), lse2, lse.min() - 60.0)
+        o, _ = ref._merge_attn(o, lse, o2, lse2)
+    return o.astype(q.dtype)

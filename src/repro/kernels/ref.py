@@ -1,0 +1,169 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the *semantics* each kernel must match (asserted to by the
+per-kernel shape/dtype sweep tests), and double as the XLA fallback used on
+non-TPU backends and in the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_format import BlockSparseWeight, unpack
+from repro.core.quant import quantize_act_int8
+
+
+def dense_matmul_ref(x: jax.Array, w: jax.Array,
+                     out_dtype=None) -> jax.Array:
+    """``x [M, K] @ w [K, N]`` with f32 accumulation (paper §4.1 baseline)."""
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or x.dtype)
+
+
+def sparse_matmul_ref(x: jax.Array, sw: BlockSparseWeight,
+                      out_dtype=None) -> jax.Array:
+    """Load-as-sparse, compute-as-dense (paper §4.3): decompress then GEMM.
+
+    Works on shard_map-sliced weights too (the aux logical shape may exceed
+    the local padded arrays; trim only when padding is real)."""
+    w = unpack(sw, trim=False)
+    kp = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (0, max(kp - x.shape[1], 0))))[:, :kp]
+    out = jnp.dot(xp, w, preferred_element_type=jnp.float32)
+    n = min(sw.shape[1], w.shape[1])
+    return out[:, :n].astype(out_dtype or x.dtype)
+
+
+def sparse_gemv_ref(x: jax.Array, sw: BlockSparseWeight,
+                    out_dtype=None) -> jax.Array:
+    """Semantics identical to sparse_matmul; kept separate as the oracle for
+    the vector-path kernel (paper §4.4 AVX kernel)."""
+    return sparse_matmul_ref(x, sw, out_dtype)
+
+
+def sparse_matmul_int8_ref(x: jax.Array, sw: BlockSparseWeight,
+                           out_dtype=jnp.float32) -> jax.Array:
+    """INT8/INT4 path (paper §4.5/§8): dynamic per-row activation quant,
+    int32 accumulation, per-channel rescale.  ``sw.values`` is int8 (or
+    nibble-packed int4 — ``unpack`` dequantizes to int8 first, exactly the
+    paper's prescription)."""
+    assert (sw.values.dtype == jnp.int8 or sw.packed4) \
+        and sw.scale is not None
+    xq, sx = quantize_act_int8(x)
+    w = unpack(sw, trim=False)                       # int8, padded
+    kp = w.shape[0]
+    xq = jnp.pad(xq, ((0, 0), (0, max(kp - xq.shape[1], 0))))[:, :kp]
+    acc = jnp.dot(xq.astype(jnp.int32), w.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    out = acc.astype(jnp.float32) * sx[:, None] \
+        * sw.scale[None, : w.shape[1]]
+    n = min(sw.shape[1], w.shape[1])
+    return out[:, :n].astype(out_dtype)
+
+
+def _merge_attn(o1, lse1, o2, lse2):
+    """Combine two attention partials via their log-sum-exps."""
+    m = jnp.maximum(lse1, lse2)
+    w1 = jnp.exp(lse1 - m)[..., None]
+    w2 = jnp.exp(lse2 - m)[..., None]
+    den = w1 + w2
+    return (o1 * w1 + o2 * w2) / den, m + jnp.log(den[..., 0])
+
+
+def gqa_partial_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                    sm_scale: float,
+                    valid: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Grouped-GQA single-query partial — NO repeat_kv materialization.
+
+    q: [B, Hkv, G, D]; k, v: [B, Hkv, S, D] (bf16 ok — contraction
+    accumulates in f32 via preferred_element_type, no f32 copies of the
+    cache).  Returns (out [B,Hkv,G,D] f32, lse [B,Hkv,G]).
+
+    This is §Perf iteration 3: the paper flags PyTorch's ``repeat_kv`` as a
+    decode bottleneck; the XLA analogue (jnp.repeat + .astype(f32)) was
+    ~20x the ideal cache bytes.
+    """
+    s = jnp.einsum("bhgd,bhsd->bhgs", q, k,
+                   preferred_element_type=jnp.float32) * sm_scale
+    if valid is not None:
+        s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    if valid is not None:
+        p = jnp.where(valid[:, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgs,bhsd->bhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    l_safe = jnp.maximum(l, 1e-30)
+    return o / l_safe[..., None], m_safe + jnp.log(l_safe)
+
+
+def attn_partial_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     sm_scale: float,
+                     valid: Optional[jax.Array] = None
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Single-query attention partial: returns (out, lse).
+
+    q: [B, H, D]; k, v: [B, H, S, D] (H = kv heads already matched to q heads);
+    valid: optional [B, S] bool mask of real (non-pad) positions.
+    """
+    s = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if valid is not None:
+        s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1)
+    # all-masked rows: avoid nan
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    if valid is not None:
+        p = jnp.where(valid[:, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhs,bhsd->bhd", p, v.astype(jnp.float32))
+    l_safe = jnp.maximum(l, 1e-30)
+    return o / l_safe[..., None], m_safe + jnp.log(l_safe)
+
+
+def sparse_decode_attention_ref(
+        q: jax.Array,
+        k_sp: BlockSparseWeight, v_sp: BlockSparseWeight,
+        sm_scale: float,
+        k_tail: Optional[jax.Array] = None,
+        v_tail: Optional[jax.Array] = None,
+        tail_len: Optional[jax.Array] = None) -> jax.Array:
+    """Oracle for the sparse-KV flash-decode kernel (paper §6.2).
+
+    q: [B, Hq, D].  k_sp/v_sp hold the *compressed frozen prefix*: their
+    logical shape is [(B*Hkv*S), D] blocked row-major, i.e. they were packed
+    from the [B*Hkv*S, D] view of the cache.  k_tail/v_tail: dense dynamic
+    tail [B, Hkv, T, D] with `tail_len` valid positions.
+    """
+    b, hq, d = q.shape
+    hkv = k_tail.shape[1] if k_tail is not None else hq
+    if k_sp.bitmap.ndim == 5:       # structured [B, Hkv, Sb, 1, ...]
+        k = unpack(k_sp)                              # [B, Hkv, S, D]
+        v = unpack(v_sp)
+    else:
+        kd = unpack(k_sp)                             # [(B Hkv S), D]
+        vd = unpack(v_sp)
+        s_len = kd.shape[0] // (b * hkv)
+        k = kd.reshape(b, hkv, s_len, d)
+        v = vd.reshape(b, hkv, s_len, d)
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    o, lse = gqa_partial_ref(qg, k, v, sm_scale)
+    if k_tail is not None and k_tail.shape[2] > 0:
+        t = k_tail.shape[2]
+        valid = (jnp.arange(t)[None, :] <
+                 (tail_len if tail_len is not None else t))
+        valid = jnp.broadcast_to(valid, (b, t))
+        o2, lse2 = gqa_partial_ref(qg, k_tail, v_tail, sm_scale, valid)
+        # a fully-empty tail contributes nothing
+        empty = ~jnp.any(valid, axis=-1)
+        lse2 = jnp.where(empty[:, None, None], -jnp.inf, lse2)
+        lse2_safe = jnp.where(jnp.isfinite(lse2), lse2, lse.min() - 60.0)
+        o, _ = _merge_attn(o, lse, o2, lse2_safe)
+    return o.reshape(b, hq, d).astype(q.dtype)

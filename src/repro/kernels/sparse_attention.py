@@ -1,0 +1,113 @@
+"""Sparse-KV flash-decode Pallas kernel — paper §6 on TPU.
+
+The paper prunes the cached K/V values with unstructured magnitude pruning
+(30%/50% with <1% accuracy loss) and adapts its sparse kernel to the QK^T and
+RV batched matmuls.  Here the compressed **frozen prefix** of the KV cache
+(bitmap + packed values per 128-token block, packed once after prefill —
+paper §6.2's constant-size cache-in-model-state design) is consumed by a
+flash-decoding kernel:
+
+Grid ``(B, Hkv, S_blocks)`` with the sequence dimension innermost/sequential.
+Each step decompresses one (bs, D) K block and one V block in VMEM, does the
+(G, bs) score panel for the GQA head group on the MXU, and maintains online
+softmax statistics in VMEM scratch.  Output is the prefix-partial attention
+plus its log-sum-exp so the (tiny, dense) dynamic tail can be merged outside
+the kernel.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from .common import decompress_block
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, kbm_ref, kval_ref, vbm_ref, vval_ref,
+            o_ref, lse_ref, acc_ref, m_ref, l_ref, *, bs, d, sm_scale):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    k_blk = decompress_block(kbm_ref[0, 0, 0], kval_ref[0, 0, 0], bs, d,
+                             dtype=jnp.float32)                 # (bs, D)
+    q = q_ref[0, 0].astype(jnp.float32)                          # (G, D)
+    s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+
+    m_prev = m_ref[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))             # (G,)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])                              # (G, bs)
+    l_new = l_ref[:, 0] * alpha + jnp.sum(p, axis=-1)
+
+    v_blk = decompress_block(vbm_ref[0, 0, 0], vval_ref[0, 0, 0], bs, d,
+                             dtype=jnp.float32)                 # (bs, D)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jnp.dot(p, v_blk, preferred_element_type=jnp.float32))
+    m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(s_idx == pl.num_programs(2) - 1)
+    def _done():
+        l_safe = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0] = (m_ref[:, 0] + jnp.log(l_safe)).astype(lse_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("bs", "sm_scale", "interpret"))
+def sparse_decode_attention_pallas(
+        q: jax.Array,
+        k_bitmap: jax.Array, k_values: jax.Array,
+        v_bitmap: jax.Array, v_values: jax.Array,
+        bs: int, sm_scale: float, interpret: bool = True):
+    """Prefix-partial attention over the compressed cache.
+
+    q:         [B, Hkv, G, D]
+    k_bitmap:  uint32 [B, Hkv, Sb, bs*D//32]   (same for v_bitmap)
+    k_values:  [B, Hkv, Sb, Ck]                (v_values: [.., Cv])
+    Returns (out [B, Hkv, G, D] f32, lse [B, Hkv, G] f32).
+    """
+    b, hkv, g, d = q.shape
+    sb = k_bitmap.shape[2]
+    words = k_bitmap.shape[3]
+    ck, cv = k_values.shape[3], v_values.shape[3]
+
+    out, lse = pl.pallas_call(
+        partial(_kernel, bs=bs, d=d, sm_scale=sm_scale),
+        grid=(b, hkv, sb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bb, h, s: (bb, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, words), lambda bb, h, s: (bb, h, s, 0)),
+            pl.BlockSpec((1, 1, 1, ck), lambda bb, h, s: (bb, h, s, 0)),
+            pl.BlockSpec((1, 1, 1, words), lambda bb, h, s: (bb, h, s, 0)),
+            pl.BlockSpec((1, 1, 1, cv), lambda bb, h, s: (bb, h, s, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bb, h, s: (bb, h, 0, 0)),
+            pl.BlockSpec((1, 1, g), lambda bb, h, s: (bb, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="sparse_decode_attention",
+    )(q, k_bitmap, k_values, v_bitmap, v_values)
+    return out, lse

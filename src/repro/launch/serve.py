@@ -1,0 +1,82 @@
+"""Serving launcher: sparse-weight + sparse-KV decode with batched requests.
+
+Demonstrates the paper's full inference path at CPU scale: init (or load) a
+model, convert linear layers to the compressed sparse format, prefill a
+batch of prompts, freeze the cache, and decode.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+      --batch 4 --prompt-len 64 --steps 16 --sparsity 0.5 [--int8]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import DataConfig, host_batch
+from repro.distributed import ShardCtx, NULL_CTX, default_rules
+from repro.distributed.convert_plan import convert_concrete
+from repro.models import lm
+from repro.serving import Engine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--sparsity", type=float, default=0.5)
+    ap.add_argument("--int8", action="store_true")
+    ap.add_argument("--dense", action="store_true",
+                    help="baseline: dense weights + dense KV")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    import dataclasses
+    cfg = dataclasses.replace(cfg, sparsity=args.sparsity)
+
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    if not args.dense:
+        specs = lm.model_specs(cfg)
+        params = convert_concrete(params, specs, cfg, NULL_CTX,
+                                  mode="int8" if args.int8 else "bf16")
+        from repro.core import sparsity_report
+        rep = sparsity_report(params)
+        tot_d = sum(r["dense_bytes"] for r in rep.values())
+        tot_c = sum(r["compressed_bytes"] for r in rep.values())
+        print(f"[serve] sparse-converted {len(rep)} weights: "
+              f"{tot_d/1e6:.1f}MB -> {tot_c/1e6:.1f}MB "
+              f"({tot_c/tot_d:.3f}x)")
+
+    dc = DataConfig(vocab=cfg.vocab, seq_len=args.prompt_len,
+                    global_batch=args.batch)
+    prompts = jnp.asarray(host_batch(dc, 0)["tokens"])
+    batch = {"tokens": prompts}
+    if cfg.family == "encdec":
+        batch["src_embeds"] = jnp.zeros(
+            (args.batch, args.prompt_len, cfg.d_model), jnp.float32)
+    if cfg.frontend:
+        batch["frontend_embeds"] = jnp.zeros(
+            (args.batch, cfg.frontend_tokens, cfg.d_model), jnp.float32)
+
+    eng = Engine(params, cfg,
+                 kv_mode="dense" if args.dense else "sparse")
+    t0 = time.time()
+    toks, _ = eng.generate(batch, steps=args.steps)
+    dt = time.time() - t0
+    print(f"[serve] generated {args.steps} tokens x {args.batch} reqs "
+          f"in {dt:.2f}s ({args.steps*args.batch/dt:.1f} tok/s)")
+    print("[serve] sample:", np.asarray(toks)[0][:16])
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

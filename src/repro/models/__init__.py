@@ -1,0 +1,6 @@
+"""Model zoo: functional param-spec models for all assigned architectures."""
+from . import module
+from .module import ParamSpec, abstract, initialize, partition_specs
+from .lm import (model_specs, abstract_params, init_params, forward_train,
+                 forward_decode, init_cache, logits_fn, period_len,
+                 layer_kind)

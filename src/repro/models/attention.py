@@ -1,0 +1,191 @@
+"""GQA attention (train full-sequence, decode with dense or sparse-KV cache).
+
+Head counts are padded to ``cfg.tp_pad`` (extra heads have zero-init wq/wo
+rows so they are mathematically inert) so the head axis always shards over
+the model axis; kv heads replicate when ``n_kv`` doesn't divide TP
+(DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.core.sparse_kv import SparseKVCache, append_token
+from .module import ParamSpec
+from .layers import rms_norm, rope_angles, apply_rope
+from .flash import blocked_attention, full_attention
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DenseKVCache:
+    """Baseline decode cache: preallocated [B, Hkv, S_max, D] + length."""
+    k: jax.Array
+    v: jax.Array
+    length: jax.Array           # int32 scalar
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.length), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_dense_cache(batch, hkv, s_max, d, dtype=jnp.bfloat16):
+    z = jax.ShapeDtypeStruct if dtype is None else None
+    k = jnp.zeros((batch, hkv, s_max, d), dtype)
+    return DenseKVCache(k, k, jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def attn_specs(cfg, cross: bool = False) -> Dict[str, ParamSpec]:
+    hq, hkv, hd, d = cfg.padded_heads, cfg.n_kv, cfg.hd, cfg.d_model
+    dt = cfg.pdtype
+    specs = {
+        "wq": ParamSpec((d, hq * hd), dt, ("embed", "heads")),
+        "wk": ParamSpec((d, hkv * hd), dt, ("embed", "kv_heads")),
+        "wv": ParamSpec((d, hkv * hd), dt, ("embed", "kv_heads")),
+        "wo": ParamSpec((hq * hd, d), dt, ("heads", "embed")),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec((hd,), jnp.float32, (None,), init="ones")
+        specs["k_norm"] = ParamSpec((hd,), jnp.float32, (None,), init="ones")
+    return specs
+
+
+def _project_q(p, x, cfg):
+    b = x.shape[:-1]
+    q = ops.linear(x, p["wq"]).reshape(*b, cfg.padded_heads, cfg.hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+    return q
+
+
+def _project_kv(p, x, cfg):
+    b = x.shape[:-1]
+    k = ops.linear(x, p["wk"]).reshape(*b, cfg.n_kv, cfg.hd)
+    v = ops.linear(x, p["wv"]).reshape(*b, cfg.n_kv, cfg.hd)
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"])
+    return k, v
+
+
+def _repeat_kv(k: jax.Array, g: int) -> jax.Array:
+    return jnp.repeat(k, g, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence (train / prefill)
+# ---------------------------------------------------------------------------
+
+def attn_apply(p, x: jax.Array, cfg, ctx, positions: jax.Array,
+               memory: Optional[jax.Array] = None,
+               causal: Optional[bool] = None,
+               attn_impl: str = "masked",
+               return_kv: bool = False):
+    """x [B, S, d]; memory (enc-dec cross attention source) [B, Sm, d]."""
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.padded_heads, cfg.n_kv, cfg.hd
+    q = _project_q(p, x, cfg)                                # [B,S,Hq,hd]
+    src = memory if memory is not None else x
+    k, v = _project_kv(p, src, cfg)                          # [B,Sm,Hkv,hd]
+
+    if causal is None:
+        causal = memory is None
+    if memory is None:
+        cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    q = q.transpose(0, 2, 1, 3)                              # [B,Hq,S,hd]
+    k = _repeat_kv(k.transpose(0, 2, 1, 3), hq // hkv)
+    v = _repeat_kv(v.transpose(0, 2, 1, 3), hq // hkv)
+    sm = 1.0 / hd ** 0.5
+    # short seqs: one einsum (scores fit per-device; also keeps the HLO flat
+    # so compiled-probe cost analysis is exact).  Longer: blocked flash.
+    thr = getattr(cfg, "full_attn_max", 4096)
+    if s <= thr and k.shape[2] <= thr:
+        o = full_attention(q, k, v, sm, causal=causal)
+    else:
+        o = blocked_attention(q, k, v, sm, causal=causal, impl=attn_impl)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+    out = ops.linear(o, p["wo"])
+    if return_kv:
+        g = hq // hkv
+        kv = (k[:, ::g], v[:, ::g])          # un-repeated [B, Hkv, S, hd]
+        return out, kv
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode (one token, cached KV)
+# ---------------------------------------------------------------------------
+
+def attn_decode(p, x_t: jax.Array, cache, cfg, ctx,
+                position: jax.Array) -> Tuple[jax.Array, Any]:
+    """x_t [B, d] (single new token). cache: DenseKVCache | SparseKVCache."""
+    b, _ = x_t.shape
+    hq, hkv, hd = cfg.padded_heads, cfg.n_kv, cfg.hd
+    g = hq // hkv
+    q = _project_q(p, x_t, cfg)                              # [B,Hq,hd]
+    k_new, v_new = _project_kv(p, x_t, cfg)                  # [B,Hkv,hd]
+    cos, sin = rope_angles(position, hd, cfg.rope_theta)     # scalar pos
+    q = apply_rope(q[:, None], cos[None, None], sin[None, None])[:, 0]
+    k_new = apply_rope(k_new[:, None], cos[None, None], sin[None, None])[:, 0]
+    sm = 1.0 / hd ** 0.5
+
+    if isinstance(cache, SparseKVCache):
+        cache = append_token(cache, k_new, v_new)
+        if (getattr(cfg, "cp_decode", False) and ctx is not None
+                and ctx.mesh is not None and cache.k_sp.bitmap.ndim == 5):
+            from repro.distributed.cp_attention import \
+                sparse_decode_attention_cp
+            o = sparse_decode_attention_cp(q, cache, hkv, sm, ctx)
+        else:
+            o = ops.sparse_decode_attention(
+                q, cache.k_sp, cache.v_sp, hkv, sm,
+                cache.k_tail, cache.v_tail, cache.tail_len)
+    else:
+        idx = cache.length
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k_new[:, :, None, :].astype(cache.k.dtype), idx, axis=2)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v_new[:, :, None, :].astype(cache.v.dtype), idx, axis=2)
+        cache = DenseKVCache(k, v, idx + 1)
+        valid = jnp.arange(k.shape[2])[None, :] < (idx + 1)
+        valid = jnp.broadcast_to(valid, (b, k.shape[2]))
+        if ctx is not None:
+            k = ctx.constrain(k, ("batch", "kv_heads", "ctx", None))
+            v = ctx.constrain(v, ("batch", "kv_heads", "ctx", None))
+        o = full_attention(q[:, :, None, :], _repeat_kv(k, g),
+                           _repeat_kv(v, g), sm, causal=False,
+                           kv_valid=valid)[:, :, 0, :]
+
+    out = ops.linear(o.reshape(b, hq * hd).astype(x_t.dtype), p["wo"])
+    return out, cache
+
+
+def cross_attn_decode(p, x_t: jax.Array, k: jax.Array, v: jax.Array,
+                      cfg) -> jax.Array:
+    """Decode-time cross attention against precomputed (possibly sparse)
+    encoder K/V [B, Hkv, Sm, hd] — no mask, no cache update."""
+    b, _ = x_t.shape
+    hq, hkv, hd = cfg.padded_heads, cfg.n_kv, cfg.hd
+    q = _project_q(p, x_t, cfg)
+    sm = 1.0 / hd ** 0.5
+    g = hq // hkv
+    o = full_attention(q[:, :, None, :], _repeat_kv(k, g), _repeat_kv(v, g),
+                       sm, causal=False)[:, :, 0, :]
+    return ops.linear(o.reshape(b, hq * hd).astype(x_t.dtype), p["wo"])

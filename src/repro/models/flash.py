@@ -1,0 +1,136 @@
+"""Memory-bounded blocked attention in pure JAX (train/prefill path).
+
+Flash-attention structure (online softmax over KV blocks) expressed with
+``lax.map`` over query blocks + ``lax.scan`` over KV blocks, so peak memory
+is one (bq x bkv) score panel per (B, H) instead of the full S^2 matrix.
+
+Two schedules:
+
+* ``masked``     — every (i, j) block pair is computed and causally masked.
+  Simple, but does ~2x the causal-optimal FLOPs (the upper triangle is
+  computed then thrown away).  This is the baseline the §Perf hillclimb
+  starts from.
+* ``triangular`` — only the ~nq(nq+1)/2 lower-triangle block pairs are
+  enumerated (a static pair list driving dynamic slices), recovering the
+  causal-optimal FLOP count at the cost of a scatter per step.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = jnp.float32(-1e30)
+
+
+def _attn_block(qi, kj, vj, s_mask, m, l, acc, sm_scale):
+    """One online-softmax update.  qi:(...,bq,D) kj:(...,bkv,D)."""
+    s = jnp.einsum("...qd,...kd->...qk", qi.astype(jnp.float32),
+                   kj.astype(jnp.float32)) * sm_scale
+    if s_mask is not None:
+        s = jnp.where(s_mask, s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    if s_mask is not None:
+        p = jnp.where(s_mask, p, 0.0)
+    l_new = l * alpha + jnp.sum(p, axis=-1)
+    acc_new = acc * alpha[..., None] + jnp.einsum(
+        "...qk,...kd->...qd", p, vj.astype(jnp.float32))
+    return m_new, l_new, acc_new
+
+
+def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      sm_scale: float, causal: bool = True,
+                      bq: int = 512, bkv: int = 512,
+                      impl: str = "masked") -> jax.Array:
+    """q [B,H,S,D], k/v [B,H,Skv,D] -> [B,H,S,D].  Requires S%bq==Skv%bkv==0."""
+    b, h, s, d = q.shape
+    skv = k.shape[2]
+    bq = min(bq, s)
+    bkv = min(bkv, skv)
+    assert s % bq == 0 and skv % bkv == 0
+    nq, nk = s // bq, skv // bkv
+    if impl == "triangular" and causal:
+        return _triangular(q, k, v, sm_scale, bq, bkv)
+
+    qb = q.reshape(b, h, nq, bq, d).transpose(2, 0, 1, 3, 4)
+
+    def per_q(args):
+        i, qi = args
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+            kj = lax.dynamic_slice_in_dim(k, j * bkv, bkv, axis=2)
+            vj = lax.dynamic_slice_in_dim(v, j * bkv, bkv, axis=2)
+            mask = None
+            if causal:
+                qpos = i * bq + jnp.arange(bq)
+                kpos = j * bkv + jnp.arange(bkv)
+                mask = (qpos[:, None] >= kpos[None, :])[None, None]
+            m, l, acc = _attn_block(qi, kj, vj, mask, m, l, acc, sm_scale)
+            return (m, l, acc), None
+
+        init = (jnp.full((b, h, bq), NEG_INF),
+                jnp.zeros((b, h, bq), jnp.float32),
+                jnp.zeros((b, h, bq, d), jnp.float32))
+        (m, l, acc), _ = lax.scan(kv_step, init, jnp.arange(nk))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = lax.map(per_q, (jnp.arange(nq), qb))      # (nq, B, H, bq, D)
+    out = out.transpose(1, 2, 0, 3, 4).reshape(b, h, s, d)
+    return out.astype(q.dtype)
+
+
+def _triangular(q, k, v, sm_scale, bq, bkv):
+    """Causal-optimal schedule: static (i, j<=i) pair list, one scan."""
+    b, h, s, d = q.shape
+    nq, nk = s // bq, k.shape[2] // bkv
+    ratio = bq // bkv if bq >= bkv else 1
+    pairs = [(i, j) for i in range(nq) for j in range(nk)
+             if j * bkv < (i + 1) * bq]
+    pi = jnp.array([p[0] for p in pairs], jnp.int32)
+    pj = jnp.array([p[1] for p in pairs], jnp.int32)
+
+    def step(carry, idx):
+        m, l, acc = carry                       # (B,H,S), (B,H,S), (B,H,S,D)
+        i, j = pi[idx], pj[idx]
+        qi = lax.dynamic_slice_in_dim(q, i * bq, bq, axis=2)
+        kj = lax.dynamic_slice_in_dim(k, j * bkv, bkv, axis=2)
+        vj = lax.dynamic_slice_in_dim(v, j * bkv, bkv, axis=2)
+        qpos = i * bq + jnp.arange(bq)
+        kpos = j * bkv + jnp.arange(bkv)
+        mask = (qpos[:, None] >= kpos[None, :])[None, None]
+        mi = lax.dynamic_slice_in_dim(m, i * bq, bq, axis=2)
+        li = lax.dynamic_slice_in_dim(l, i * bq, bq, axis=2)
+        ai = lax.dynamic_slice_in_dim(acc, i * bq, bq, axis=2)
+        mi, li, ai = _attn_block(qi, kj, vj, mask, mi, li, ai, sm_scale)
+        m = lax.dynamic_update_slice_in_dim(m, mi, i * bq, axis=2)
+        l = lax.dynamic_update_slice_in_dim(l, li, i * bq, axis=2)
+        acc = lax.dynamic_update_slice_in_dim(acc, ai, i * bq, axis=2)
+        return (m, l, acc), None
+
+    init = (jnp.full((b, h, s), NEG_INF),
+            jnp.zeros((b, h, s), jnp.float32),
+            jnp.zeros((b, h, s, d), jnp.float32))
+    (m, l, acc), _ = lax.scan(step, init, jnp.arange(len(pairs)))
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+def full_attention(q, k, v, sm_scale, causal=True,
+                   kv_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Unblocked reference (small S / decode)."""
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if causal:
+        sq, skv = q.shape[2], k.shape[2]
+        mask = (jnp.arange(sq)[:, None] + (skv - sq)) >= jnp.arange(skv)[None]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    if kv_valid is not None:
+        s = jnp.where(kv_valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

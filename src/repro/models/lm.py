@@ -1,0 +1,411 @@
+"""Unified model builder for all assigned architecture families.
+
+A model is a sequence of *periods* (period = lcm of the attention/MoE
+interleave patterns; 1 for homogeneous stacks, 8 for Jamba).  Per-position
+param subtrees are stacked across periods with a leading "layers" axis and
+the stack runs under ``lax.scan`` — 95-layer models lower to compact HLO.
+
+Families:
+  dense/moe/vlm — decoder-only LM (vlm/audio prepend stub frontend embeds)
+  ssm           — RWKV-6 (time-mix + channel-mix per layer)
+  hybrid        — Jamba (mamba x7 : attn x1, MoE every other layer)
+  encdec        — bidirectional encoder + causal decoder w/ cross attention
+"""
+from __future__ import annotations
+
+import dataclasses
+from math import gcd
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.sparse_kv import SparseKVCache, abstract_cache, freeze_prefix
+from repro.kernels import ops
+from . import module as mod
+from .module import ParamSpec
+from .layers import (rms_norm, norm_spec, embed_specs, embed_apply,
+                     unembed_apply, mlp_specs, mlp_apply)
+from .attention import (attn_specs, attn_apply, attn_decode, DenseKVCache,
+                        cross_attn_decode)
+from .moe import moe_specs, moe_apply
+from .ssm import (mamba_specs, mamba_apply, mamba_decode, mamba_init_state,
+                  rwkv_specs, rwkv_time_mix, rwkv_channel_mix,
+                  rwkv_init_state, rwkv_time_mix_decode,
+                  rwkv_channel_mix_decode)
+
+
+def _lcm(a: int, b: int) -> int:
+    return a * b // gcd(a, b)
+
+
+def period_len(cfg) -> int:
+    p = 1
+    if cfg.family == "hybrid":
+        p = _lcm(p, cfg.attn_every)
+    if cfg.n_experts:
+        p = _lcm(p, cfg.moe_every)
+    return p
+
+
+def layer_kind(cfg, i: int) -> Tuple[str, str]:
+    if cfg.family == "ssm":
+        return ("rwkv", "cmix")
+    mixer = "attn" if cfg.is_attn_layer(i) else "mamba"
+    ffn = "moe" if cfg.is_moe_layer(i) else "mlp"
+    return (mixer, ffn)
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+def _block_specs(cfg, kind: Tuple[str, str], cross: bool = False
+                 ) -> Dict[str, Any]:
+    mixer, ffn = kind
+    if mixer == "rwkv":
+        return {"ln1": norm_spec(cfg), "tmix": rwkv_specs(cfg),
+                "ln2": norm_spec(cfg)}
+    s: Dict[str, Any] = {"ln1": norm_spec(cfg)}
+    s["mixer"] = attn_specs(cfg) if mixer == "attn" else mamba_specs(cfg)
+    if cross:
+        s["ln_cross"] = norm_spec(cfg)
+        s["cross"] = attn_specs(cfg, cross=True)
+    s["ln2"] = norm_spec(cfg)
+    s["ffn"] = moe_specs(cfg) if ffn == "moe" else mlp_specs(cfg)
+    return s
+
+
+def _stack_specs(tree: Any, n: int) -> Any:
+    def one(p: str, s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + tuple(s.shape), s.dtype,
+                         ("layers",) + tuple(s.axes or (None,) * len(s.shape)),
+                         init=s.init, scale=s.scale)
+    return mod._map_with_path(one, tree)
+
+
+def model_specs(cfg) -> Dict[str, Any]:
+    p = period_len(cfg)
+    n_periods = cfg.n_layers // p
+    assert cfg.n_layers % p == 0, (cfg.n_layers, p)
+    kinds = [layer_kind(cfg, j) for j in range(p)]
+    cross = cfg.family == "encdec"
+    period = {f"l{j}": _block_specs(cfg, kinds[j], cross=cross)
+              for j in range(p)}
+    specs: Dict[str, Any] = {
+        "embed": embed_specs(cfg),
+        "blocks": _stack_specs(period, n_periods),
+        "final_norm": norm_spec(cfg),
+    }
+    if cfg.family == "encdec":
+        enc_period = {"l0": _block_specs(cfg, ("attn", "mlp"))}
+        specs["encoder"] = _stack_specs(enc_period, cfg.enc_layers)
+        specs["enc_norm"] = norm_spec(cfg)
+    return specs
+
+
+def abstract_params(cfg):
+    return mod.abstract(model_specs(cfg))
+
+
+def init_params(cfg, key):
+    return mod.initialize(model_specs(cfg), key)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _sublayer(x, p, kind, cfg, ctx, positions, memory, attn_impl,
+              collect_kv: Optional[list] = None):
+    mixer, ffn = kind
+    if mixer == "rwkv":
+        h = rwkv_time_mix(p["tmix"], rms_norm(x, p["ln1"]), cfg, ctx)
+        x = ctx.constrain(x + h, ("batch", "seq", "embed"))
+        h = rwkv_channel_mix(p["tmix"], rms_norm(x, p["ln2"]), cfg)
+        return ctx.constrain(x + h, ("batch", "seq", "embed"))
+
+    h = rms_norm(x, p["ln1"])
+    if mixer == "attn":
+        h = attn_apply(p["mixer"], h, cfg, ctx, positions,
+                       causal=(memory is None) or None, attn_impl=attn_impl)
+    else:
+        h = mamba_apply(p["mixer"], h, cfg, ctx)
+    x = ctx.constrain(x + h, ("batch", "seq", "embed"))
+    if "cross" in p and memory is not None:
+        h = attn_apply(p["cross"], rms_norm(x, p["ln_cross"]), cfg, ctx,
+                       positions, memory=memory)
+        x = ctx.constrain(x + h, ("batch", "seq", "embed"))
+    h2 = rms_norm(x, p["ln2"])
+    if ffn == "moe":
+        h2 = moe_apply(p["ffn"], h2, cfg, ctx)
+    else:
+        h2 = mlp_apply(p["ffn"], h2, ctx)
+    return ctx.constrain(x + h2, ("batch", "seq", "embed"))
+
+
+def _stack_forward(blocks, x, cfg, ctx, positions, kinds, memory=None,
+                   attn_impl="masked", causal=True):
+    def body(xc, pp):
+        for j, kind in enumerate(kinds):
+            k = kind if causal else ("attn", "mlp")
+            xc = _sublayer(xc, pp[f"l{j}"], k, cfg, ctx, positions,
+                           memory, attn_impl)
+        return xc, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = lax.scan(body, x, blocks)
+    return x
+
+
+def forward_train(params, batch: Dict[str, jax.Array], cfg, ctx,
+                  attn_impl: str = "masked") -> jax.Array:
+    """Returns final hidden states [B, S, d] (logits are computed chunked in
+    the loss to keep the [B,S,V] tensor off the residency list)."""
+    if cfg.family == "encdec":
+        return _encdec_forward(params, batch, cfg, ctx, attn_impl)
+
+    tokens = batch["tokens"]
+    x = embed_apply(params["embed"], tokens, cfg)
+    if cfg.frontend and "frontend_embeds" in batch:
+        fe = batch["frontend_embeds"].astype(x.dtype)
+        x = jnp.concatenate([fe, x], axis=1)
+    x = ctx.constrain(x, ("batch", "seq", "embed"))
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    p = period_len(cfg)
+    kinds = [layer_kind(cfg, j) for j in range(p)]
+    x = _stack_forward(params["blocks"], x, cfg, ctx, positions, kinds,
+                       attn_impl=attn_impl)
+    return rms_norm(x, params["final_norm"])
+
+
+def _encdec_forward(params, batch, cfg, ctx, attn_impl):
+    src = batch["src_embeds"].astype(cfg.cdtype)
+    src = ctx.constrain(src, ("batch", "seq", "embed"))
+    positions_src = jnp.arange(src.shape[1])
+    enc = _stack_forward(params["encoder"], src, cfg, ctx, positions_src,
+                         [("attn", "mlp")], causal=False)
+    enc = rms_norm(enc, params["enc_norm"])
+
+    x = embed_apply(params["embed"], batch["tokens"], cfg)
+    x = ctx.constrain(x, ("batch", "seq", "embed"))
+    positions = jnp.arange(x.shape[1])
+    x = _stack_forward(params["blocks"], x, cfg, ctx, positions,
+                       [("attn", "mlp")], memory=enc, attn_impl=attn_impl)
+    return rms_norm(x, params["final_norm"])
+
+
+def logits_fn(params, hidden: jax.Array, cfg, ctx) -> jax.Array:
+    logits = unembed_apply(params["embed"], hidden, cfg)
+    return ctx.constrain(logits, ("batch", None, "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# prefill: full forward + per-layer state collection (for the serving engine)
+# ---------------------------------------------------------------------------
+
+def _sublayer_prefill(x, p, kind, cfg, ctx, positions, memory):
+    mixer, ffn = kind
+    if mixer == "rwkv":
+        xin1 = rms_norm(x, p["ln1"])
+        h, st = rwkv_time_mix(p["tmix"], xin1, cfg, ctx, return_state=True)
+        x = x + h
+        xin2 = rms_norm(x, p["ln2"])
+        h = rwkv_channel_mix(p["tmix"], xin2, cfg)
+        st = {**st, "cm_x": xin2.astype(jnp.float32)[:, -1]}
+        return x + h, {"state": st}
+
+    h = rms_norm(x, p["ln1"])
+    if mixer == "attn":
+        h, (k, v) = attn_apply(p["mixer"], h, cfg, ctx, positions,
+                               return_kv=True)
+        collected = {"k": k, "v": v}
+    else:
+        h, st = mamba_apply(p["mixer"], h, cfg, ctx, return_state=True)
+        collected = {"state": st}
+    x = x + h
+    if "cross" in p and memory is not None:
+        h = attn_apply(p["cross"], rms_norm(x, p["ln_cross"]), cfg, ctx,
+                       positions, memory=memory)
+        x = x + h
+    h2 = rms_norm(x, p["ln2"])
+    h2 = moe_apply(p["ffn"], h2, cfg, ctx) if ffn == "moe" \
+        else mlp_apply(p["ffn"], h2, ctx)
+    return x + h2, collected
+
+
+def forward_prefill(params, batch, cfg, ctx) -> Tuple[jax.Array, Dict]:
+    """Full forward returning (final hidden, per-layer collected states).
+
+    Collected states are stacked over periods: {"l{j}": {...(P, ...)}}.
+    For encdec, also returns the per-layer cross K/V of the encoder memory.
+    """
+    memory = None
+    if cfg.family == "encdec":
+        src = batch["src_embeds"].astype(cfg.cdtype)
+        pos_s = jnp.arange(src.shape[1])
+        enc = _stack_forward(params["encoder"], src, cfg, ctx, pos_s,
+                             [("attn", "mlp")], causal=False)
+        memory = rms_norm(enc, params["enc_norm"])
+
+    tokens = batch["tokens"]
+    x = embed_apply(params["embed"], tokens, cfg)
+    if cfg.frontend and "frontend_embeds" in batch:
+        x = jnp.concatenate(
+            [batch["frontend_embeds"].astype(x.dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1])
+    p = period_len(cfg)
+    kinds = [layer_kind(cfg, j) for j in range(p)]
+
+    def body(xc, pp):
+        out = {}
+        cross_kv = {}
+        for j, kind in enumerate(kinds):
+            pj = pp[f"l{j}"]
+            xc, out[f"l{j}"] = _sublayer_prefill(
+                xc, pj, kind, cfg, ctx, positions, memory)
+            if "cross" in pj and memory is not None:
+                from .attention import _project_kv
+                ck, cv = _project_kv(pj["cross"], memory, cfg)
+                cross_kv[f"l{j}"] = {"k": ck.transpose(0, 2, 1, 3),
+                                     "v": cv.transpose(0, 2, 1, 3)}
+        return xc, (out, cross_kv)
+
+    x, (collected, cross) = lax.scan(body, x, params["blocks"])
+    hidden = rms_norm(x, params["final_norm"])
+    return hidden, {"layers": collected, "cross": cross,
+                    "len": x.shape[1]}
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, prefix: int, mode: str = "sparse",
+               abstract: bool = False) -> Dict[str, Any]:
+    """Cache pytree for one period position x n_periods (stacked leading dim).
+
+    mode "sparse": the paper's compressed frozen prefix + dense tail.
+    mode "dense":  baseline preallocated cache of size prefix + tail.
+    """
+    p = period_len(cfg)
+    n_periods = cfg.n_layers // p
+    kinds = [layer_kind(cfg, j) for j in range(p)]
+    hkv, hd = cfg.n_kv, cfg.hd
+    dt = cfg.cdtype
+
+    def attn_cache():
+        if mode == "sparse":
+            c = abstract_cache(batch, hkv, prefix, hd,
+                               1.0 - cfg.kv_k_sparsity,
+                               1.0 - cfg.kv_v_sparsity,
+                               tail_size=cfg.kv_tail, dtype=dt)
+            return c
+        s_max = prefix + cfg.kv_tail
+        k = jax.ShapeDtypeStruct((batch, hkv, s_max, hd), dt)
+        return DenseKVCache(k, k, jax.ShapeDtypeStruct((), jnp.int32))
+
+    def leaf_cache(kind):
+        mixer, _ = kind
+        if mixer == "attn":
+            return {"kv": attn_cache()}
+        if mixer == "mamba":
+            st = mamba_init_state(cfg, batch)
+            return {"state": jax.tree_util.tree_map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), st)}
+        st = rwkv_init_state(cfg, batch)
+        return {"state": jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), st)}
+
+    def stack(tree):
+        return jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((n_periods,) + tuple(s.shape),
+                                           s.dtype), tree)
+
+    cache = {"pos": jax.ShapeDtypeStruct((), jnp.int32),
+             "layers": {f"l{j}": stack(leaf_cache(kinds[j]))
+                        for j in range(p)}}
+    if cfg.family == "encdec":
+        # static cross K/V from the encoder (prefill-computed; ideal
+        # candidates for the paper's frozen compressed format)
+        kv = jax.ShapeDtypeStruct((n_periods, batch, hkv, prefix, hd), dt)
+        cache["cross"] = {"k": kv, "v": kv}
+    if abstract:
+        return cache
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype)
+        if not isinstance(s, jax.Array) else s, cache)
+
+
+# ---------------------------------------------------------------------------
+# one-token decode step
+# ---------------------------------------------------------------------------
+
+def _sublayer_decode(x_t, p, cache_j, kind, cfg, ctx, position,
+                     cross_kv=None):
+    mixer, ffn = kind
+    new_cache = dict(cache_j)
+    if mixer == "rwkv":
+        h, st = rwkv_time_mix_decode(p["tmix"], rms_norm(x_t, p["ln1"]),
+                                     cache_j["state"], cfg)
+        x_t = x_t + h
+        h, st = rwkv_channel_mix_decode(p["tmix"], rms_norm(x_t, p["ln2"]),
+                                        st, cfg)
+        new_cache["state"] = st
+        return x_t + h, new_cache
+
+    h = rms_norm(x_t, p["ln1"])
+    if mixer == "attn":
+        h, kv = attn_decode(p["mixer"], h, cache_j["kv"], cfg, ctx, position)
+        new_cache["kv"] = kv
+    else:
+        h, st = mamba_decode(p["mixer"], h, cache_j["state"], cfg)
+        new_cache["state"] = st
+    x_t = x_t + h
+    if "cross" in p and cross_kv is not None:
+        h = cross_attn_decode(p["cross"], rms_norm(x_t, p["ln_cross"]),
+                              cross_kv[0], cross_kv[1], cfg)
+        x_t = x_t + h
+    h2 = rms_norm(x_t, p["ln2"])
+    if ffn == "moe":
+        h2 = moe_apply(p["ffn"], h2[:, None, :], cfg, ctx)[:, 0]
+    else:
+        h2 = mlp_apply(p["ffn"], h2)
+    return x_t + h2, new_cache
+
+
+def forward_decode(params, cache, tokens: jax.Array, cfg, ctx
+                   ) -> Tuple[jax.Array, Any]:
+    """tokens [B, 1] -> (logits [B, V] f32, updated cache)."""
+    b = tokens.shape[0]
+    x_t = embed_apply(params["embed"], tokens[:, 0], cfg)
+    x_t = ctx.constrain(x_t, ("batch", "embed"))
+    position = cache["pos"]
+    pl = period_len(cfg)
+    kinds = [layer_kind(cfg, j) for j in range(pl)]
+    has_cross = cfg.family == "encdec"
+
+    def body(xc, xs):
+        pp, cc, cross = xs
+        new_cc = {}
+        for j, kind in enumerate(kinds):
+            ck = (cross["k"], cross["v"]) if has_cross else None
+            xc, new_cc[f"l{j}"] = _sublayer_decode(
+                xc, pp[f"l{j}"], cc[f"l{j}"], kind, cfg, ctx, position, ck)
+        return xc, new_cc
+
+    n_periods = cfg.n_layers // pl
+    xs = (params["blocks"], cache["layers"],
+          cache["cross"] if has_cross else
+          {"k": jnp.zeros((n_periods, 0)), "v": jnp.zeros((n_periods, 0))})
+    x_t, new_layers = lax.scan(body, x_t, xs)
+    x_t = rms_norm(x_t, params["final_norm"])
+    logits = unembed_apply(params["embed"], x_t, cfg)
+    logits = ctx.constrain(logits, ("batch", "vocab"))
+    new_cache = dict(cache)
+    new_cache["layers"] = new_layers
+    new_cache["pos"] = position + 1
+    return logits, new_cache

@@ -1,0 +1,115 @@
+"""Minimal functional parameter system (no flax in this environment).
+
+Models are described as trees of :class:`ParamSpec` (shape, dtype, logical
+axes, initializer).  One spec tree serves three masters:
+
+* ``initialize``     — real arrays for smoke tests / small training runs;
+* ``abstract``       — ``ShapeDtypeStruct`` leaves for the multi-pod dry-run
+                       (lower + compile with zero allocation);
+* ``partition_specs``— logical-axis names -> ``PartitionSpec`` via a rules
+                       table (see repro.distributed.sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.bfloat16
+    axes: Tuple[Optional[str], ...] = ()
+    init: str = "fan_in"          # fan_in | normal | zeros | ones | embed | small
+    scale: float = 1.0
+
+    def __post_init__(self):
+        if self.axes:
+            assert len(self.axes) == len(self.shape), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _map_with_path(fn: Callable[[str, ParamSpec], Any], tree: Any) -> Any:
+    flat = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_spec)[0]
+    treedef = jax.tree_util.tree_structure(tree, is_leaf=is_spec)
+    out = []
+    for path, leaf in flat:
+        p = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out.append(fn(p, leaf) if is_spec(leaf) else leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract(tree: Any) -> Any:
+    return _map_with_path(
+        lambda p, s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree)
+
+
+def _init_leaf(path: str, spec: ParamSpec, root_key: jax.Array) -> jax.Array:
+    seed = int.from_bytes(hashlib.md5(path.encode()).digest()[:4], "little")
+    key = jax.random.fold_in(root_key, seed)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "embed":
+        return (jax.random.normal(key, spec.shape, jnp.float32)
+                * 0.02 * spec.scale).astype(spec.dtype)
+    if spec.init == "small":
+        return (jax.random.normal(key, spec.shape, jnp.float32)
+                * 1e-2 * spec.scale).astype(spec.dtype)
+    if spec.init == "normal":
+        return (jax.random.normal(key, spec.shape, jnp.float32)
+                * spec.scale).astype(spec.dtype)
+    # fan_in: variance-scaling on the second-to-last dim (matmul RHS [K, N])
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    std = spec.scale / max(fan_in, 1) ** 0.5
+    return (jax.random.normal(key, spec.shape, jnp.float32)
+            * std).astype(spec.dtype)
+
+
+def initialize(tree: Any, key: jax.Array) -> Any:
+    return _map_with_path(lambda p, s: _init_leaf(p, s, key), tree)
+
+
+def partition_specs(tree: Any, rules: Dict[str, Any]) -> Any:
+    """Logical axes -> PartitionSpec; first use of a mesh axis wins per leaf."""
+    def one(path: str, spec: ParamSpec) -> PartitionSpec:
+        used = set()
+        out = []
+        for ax in (spec.axes or (None,) * len(spec.shape)):
+            mesh_ax = rules.get(ax) if ax is not None else None
+            if mesh_ax is None:
+                out.append(None)
+                continue
+            flat_ax = tuple(mesh_ax) if isinstance(mesh_ax, (tuple, list)) \
+                else (mesh_ax,)
+            keep = tuple(a for a in flat_ax if a not in used)
+            used.update(keep)
+            if not keep:
+                out.append(None)
+            else:
+                out.append(keep if len(keep) > 1 else keep[0])
+        return PartitionSpec(*out)
+    return _map_with_path(one, tree)
+
+
+def param_count(tree: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_spec)
+    total = 0
+    for l in leaves:
+        if is_spec(l):
+            n = 1
+            for d in l.shape:
+                n *= d
+            total += n
+        elif hasattr(l, "size"):
+            total += l.size
+    return total

@@ -1,0 +1,3 @@
+from .adamw import (OptConfig, lr_schedule, init_opt_state,
+                    abstract_opt_state, adamw_step, global_norm)
+from .grad_compress import init_error_state, compress_and_reduce

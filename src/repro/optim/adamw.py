@@ -1,0 +1,111 @@
+"""AdamW + LR schedules + global-norm clipping, from scratch (no optax here).
+
+Mixed-precision layout: model params live in bf16; the optimizer state holds
+the fp32 master copy plus fp32 first/second moments.  With ``zero1`` the
+whole optimizer state shards over the data axis (see
+repro.distributed.sharding.zero1_specs), which is what makes 67B-class
+training fit a 256-chip pod (EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    end_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_schedule(optc: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = optc.peak_lr * step / max(optc.warmup_steps, 1)
+    prog = jnp.clip((step - optc.warmup_steps)
+                    / max(optc.decay_steps - optc.warmup_steps, 1), 0.0, 1.0)
+    cos = optc.peak_lr * (optc.end_lr_frac + (1 - optc.end_lr_frac)
+                          * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < optc.warmup_steps, warm, cos)
+
+
+def init_opt_state(params: Any) -> Dict[str, Any]:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree_util.tree_map(f32, params),
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+    }
+
+
+def abstract_opt_state(params: Any) -> Dict[str, Any]:
+    sds = lambda p, dt: jax.ShapeDtypeStruct(p.shape, dt)
+    return {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "master": jax.tree_util.tree_map(
+            lambda p: sds(p, jnp.float32), params),
+        "m": jax.tree_util.tree_map(lambda p: sds(p, jnp.float32), params),
+        "v": jax.tree_util.tree_map(lambda p: sds(p, jnp.float32), params),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_step(grads: Any, opt_state: Dict[str, Any], optc: OptConfig,
+               params_like: Any = None) -> Tuple[Any, Dict[str, Any], Dict]:
+    """Returns (new params cast to their original per-leaf dtypes, new opt
+    state, metrics).  ``params_like`` supplies the dtypes (norm scales stay
+    fp32 while matmul weights stay bf16)."""
+    step = opt_state["step"] + 1
+    lr = lr_schedule(optc, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, optc.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if optc.clip_norm else 1.0
+
+    b1, b2 = optc.b1, optc.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + optc.eps)
+        p_new = p - lr * (update + optc.weight_decay * p)
+        return m, v, p_new
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_p = treedef.flatten_up_to(opt_state["master"])
+    new_m, new_v, new_p = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        m2, v2, p2 = upd(g, m, v, p)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_p.append(p2)
+    unf = treedef.unflatten
+    new_state = {"step": step, "master": unf(new_p), "m": unf(new_m),
+                 "v": unf(new_v)}
+    if params_like is not None:
+        params = jax.tree_util.tree_map(
+            lambda m, p: m.astype(p.dtype), new_state["master"], params_like)
+    else:
+        params = jax.tree_util.tree_map(lambda p: p.astype(jnp.bfloat16),
+                                        new_state["master"])
+    return params, new_state, {"lr": lr, "grad_norm": gnorm}

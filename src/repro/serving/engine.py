@@ -1,0 +1,161 @@
+"""Serving engine: prefill -> freeze (compress) -> token-by-token decode.
+
+This is the paper's §6.2 serving design, end to end:
+
+1. ``prefill`` runs the full forward over the prompt and collects every
+   layer's K/V (or recurrent state);
+2. the prefill cache is magnitude-pruned and packed into the frozen
+   compressed prefix (offline preprocessing, exactly like the paper's
+   weight packing — "not suitable for dynamic KV values but remains
+   effective for cached prompts");
+3. ``generate`` decodes one token at a time against the compressed prefix +
+   dense tail, optionally refreezing when the tail fills.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse_kv import SparseKVCache, freeze_prefix
+from repro.distributed import NULL_CTX
+from repro.models import lm
+from repro.models.attention import DenseKVCache
+
+
+class Engine:
+    def __init__(self, params, cfg, ctx=NULL_CTX, kv_mode: str = "sparse"):
+        self.params = params
+        self.cfg = cfg
+        self.ctx = ctx
+        self.kv_mode = kv_mode
+        self._decode = jax.jit(
+            lambda p, c, t: lm.forward_decode(p, c, t, cfg, ctx))
+        self._prefill = jax.jit(
+            lambda p, b: lm.forward_prefill(p, b, cfg, ctx))
+
+    # ------------------------------------------------------------------
+    def prefill(self, batch: Dict[str, jax.Array]):
+        cfg = self.cfg
+        hidden, collected = self._prefill(self.params, batch)
+        p = lm.period_len(cfg)
+        kinds = [lm.layer_kind(cfg, j) for j in range(p)]
+        layers: Dict[str, Any] = {}
+        for j, kind in enumerate(kinds):
+            got = collected["layers"][f"l{j}"]
+            if kind[0] == "attn":
+                layers[f"l{j}"] = {"kv": self._build_kv(got["k"], got["v"])}
+            else:
+                layers[f"l{j}"] = {"state": got["state"]}
+        cache = {"pos": jnp.asarray(collected["len"], jnp.int32),
+                 "layers": layers}
+        if cfg.family == "encdec":
+            cross = collected["cross"]["l0"]
+            cache["cross"] = {"k": cross["k"], "v": cross["v"]}
+        logits = lm.logits_fn(self.params, hidden[:, -1:], cfg, self.ctx)
+        return cache, logits[:, 0]
+
+    def _build_kv(self, k_stack, v_stack):
+        """k/v [P, B, Hkv, S, hd] -> per-period cache, host-packed.
+
+        Pass 1 finds the max per-block nnz across layers (global magnitude
+        pruning gives ragged block occupancy); pass 2 packs every layer at
+        that common capacity so the stacked cache has static shapes — the
+        stacked analogue of the paper's fixed offline capacity."""
+        cfg = self.cfg
+        n_periods = k_stack.shape[0]
+        per = []
+        cap_k = cap_v = None
+        if self.kv_mode == "sparse" and n_periods > 1:
+            probes = [freeze_prefix(
+                k_stack[i], v_stack[i], cfg.kv_k_sparsity,
+                cfg.kv_v_sparsity, tail_size=cfg.kv_tail,
+                bs=min(128, k_stack.shape[3])) for i in range(n_periods)]
+            cap_k = max(p.k_sp.capacity for p in probes)
+            cap_v = max(p.v_sp.capacity for p in probes)
+        for i in range(n_periods):
+            k, v = k_stack[i], v_stack[i]
+            s = k.shape[2]
+            if self.kv_mode == "sparse":
+                bs = min(128, s)
+                per.append(freeze_prefix(
+                    k, v, cfg.kv_k_sparsity, cfg.kv_v_sparsity,
+                    tail_size=cfg.kv_tail, bs=bs,
+                    capacity_k=cap_k, capacity_v=cap_v))
+            else:
+                pad = cfg.kv_tail
+                kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                per.append(DenseKVCache(kp, vp,
+                                        jnp.asarray(s, jnp.int32)))
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per)
+
+    # ------------------------------------------------------------------
+    def generate(self, batch: Dict[str, jax.Array], steps: int,
+                 greedy: bool = True, rng: Optional[jax.Array] = None):
+        cache, logits = self.prefill(batch)
+        b = batch["tokens"].shape[0]
+        toks = []
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for i in range(steps):
+            toks.append(tok)
+            if self.kv_mode == "sparse":
+                cache = self._maybe_refreeze(cache)
+            logits, cache = self._decode(self.params, cache, tok[:, None])
+            if greedy:
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                rng, sub = jax.random.split(rng)
+                tok = jax.random.categorical(sub, logits).astype(jnp.int32)
+        toks.append(tok)
+        return jnp.stack(toks, axis=1), cache
+
+    # ------------------------------------------------------------------
+    def _maybe_refreeze(self, cache):
+        """Fold full tails back into the compressed prefix (paper §6.2's
+        amortized step).  Host-side, between jitted decode steps; note the
+        prefix growth changes cache shapes -> one re-trace per refreeze."""
+        from repro.core.sparse_kv import refreeze
+        cfg = self.cfg
+        layers = dict(cache["layers"])
+        changed = False
+        for name, leaf in layers.items():
+            if "kv" not in leaf:
+                continue
+            kv = leaf["kv"]
+            t = kv.k_tail.shape[3]          # stacked [P, B, Hkv, T, D]
+            if int(kv.tail_len[0]) < t:
+                continue
+            n_periods = kv.k_tail.shape[0]
+            per = [refreeze(jax.tree_util.tree_map(lambda a: a[i], kv),
+                            cfg.kv_k_sparsity, cfg.kv_v_sparsity)
+                   for i in range(n_periods)]
+            cap_k = max(p.k_sp.capacity for p in per)
+            cap_v = max(p.v_sp.capacity for p in per)
+            if any(p.k_sp.capacity != cap_k or p.v_sp.capacity != cap_v
+                   for p in per):
+                # re-pack at a common capacity so the stack is rectangular
+                per = [self._repack(p, cap_k, cap_v) for p in per]
+            layers[name] = {**leaf, "kv": jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *per)}
+            changed = True
+        if not changed:
+            return cache
+        return {**cache, "layers": layers}
+
+    def _repack(self, kvc, cap_k, cap_v):
+        from repro.core.sparse_kv import SparseKVCache
+
+        def grow(sw, cap):
+            pad = cap - sw.capacity
+            if pad <= 0:
+                return sw
+            from repro.core.sparse_format import BlockSparseWeight
+            vals = jnp.pad(sw.values,
+                           [(0, 0)] * (sw.values.ndim - 1) + [(0, pad)])
+            return BlockSparseWeight(sw.bitmap, vals, sw.scale, sw.shape,
+                                     sw.block, sw.packed4)
+        return SparseKVCache(grow(kvc.k_sp, cap_k), grow(kvc.v_sp, cap_v),
+                             kvc.k_tail, kvc.v_tail, kvc.tail_len)

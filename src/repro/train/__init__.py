@@ -1,0 +1,1 @@
+from .step import (loss_fn, chunked_ce_loss, make_train_step, make_compressed_grads, init_dp_error_state)

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Smoke tests and benches must see 1 device (the dry-run subprocesses set
+# their own XLA_FLAGS before importing jax) — so do NOT set device-count
+# flags here.  A couple of sharding tests spawn subprocesses with their own
+# flags instead.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,114 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + no NaNs.  One test per assigned architecture."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, PAPER_ARCH, get_config, applicable_shapes
+from repro.distributed import NULL_CTX
+from repro.models import lm
+from repro.optim import OptConfig, init_opt_state
+from repro.train import make_train_step
+
+
+def make_batch(cfg, b=2, s=32):
+    batch = {"tokens": jnp.ones((b, s), jnp.int32),
+             "labels": jnp.ones((b, s), jnp.int32),
+             "mask": jnp.ones((b, s), jnp.float32)}
+    if cfg.family == "encdec":
+        batch["src_embeds"] = jnp.zeros((b, s, cfg.d_model), jnp.float32)
+    if cfg.frontend:
+        batch["frontend_embeds"] = jnp.zeros(
+            (b, cfg.frontend_tokens, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS + [PAPER_ARCH])
+def test_forward_shapes_no_nan(arch):
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    h = lm.forward_train(params, batch, cfg, NULL_CTX)
+    logits = lm.logits_fn(params, h, cfg, NULL_CTX)
+    assert logits.shape[-1] == cfg.vocab
+    assert not np.any(np.isnan(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch):
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(1))
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(cfg, NULL_CTX, OptConfig(peak_lr=1e-3)))
+    params2, opt2, mets = step(params, opt, make_batch(cfg))
+    assert np.isfinite(float(mets["loss"]))
+    assert int(opt2["step"]) == 1
+    # fp32 master weights actually moved (bf16 params may round to equal)
+    l1 = jax.tree_util.tree_leaves(opt["master"])[0]
+    l2 = jax.tree_util.tree_leaves(opt2["master"])[0]
+    assert np.abs(np.asarray(l1) - np.asarray(l2)).max() > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(2))
+    cache = lm.init_cache(cfg, 2, 128, mode="sparse")
+    cache["pos"] = jnp.asarray(128, jnp.int32)
+    logits, cache2 = lm.forward_decode(params, cache,
+                                       jnp.ones((2, 1), jnp.int32),
+                                       cfg, NULL_CTX)
+    assert logits.shape == (2, cfg.vocab)
+    assert not np.any(np.isnan(np.asarray(logits)))
+    assert int(cache2["pos"]) == 129
+
+
+def test_applicable_shapes_per_family():
+    longs = [a for a in ARCH_IDS
+             if "long_500k" in applicable_shapes(get_config(a))]
+    assert set(longs) == {"rwkv6-7b", "jamba-1.5-large-398b"}
+    # 40 assigned cells = 10 archs x 4 shapes; 32 runnable + 8 noted skips
+    total = sum(len(applicable_shapes(get_config(a))) for a in ARCH_IDS)
+    assert total == 32
+
+
+def test_full_configs_match_assignment():
+    c = get_config("deepseek-67b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab) == \
+        (95, 8192, 64, 8, 22016, 102400)
+    c = get_config("jamba-1.5-large-398b")
+    assert (c.n_layers, c.n_experts, c.top_k, c.attn_every) == (72, 16, 2, 8)
+    c = get_config("qwen3-0.6b")
+    assert c.qk_norm and (c.n_layers, c.d_model, c.vocab) == (28, 1024, 151936)
+    c = get_config("rwkv6-7b")
+    assert c.family == "ssm" and c.n_kv == 0 and c.d_ff == 14336
+    c = get_config("phi3.5-moe-42b-a6.6b")
+    assert (c.n_experts, c.top_k, c.d_ff) == (16, 2, 6400)
+    c = get_config("llama4-scout-17b-a16e")
+    assert c.top_k == 1 and c.shared_expert
+    c = get_config("seamless-m4t-medium")
+    assert c.family == "encdec" and c.vocab == 256206 and c.enc_layers == 12
+    c = get_config("internvl2-1b")
+    assert c.family == "vlm" and (c.d_model, c.n_heads, c.n_kv) == (896, 14, 2)
+    c = get_config("phi3-mini-3.8b")
+    assert c.n_kv == 32 and c.vocab == 32064
+    c = get_config("llama3.2-3b")
+    assert (c.n_layers, c.d_model, c.d_ff) == (28, 3072, 8192)
+
+
+def test_param_counts_plausible():
+    """Full-config param counts should be near the advertised sizes."""
+    from repro.models.module import param_count
+    approx = {
+        "qwen3-0.6b": (0.4e9, 0.9e9),
+        "llama3.2-3b": (2.6e9, 4.2e9),
+        "deepseek-67b": (60e9, 72e9),
+        "phi3-mini-3.8b": (3.3e9, 4.5e9),
+        "rwkv6-7b": (6e9, 9e9),
+        "phi3.5-moe-42b-a6.6b": (39e9, 46e9),
+        "jamba-1.5-large-398b": (330e9, 430e9),
+    }
+    for arch, (lo, hi) in approx.items():
+        n = param_count(lm.model_specs(get_config(arch)))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"

@@ -1,0 +1,56 @@
+"""Multi-pod dry-run smoke: one (arch x shape) cell lowers + compiles on
+the production meshes inside a 512-host-device subprocess, and the roofline
+pipeline consumes the artifacts."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run_dryrun(args, timeout=540):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=ROOT)
+    assert out.returncode == 0, out.stderr[-2000:] + out.stdout[-2000:]
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_single_pod_cell(tmp_path):
+    out = run_dryrun(["--arch", "qwen3-0.6b", "--shape", "decode_32k",
+                      "--out", str(tmp_path)])
+    rec = json.load(open(os.path.join(
+        str(tmp_path), "qwen3-0.6b_decode_32k_16x16_paper.json")))
+    assert rec["n_devices"] == 256
+    assert rec["flops"] > 0 and rec["bytes_accessed"] > 0
+    assert rec["memory"]["argument_size_in_bytes"] < 16e9   # fits HBM
+    assert rec["collective_bytes"]["total"] > 0
+
+
+@pytest.mark.slow
+def test_multi_pod_cell(tmp_path):
+    out = run_dryrun(["--arch", "qwen3-0.6b", "--shape", "decode_32k",
+                      "--multipod", "--out", str(tmp_path)])
+    rec = json.load(open(os.path.join(
+        str(tmp_path), "qwen3-0.6b_decode_32k_2x16x16_paper.json")))
+    assert rec["n_devices"] == 512
+
+
+def test_roofline_pipeline_on_recorded_artifacts():
+    """The committed sweep artifacts combine into a full table."""
+    dr = os.path.join(ROOT, "experiments", "dryrun")
+    if not os.path.isdir(dr):
+        pytest.skip("no recorded sweep artifacts")
+    sys.path.insert(0, ROOT)
+    from benchmarks.roofline import table
+    t = table(dryrun_dir=dr,
+              probe_dir=os.path.join(ROOT, "experiments", "probes"))
+    assert "deepseek-67b" in t and "long_500k" in t
+    assert "(missing)" not in t

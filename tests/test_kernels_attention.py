@@ -1,0 +1,106 @@
+"""Sparse-KV flash-decode kernel vs oracle + flash attention paths."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import freeze_prefix, append_token
+from repro.kernels import ops, ref
+from repro.models.flash import blocked_attention, full_attention
+
+
+def rand(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).normal(
+        size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,d", [
+    (1, 4, 4, 128, 64),      # MHA
+    (2, 8, 2, 256, 64),      # GQA g=4
+    (2, 8, 8, 128, 128),
+])
+@pytest.mark.parametrize("ks,vs", [(0.0, 0.0), (0.3, 0.5)])
+def test_sparse_decode_attention_sweep(b, hq, hkv, s, d, ks, vs):
+    k = rand((b, hkv, s, d), 1)
+    v = rand((b, hkv, s, d), 2)
+    q = rand((b, hq, d), 3)
+    cache = freeze_prefix(k, v, ks, vs, tail_size=32, bs=min(128, s))
+    sm = 1.0 / d ** 0.5
+    o_ref = ref.sparse_decode_attention_ref(
+        q, cache.k_sp, cache.v_sp, sm, cache.k_tail, cache.v_tail,
+        cache.tail_len)
+    with ops.backend("interpret"):
+        o_pl = ops.sparse_decode_attention(
+            q, cache.k_sp, cache.v_sp, hkv, sm, cache.k_tail, cache.v_tail,
+            cache.tail_len)
+    np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_zero_sparsity_matches_dense_attention():
+    """ks=vs=0: the compressed path must equal exact dense attention."""
+    b, hq, hkv, s, d = 2, 8, 4, 256, 64
+    k = rand((b, hkv, s, d), 4)
+    v = rand((b, hkv, s, d), 5)
+    q = rand((b, hq, d), 6)
+    cache = freeze_prefix(k, v, 0.0, 0.0, tail_size=16, bs=128)
+    sm = 1.0 / d ** 0.5
+    with ops.backend("interpret"):
+        o = ops.sparse_decode_attention(q, cache.k_sp, cache.v_sp, hkv, sm,
+                                        cache.k_tail, cache.v_tail,
+                                        cache.tail_len)
+    g = hq // hkv
+    o_dense, _ = ref.attn_partial_ref(q, jnp.repeat(k, g, 1),
+                                      jnp.repeat(v, g, 1), sm)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tail_tokens_participate():
+    b, hq, hkv, s, d = 1, 4, 4, 128, 64
+    k = rand((b, hkv, s, d), 7)
+    v = rand((b, hkv, s, d), 8)
+    q = rand((b, hq, d), 9)
+    cache = freeze_prefix(k, v, 0.0, 0.0, tail_size=8, bs=128)
+    kn, vn = rand((b, hkv, d), 10) * 5, rand((b, hkv, d), 11) * 5
+    cache2 = append_token(cache, kn, vn)
+    sm = 1.0 / d ** 0.5
+    with ops.backend("interpret"):
+        o1 = ops.sparse_decode_attention(q, cache.k_sp, cache.v_sp, hkv, sm,
+                                         cache.k_tail, cache.v_tail,
+                                         cache.tail_len)
+        o2 = ops.sparse_decode_attention(q, cache2.k_sp, cache2.v_sp, hkv,
+                                         sm, cache2.k_tail, cache2.v_tail,
+                                         cache2.tail_len)
+    # exact reference with the appended token
+    kk = jnp.concatenate([k, kn[:, :, None]], axis=2)
+    vv = jnp.concatenate([v, vn[:, :, None]], axis=2)
+    o_ref, _ = ref.attn_partial_ref(q, kk, vv, sm)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(o_ref),
+                               rtol=1e-4, atol=1e-4)
+    assert np.abs(np.asarray(o1) - np.asarray(o2)).max() > 1e-3
+
+
+@pytest.mark.parametrize("s,skv", [(512, 512), (1024, 1024)])
+@pytest.mark.parametrize("impl", ["masked", "triangular"])
+def test_blocked_attention_matches_full(s, skv, impl):
+    b, h, d = 1, 2, 64
+    q, k, v = rand((b, h, s, d), 1), rand((b, h, skv, d), 2), \
+        rand((b, h, skv, d), 3)
+    sm = 1.0 / d ** 0.5
+    o1 = blocked_attention(q, k, v, sm, causal=True, bq=256, bkv=256,
+                           impl=impl)
+    o2 = full_attention(q, k, v, sm, causal=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_blocked_attention_noncausal():
+    b, h, s, d = 1, 2, 512, 64
+    q, k, v = rand((b, h, s, d), 4), rand((b, h, s, d), 5), \
+        rand((b, h, s, d), 6)
+    sm = 1.0 / d ** 0.5
+    o1 = blocked_attention(q, k, v, sm, causal=False, bq=128, bkv=128)
+    o2 = full_attention(q, k, v, sm, causal=False)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-4, atol=1e-4)

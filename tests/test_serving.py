@@ -1,0 +1,134 @@
+"""Serving-path correctness: the frozen-compressed-cache decode must agree
+with teacher-forced full forward at zero sparsity, and degrade gracefully at
+the paper's (30% K / 50% V) setting."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.distributed import NULL_CTX
+from repro.models import lm
+from repro.serving import Engine
+
+
+def _params_and_prompt(arch, seed=0, b=2, s=64):
+    cfg = get_config(arch).reduced()
+    cfg = dataclasses.replace(cfg, kv_k_sparsity=0.0, kv_v_sparsity=0.0)
+    params = lm.init_params(cfg, jax.random.PRNGKey(seed))
+    toks = jnp.asarray(
+        np.random.default_rng(seed).integers(0, cfg.vocab, (b, s)),
+        jnp.int32)
+    return cfg, params, toks
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "rwkv6-7b",
+                                  "jamba-1.5-large-398b"])
+def test_decode_matches_teacher_forcing(arch):
+    """prefill+decode(token t) logits == full forward logits at position t."""
+    cfg, params, toks = _params_and_prompt(arch)
+    eng = Engine(params, cfg, kv_mode="sparse")
+    cache, logits_prefill = eng.prefill({"tokens": toks})
+
+    # teacher-forced: full forward over the same prompt
+    h = lm.forward_train(params, {"tokens": toks}, cfg, NULL_CTX)
+    logits_tf = lm.logits_fn(params, h, cfg, NULL_CTX)
+    np.testing.assert_allclose(np.asarray(logits_prefill),
+                               np.asarray(logits_tf[:, -1]),
+                               rtol=2e-2, atol=2e-2)
+
+    # decode the true next token and compare with teacher forcing at s+1
+    nxt = toks[:, -1:]
+    toks2 = jnp.concatenate([toks, nxt], axis=1)
+    h2 = lm.forward_train(params, {"tokens": toks2}, cfg, NULL_CTX)
+    logits_tf2 = lm.logits_fn(params, h2, cfg, NULL_CTX)[:, -1]
+    logits_dec, _ = eng._decode(params, cache, nxt)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_tf2),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_sparse_vs_dense_cache_agree_at_zero_sparsity():
+    """Same math up to bf16 accumulation order (the sparse path contracts
+    the cache in bf16 with f32 accumulation; the dense path upcasts)."""
+    cfg, params, toks = _params_and_prompt("qwen3-0.6b", seed=1)
+    e_sparse = Engine(params, cfg, kv_mode="sparse")
+    e_dense = Engine(params, cfg, kv_mode="dense")
+    cs, ls = e_sparse.prefill({"tokens": toks})
+    cd, ld = e_dense.prefill({"tokens": toks})
+    np.testing.assert_allclose(np.asarray(ls), np.asarray(ld),
+                               rtol=1e-3, atol=1e-3)
+    l1, _ = e_sparse._decode(params, cs, toks[:, -1:])
+    l2, _ = e_dense._decode(params, cd, toks[:, -1:])
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=5e-2, atol=5e-2)
+    assert (np.asarray(l1).argmax(-1) == np.asarray(l2).argmax(-1)).all()
+
+
+def test_paper_kv_sparsity_small_logit_drift():
+    """At 30%/50% KV sparsity the decode logits stay close to dense (the
+    paper's <1% accuracy-loss regime, measured here as logit agreement)."""
+    cfg = get_config("llama3-8b").reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(2))
+    toks = jnp.asarray(np.random.default_rng(2).integers(
+        0, cfg.vocab, (2, 64)), jnp.int32)
+
+    dense_cfg = dataclasses.replace(cfg, kv_k_sparsity=0.0,
+                                    kv_v_sparsity=0.0)
+    sp_cfg = dataclasses.replace(cfg, kv_k_sparsity=0.3, kv_v_sparsity=0.5)
+    e_d = Engine(params, dense_cfg, kv_mode="sparse")
+    e_s = Engine(params, sp_cfg, kv_mode="sparse")
+    cache_d, _ = e_d.prefill({"tokens": toks})
+    cache_s, _ = e_s.prefill({"tokens": toks})
+    nxt = toks[:, -1:]
+    ld, _ = e_d._decode(params, cache_d, nxt)
+    ls, _ = e_s._decode(params, cache_s, nxt)
+    ld, ls = np.asarray(ld), np.asarray(ls)
+    cos = (ld * ls).sum() / (np.linalg.norm(ld) * np.linalg.norm(ls))
+    # Random-init KV is worst-case for magnitude pruning; the paper's <1%
+    # accuracy claim (trained models) is reproduced in benchmarks/bench_kv.
+    assert cos > 0.85, f"KV-sparse logits diverged: cos={cos}"
+
+
+def test_sparse_weights_zero_sparsity_exact():
+    """convert_to_sparse at sparsity=0 must be numerically identical."""
+    import dataclasses
+    from repro.distributed.convert_plan import convert_concrete
+    cfg = get_config("qwen3-0.6b").reduced()
+    cfg0 = dataclasses.replace(cfg, sparsity=0.0)
+    params = lm.init_params(cfg0, jax.random.PRNGKey(3))
+    sp = convert_concrete(params, lm.model_specs(cfg0), cfg0, NULL_CTX)
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32)}
+    h1 = lm.forward_train(params, batch, cfg0, NULL_CTX)
+    h2 = lm.forward_train(sp, batch, cfg0, NULL_CTX)
+    np.testing.assert_allclose(np.asarray(h1, np.float32),
+                               np.asarray(h2, np.float32),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_int8_sparse_weights_close():
+    import dataclasses
+    from repro.distributed.convert_plan import convert_concrete
+    cfg = get_config("qwen3-0.6b").reduced()
+    cfg = dataclasses.replace(cfg, sparsity=0.5)
+    params = lm.init_params(cfg, jax.random.PRNGKey(4))
+    sp_bf16 = convert_concrete(params, lm.model_specs(cfg), cfg, NULL_CTX)
+    sp_int8 = convert_concrete(params, lm.model_specs(cfg), cfg, NULL_CTX,
+                               mode="int8")
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32)}
+    h1 = np.asarray(lm.forward_train(sp_bf16, batch, cfg, NULL_CTX),
+                    np.float32)
+    h2 = np.asarray(lm.forward_train(sp_int8, batch, cfg, NULL_CTX),
+                    np.float32)
+    rel = np.abs(h1 - h2).mean() / (np.abs(h1).mean() + 1e-9)
+    assert rel < 0.1, rel
+
+
+def test_generate_multi_step_cache_consistency():
+    cfg, params, toks = _params_and_prompt("qwen3-0.6b", seed=5, s=32)
+    eng = Engine(params, cfg, kv_mode="sparse")
+    out, cache = eng.generate({"tokens": toks}, steps=8)
+    assert out.shape == (2, 9)
+    assert int(cache["pos"]) == 32 + 8

@@ -1,0 +1,127 @@
+"""Multi-device tests (8 host devices in subprocesses): sharded training
+equivalence, sparse decode under a mesh, compressed-DP gradients, elastic
+checkpoint restore, and spec-derivation units."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed import ShardCtx, default_rules, tree_param_specs
+from repro.distributed.sharding import zero1_specs
+from repro.launch.train import train_loop
+from repro.data import DataConfig
+from repro.models import lm
+from repro.models import module as mod
+
+WORKER = os.path.join(os.path.dirname(__file__), "workers",
+                      "sharded_train_worker.py")
+
+
+def run_worker(which, timeout=600):
+    out = subprocess.run([sys.executable, WORKER, which],
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_sharded_train_matches_single_device():
+    import dataclasses
+    cfg = dataclasses.replace(get_config("qwen3-0.6b").reduced(),
+                              param_dtype="float32",
+                              compute_dtype="float32")
+    dc = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8)
+    from repro.optim import OptConfig
+    _, _, single = train_loop(
+        cfg, 4, dc, optc=OptConfig(peak_lr=1e-3, warmup_steps=1,
+                                   decay_steps=4))
+    sharded = run_worker("train")["losses"]
+    np.testing.assert_allclose(single, sharded, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.slow
+def test_sparse_decode_under_mesh():
+    rec = run_worker("decode_sparse")
+    assert rec["ok"] and rec["shape"][0] == 2
+
+
+@pytest.mark.slow
+def test_compressed_dp_gradients():
+    rec = run_worker("compressed")
+    assert abs(rec["loss_c"] - rec["loss_r"]) < 1e-3
+    assert rec["rel"] < 0.05           # bf16-compressed grads ~= fp32 grads
+    assert 0 < rec["err_mag"] < 1e-1   # error feedback captured residuals
+
+
+@pytest.mark.slow
+def test_elastic_restore_different_mesh():
+    rec = run_worker("elastic")
+    assert np.isfinite(rec["loss_after"])
+    assert rec["loss_after"] < rec["loss_before"] + 0.5
+
+
+# ---------------------------------------------------------------------------
+# sharding-spec derivation units (no devices needed)
+# ---------------------------------------------------------------------------
+
+class FakeMesh:
+    shape = {"data": 16, "model": 16}
+
+
+def _ctx():
+    return ShardCtx(FakeMesh(), default_rules(False, get_config("llama3-8b")))
+
+
+def test_spec_divisibility_fallback():
+    ctx = _ctx()
+    # kv_heads=8 can't shard over model=16 -> None
+    assert ctx.spec(("batch", "kv_heads"), (128, 8)) == P("data", None)
+    assert ctx.spec(("batch", "heads"), (128, 32)) == P("data", "model")
+
+
+def test_spec_duplicate_axis_first_wins():
+    ctx = _ctx()
+    s = ctx.spec(("batch", "ctx", None), (256, 4096, 64))
+    # "ctx" wants (data, model) but data already used by batch
+    assert s == P("data", "model", None)
+
+
+def test_param_specs_tp_axes():
+    cfg = get_config("llama3-8b")
+    ctx = _ctx()
+    specs = lm.model_specs(cfg)
+    params = mod.abstract(specs)
+    ps = tree_param_specs(ctx, specs, params)
+    wq = ps["blocks"]["l0"]["mixer"]["wq"]
+    assert wq == P(None, None, "model")          # (layers, embed, heads)
+    wdown = ps["blocks"]["l0"]["ffn"]["w_down"]
+    assert wdown == P(None, "model", None)       # (layers, ffn, embed)
+
+
+def test_zero1_adds_dp_dim():
+    cfg = get_config("llama3-8b")
+    ctx = _ctx()
+    specs = lm.model_specs(cfg)
+    params = mod.abstract(specs)
+    ps = tree_param_specs(ctx, specs, params)
+    z = zero1_specs(ps, params, cfg, ctx)
+    wq = z["blocks"]["l0"]["mixer"]["wq"]        # (32, 4096, 4096)
+    assert "data" in jax.tree_util.tree_leaves([list(wq)])  # dp somewhere
+    assert wq == P("data", None, "model") or wq == P(None, "data", "model")
+
+
+def test_fsdp_rules_shard_embed_axis():
+    cfg = get_config("deepseek-67b")  # fsdp=True
+    ctx = ShardCtx(FakeMesh(), default_rules(False, cfg))
+    specs = lm.model_specs(cfg)
+    params = mod.abstract(specs)
+    ps = tree_param_specs(ctx, specs, params)
+    wq = ps["blocks"]["l0"]["mixer"]["wq"]       # (layers, embed, heads)
+    assert wq == P(None, "data", "model")

@@ -1,0 +1,154 @@
+"""Sparse format: pack/unpack round-trips, bitmaps, property tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (pack, unpack, pack_bits, unpack_bits, make_mask,
+                        prune_global, prune_balanced, prune_wanda,
+                        quantize_weight_int8, packed_spec)
+from repro.core.sparse_format import balanced_capacity
+
+
+def rand(shape, seed=0, dtype=np.float32):
+    return jnp.asarray(np.random.default_rng(seed).normal(
+        size=shape).astype(dtype))
+
+
+@pytest.mark.parametrize("shape,block", [
+    ((128, 128), (128, 128)),
+    ((256, 384), (128, 128)),
+    ((300, 200), (128, 128)),      # non-multiple -> padding
+    ((512, 256), (256, 128)),
+    ((64, 96), (32, 32)),
+])
+@pytest.mark.parametrize("sparsity", [0.0, 0.3, 0.5, 0.9])
+def test_pack_unpack_roundtrip(shape, block, sparsity):
+    w = rand(shape)
+    mask = make_mask(w, sparsity, "balanced", block)
+    sw = pack(w, mask, block)
+    wd = unpack(sw)
+    np.testing.assert_array_equal(np.asarray(wd),
+                                  np.asarray(jnp.where(mask, w, 0)))
+
+
+def test_global_mask_roundtrip_exact():
+    w = rand((256, 256), seed=3)
+    mask = prune_global(w, 0.5)
+    sw = pack(w, mask, (128, 128))
+    np.testing.assert_array_equal(np.asarray(unpack(sw)),
+                                  np.asarray(jnp.where(mask, w, 0)))
+
+
+def test_bitmap_roundtrip():
+    m = (np.random.default_rng(1).random((7, 4, 96)) > 0.5).astype(np.int32)
+    words = pack_bits(jnp.asarray(m))
+    back = unpack_bits(words, 96)
+    np.testing.assert_array_equal(np.asarray(back), m)
+
+
+def test_compression_ratio_matches_formula():
+    # bf16 at 50% balanced: 0.5 values + 1/16 bitmap
+    w = rand((1024, 1024)).astype(jnp.bfloat16)
+    mask = make_mask(w, 0.5, "balanced", (256, 128))
+    sw = pack(w, mask, (256, 128))
+    assert abs(sw.compression_ratio() - (0.5 + 1 / 16)) < 0.01
+
+
+def test_balanced_capacity_exact():
+    w = rand((512, 512), seed=5)
+    mask = prune_balanced(w, 0.5, (128, 128))
+    sw = pack(w, mask, (128, 128))
+    assert sw.capacity == balanced_capacity(0.5, (128, 128))
+
+
+def test_pad_to_blocks_sharding_padding():
+    w = rand((512, 384))
+    mask = make_mask(w, 0.5, "balanced", (128, 128))
+    sw = pack(w, mask, (128, 128), pad_to_blocks=(1, 4))
+    assert sw.bitmap.shape[1] == 4          # 3 blocks padded to 4
+    np.testing.assert_array_equal(np.asarray(unpack(sw)),
+                                  np.asarray(jnp.where(mask, w, 0)))
+
+
+def test_stacked_leading_dims():
+    w = rand((3, 256, 256), seed=9)
+    def pack_one(w2):
+        return pack(w2, make_mask(w2, 0.5, "balanced", (128, 128)),
+                    (128, 128), capacity=8192)
+    sw = jax.vmap(pack_one)(w)
+    assert sw.bitmap.shape[0] == 3
+    wd = unpack(sw)
+    assert wd.shape == (3, 256, 256)
+    for i in range(3):
+        ref = unpack(pack_one(w[i]))
+        np.testing.assert_array_equal(np.asarray(wd[i]), np.asarray(ref))
+
+
+def test_packed_spec_matches_real_pack():
+    w = rand((300, 200)).astype(jnp.bfloat16)
+    mask = make_mask(w, 0.5, "balanced", (128, 128))
+    cap = balanced_capacity(0.5, (128, 128))
+    sw = pack(w, mask, (128, 128), capacity=cap)
+    spec = packed_spec(300, 200, 0.5, (128, 128), jnp.bfloat16)
+    assert spec.bitmap.shape == sw.bitmap.shape
+    assert spec.values.shape == sw.values.shape
+    assert spec.values.dtype == sw.values.dtype
+
+
+# ---------------------------------------------------------------------------
+# property-based
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(k=st.integers(1, 300), n=st.integers(1, 300),
+       sparsity=st.floats(0.0, 0.95), seed=st.integers(0, 2**16))
+def test_property_roundtrip_any_shape(k, n, sparsity, seed):
+    w = rand((k, n), seed=seed)
+    mask = make_mask(w, sparsity, "balanced", (32, 32))
+    sw = pack(w, mask, (32, 32))
+    np.testing.assert_array_equal(np.asarray(unpack(sw)),
+                                  np.asarray(jnp.where(mask, w, 0)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), sparsity=st.floats(0.05, 0.95))
+def test_property_sparsity_level(seed, sparsity):
+    w = rand((128, 128), seed=seed)
+    mask = prune_global(w, sparsity)
+    actual = 1.0 - float(jnp.mean(mask.astype(jnp.float32)))
+    assert abs(actual - sparsity) < 0.02
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_property_balanced_keeps_largest(seed):
+    """Every kept entry within a block is >= every dropped entry."""
+    w = rand((64, 64), seed=seed)
+    mask = prune_balanced(w, 0.5, (32, 32))
+    a = np.abs(np.asarray(w))
+    m = np.asarray(mask)
+    for bi in range(2):
+        for bj in range(2):
+            blk_a = a[bi*32:(bi+1)*32, bj*32:(bj+1)*32]
+            blk_m = m[bi*32:(bi+1)*32, bj*32:(bj+1)*32]
+            if blk_m.all() or not blk_m.any():
+                continue
+            assert blk_a[blk_m].min() >= blk_a[~blk_m].max() - 1e-7
+
+
+def test_wanda_uses_activation_norms():
+    w = jnp.ones((64, 32))
+    act = jnp.concatenate([jnp.full((32,), 10.0), jnp.full((32,), 0.1)])
+    mask = prune_wanda(w, act, 0.5)
+    # high-activation input channels should be kept
+    assert float(mask[:32].mean()) > float(mask[32:].mean())
+
+
+def test_int8_quant_error_bounded():
+    w = rand((256, 128), seed=11)
+    q, scale = quantize_weight_int8(w)
+    back = q.astype(jnp.float32) * scale[None, :]
+    err = np.abs(np.asarray(back - w))
+    assert err.max() <= float(np.abs(np.asarray(w)).max()) / 127.0 + 1e-6

