@@ -1,0 +1,67 @@
+"""Serving-engine benchmark: legacy static batch vs continuous batching.
+
+Measures, at batch/slot counts 1/4/8 on ``qwen3-0.6b --reduced``:
+
+* decode throughput (tokens/s) of the legacy one-shot ``Engine`` (static
+  batch, host loop, re-traces its jitted decode on every refreeze) vs the
+  pooled ``ContinuousEngine`` (chunked prefill interleaved with decode,
+  in-place refreeze, decode compiled exactly once);
+* the decode-step retrace count of each across the run — the compile-time
+  tax the pooled redesign removes.
+
+  PYTHONPATH=src python -m benchmarks.bench_serving
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serving import Engine, ContinuousEngine, retrace_count
+
+from .common import emit
+
+BATCHES = (1, 4, 8)
+PROMPT = 64
+STEPS = 96          # > 1 tail fill -> exercises refreeze on both engines
+KV_TAIL = 64
+
+
+def run():
+    cfg = get_config("qwen3-0.6b").reduced()
+    cfg = dataclasses.replace(cfg, kv_k_sparsity=0.3, kv_v_sparsity=0.5,
+                              kv_tail=KV_TAIL)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    for b in BATCHES:
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, PROMPT)),
+                           jnp.int32)
+
+        legacy = Engine(params, cfg, kv_mode="sparse")
+        legacy.generate({"tokens": toks}, steps=2)          # compile
+        t0 = time.perf_counter()
+        legacy.generate({"tokens": toks}, steps=STEPS)
+        dt = time.perf_counter() - t0
+        legacy_traces = retrace_count(legacy._decode)
+        emit(f"serving/legacy/batch={b}", dt * 1e6,
+             f"tok_s={b * STEPS / dt:.1f};decode_traces={legacy_traces}")
+
+        eng = ContinuousEngine(params, cfg, slots=b,
+                               max_tokens=PROMPT + STEPS + KV_TAIL)
+        eng.generate_batch(toks[:, :PROMPT], steps=2)       # compile
+        t0 = time.perf_counter()
+        eng.generate_batch(toks, steps=STEPS)
+        dt = time.perf_counter() - t0
+        emit(f"serving/continuous/batch={b}", dt * 1e6,
+             f"tok_s={b * STEPS / dt:.1f};"
+             f"decode_traces={eng.trace_counts()['decode']}")
+
+
+if __name__ == "__main__":
+    run()

@@ -13,7 +13,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
     from . import (bench_linear, bench_e2e, bench_batch, bench_table1,
-                   bench_cache_layout, bench_column_groups, bench_kv)
+                   bench_cache_layout, bench_column_groups, bench_kv,
+                   bench_serving)
     bench_linear.run(measure=("--fast" not in sys.argv))
     bench_e2e.run()
     bench_batch.run()
@@ -21,6 +22,8 @@ def main() -> None:
     bench_cache_layout.run()
     bench_column_groups.run()
     bench_kv.run(train_steps=8 if "--fast" in sys.argv else 40)
+    if "--fast" not in sys.argv:
+        bench_serving.run()
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
 
 

@@ -1,12 +1,16 @@
 """End-to-end serving driver (the paper is an inference paper, so this is
-the primary e2e example): batched requests against a sparse-weight,
-sparse-KV model — the full SparAMX pipeline on the JAX stack.
+the primary e2e example): a *stream* of requests against a sparse-weight,
+sparse-KV model — the full SparAMX pipeline on the JAX stack, served by the
+continuous-batching engine.
 
   PYTHONPATH=src python examples/serve_sparse_batch.py [--int8] [--dense]
 
 Flow: init model -> offline preprocessing (prune+pack weights, the paper's
-"few minutes for 8B models" step) -> prefill batch of prompts -> freeze +
-compress the KV cache -> batched decode -> report throughput + bytes.
+"few minutes for 8B models" step) -> submit a request stream with mixed
+prompt/output lengths -> the scheduler interleaves chunked prefill with
+decode ticks over the pooled compressed cache (refreeze folds tails into
+each slot's frozen prefix in place; slots recycle as requests finish) ->
+report throughput, retrace counts, and bytes.
 """
 import argparse
 import time
@@ -21,20 +25,26 @@ from repro.data import DataConfig, host_batch
 from repro.distributed import NULL_CTX
 from repro.distributed.convert_plan import convert_concrete
 from repro.models import lm
-from repro.serving import Engine
+from repro.serving import ContinuousEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b")
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=128)
     ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--prefill-chunk", type=int, default=64)
     ap.add_argument("--int8", action="store_true")
-    ap.add_argument("--dense", action="store_true")
+    ap.add_argument("--dense", action="store_true",
+                    help="dense weights + dense-capacity KV pool")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
+    if args.dense:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, kv_k_sparsity=0.0, kv_v_sparsity=0.0)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
 
     if not args.dense:
@@ -49,22 +59,30 @@ def main():
               f"{tot_d/1e6:.1f}->{tot_c/1e6:.1f}MB in {time.time()-t0:.1f}s")
 
     dc = DataConfig(vocab=cfg.vocab, seq_len=args.prompt_len,
-                    global_batch=args.batch)
-    prompts = jnp.asarray(host_batch(dc, 0)["tokens"])
-    eng = Engine(params, cfg, kv_mode="dense" if args.dense else "sparse")
+                    global_batch=args.requests)
+    prompts = np.asarray(host_batch(dc, 0)["tokens"])
 
-    t0 = time.time()
-    cache, _ = eng.prefill({"tokens": prompts})
-    t_prefill = time.time() - t0
-    print(f"[prefill] {args.batch} x {args.prompt_len} tokens "
-          f"in {t_prefill:.2f}s (cache frozen+compressed)")
+    eng = ContinuousEngine(
+        params, cfg, slots=args.slots,
+        max_tokens=args.prompt_len + args.steps + cfg.kv_tail,
+        prefill_chunk=args.prefill_chunk or None)
+    print(f"[pool] {args.slots} slots x {eng.pool.capacity_tokens} tokens, "
+          f"block {eng.pool.bs}, caps k={eng.pool.cap_k} v={eng.pool.cap_v}")
 
+    rng = np.random.default_rng(0)
     t0 = time.time()
-    toks, _ = eng.generate({"tokens": prompts}, steps=args.steps)
-    t_dec = time.time() - t0
-    print(f"[decode] {args.steps} steps x {args.batch} requests: "
-          f"{args.steps*args.batch/t_dec:.1f} tok/s")
-    print("[sample]", np.asarray(toks)[0][:16])
+    rids = []
+    for i in range(args.requests):
+        plen = int(rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1))
+        steps = int(rng.integers(max(args.steps // 2, 1), args.steps + 1))
+        rids.append(eng.submit(prompts[i][:plen], steps))
+    out = eng.run()
+    dt = time.time() - t0
+    total = sum(len(v) for v in out.values())
+    print(f"[stream] {args.requests} requests -> {total} tokens in "
+          f"{dt:.2f}s ({total/dt:.1f} tok/s) on {args.slots} slots")
+    print(f"[jit] traces: {eng.trace_counts()} (decode compiled once)")
+    print("[sample]", out[rids[0]][:16])
 
 
 if __name__ == "__main__":

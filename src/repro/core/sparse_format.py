@@ -192,6 +192,51 @@ def _from_blocks(blocks: jax.Array, block: Tuple[int, int],
     return w[..., : shape[0], : shape[1]]
 
 
+def _cap_mask(wb: jax.Array, mb: jax.Array, cap: int) -> jax.Array:
+    """Drop the smallest-|.| overflow entries of any block whose nnz exceeds
+    ``cap`` — from the *mask* (and therefore the bitmap), so bitmap and packed
+    values never disagree.  Blocks with nnz <= cap come back unchanged."""
+    score = jnp.where(mb, jnp.abs(wb.astype(jnp.float32)), -jnp.inf)
+    idx = jax.lax.top_k(score, cap)[1]                    # [..., cap]
+    l = mb.shape[-1]
+    flat_i = idx.reshape(-1, cap)
+    sel = jax.vmap(lambda i: jnp.zeros((l,), jnp.bool_).at[i].set(True))(
+        flat_i)
+    return jnp.logical_and(mb, sel.reshape(mb.shape))
+
+
+def pack_blocks(wb: jax.Array, mb: jax.Array, cap: int,
+                cap_may_truncate: bool = True
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Pack pre-blocked values ``wb [..., L]`` under mask ``mb`` at a *static*
+    per-block capacity ``cap`` -> (bitmap uint32 ``[..., L//32]``, values
+    ``[..., cap]``).
+
+    This is the jit-stable packing primitive the serving cache pool builds
+    on: ``cap`` never depends on the data, and when a block holds more than
+    ``cap`` kept entries the overflow is dropped consistently from bitmap
+    *and* values (magnitude order), so ``unpack`` always round-trips what the
+    bitmap claims.
+
+    ``cap_may_truncate=False`` skips the overflow re-rank when the caller
+    can prove ``cap >= max block nnz`` (e.g. it derived ``cap`` from the
+    data) — the top-k scan is pure waste there.
+    """
+    l = wb.shape[-1]
+    cap = min(int(cap), l)
+    if cap < l and cap_may_truncate:
+        mb = _cap_mask(wb, mb, cap)
+    mb_i = mb.astype(jnp.int32)
+    nnz = mb_i.sum(-1)
+    # Stable partition: indices of kept entries first, in row-major order.
+    order = jnp.argsort(jnp.logical_not(mb), axis=-1, stable=True)
+    vals = jnp.take_along_axis(wb * mb.astype(wb.dtype),
+                               order[..., :cap], axis=-1)
+    valid = jnp.arange(cap) < nnz[..., None]
+    vals = jnp.where(valid, vals, 0).astype(wb.dtype)
+    return pack_bits(mb_i), vals
+
+
 def pack(w: jax.Array,
          mask: jax.Array,
          block: Tuple[int, int] = DEFAULT_BLOCK,
@@ -206,7 +251,9 @@ def pack(w: jax.Array,
       block: ``(bk, bn)`` block shape.
       capacity: per-block packed-value capacity; default = max block nnz
         rounded up to ``LANE``.  Must be a static int under tracing
-        (pass it explicitly when ``jax.eval_shape``-ing).
+        (pass it explicitly when ``jax.eval_shape``-ing).  If a block holds
+        more kept entries than the capacity, the smallest-magnitude overflow
+        is dropped from bitmap *and* values together (see ``pack_blocks``).
       pad_to_blocks: pad block-counts ``(Kb, Nb)`` to these multiples so the
         block axes shard evenly over a mesh axis.
       scale: optional per-output-channel scale to carry (int8 mode).
@@ -215,28 +262,54 @@ def pack(w: jax.Array,
     assert (bk * bn) % 32 == 0
     wb = _to_blocks(w, block, pad_to_blocks)              # [Kb, Nb, L]
     mb = _to_blocks(mask.astype(w.dtype), block, pad_to_blocks) > 0
-    mb_i = mb.astype(jnp.int32)
-    nnz = mb_i.sum(-1)                                     # [Kb, Nb]
 
     if capacity is None:
+        nnz = mb.astype(jnp.int32).sum(-1)                 # [Kb, Nb]
         cap = _ceil_to(max(int(jnp.max(nnz)), 1), LANE)
     else:
         cap = int(capacity)
     cap = min(cap, bk * bn)
 
-    # Stable partition: indices of kept entries first, in row-major order.
-    order = jnp.argsort(jnp.logical_not(mb), axis=-1, stable=True)
-    vals = jnp.take_along_axis(wb * mb.astype(wb.dtype), order[..., :cap], axis=-1)
-    valid = jnp.arange(cap) < nnz[..., None]
-    vals = jnp.where(valid, vals, 0).astype(w.dtype)
-
-    bitmap = pack_bits(mb_i)
+    # capacity derived from the data can never truncate; skip the re-rank
+    bitmap, vals = pack_blocks(wb, mb, cap,
+                               cap_may_truncate=capacity is not None)
     if scale is not None:
         n_pad = wb.shape[1] * bn
         scale = jnp.pad(scale.astype(jnp.float32), (0, n_pad - scale.shape[0]))
     return BlockSparseWeight(bitmap=bitmap, values=vals, scale=scale,
                              shape=(int(w.shape[0]), int(w.shape[1])),
                              block=block)
+
+
+def repack_capacity(sw: BlockSparseWeight, capacity: int) -> BlockSparseWeight:
+    """Re-store ``sw`` at exactly ``capacity`` packed slots per block.
+
+    Growing pads the value arrays (bit-exact round trip).  Shrinking
+    re-ranks each block's kept entries by magnitude and drops the overflow
+    from the bitmap *and* the values together, so ``unpack`` of the result
+    always equals the dense weight its own bitmap describes.  (The old
+    engine repack padded values only, which could leave a bitmap claiming
+    entries whose values had been truncated away.)
+    """
+    assert not sw.packed4, "repack of nibble-packed int4 not supported"
+    cap = int(capacity)
+    if cap == sw.capacity:
+        return sw
+    if cap > sw.capacity:
+        pad = cap - sw.values.shape[-1]
+        vals = jnp.pad(sw.values,
+                       [(0, 0)] * (sw.values.ndim - 1) + [(0, pad)])
+        return BlockSparseWeight(sw.bitmap, vals, sw.scale, sw.shape,
+                                 sw.block, sw.packed4)
+    # shrink: decompress block-locally, re-pack at the smaller capacity
+    bk, bn = sw.block
+    mask, idx = block_gather_indices(sw.bitmap, sw.block)
+    idx = jnp.minimum(idx, sw.capacity - 1)
+    dense_flat = jnp.take_along_axis(sw.values, idx, axis=-1)
+    dense_flat = jnp.where(mask > 0, dense_flat, 0)
+    bitmap, vals = pack_blocks(dense_flat, mask > 0, cap)
+    return BlockSparseWeight(bitmap, vals, sw.scale, sw.shape,
+                             sw.block, sw.packed4)
 
 
 def block_gather_indices(bitmap: jax.Array, block: Tuple[int, int]):

@@ -11,6 +11,15 @@ appending new tokens to a small separate buffer.  We reproduce that design:
   monotone ``tail_len`` (no realloc, no concatenation on the hot path);
 * when the tail fills, ``refreeze`` compresses it into the prefix (off the
   per-token hot path, amortized).
+
+Two cache families build on these primitives:
+
+* :class:`SparseKVCache` — the legacy one-shot layout (data-dependent
+  capacity; refreeze grows shapes, so jitted consumers re-trace);
+* the **pooled** layout (``freeze_chunk_blocks`` / ``pooled_view``) used by
+  ``repro.serving.CachePool`` — per-block storage at a *static* capacity so
+  refreeze is an in-place scatter and the serving decode step never
+  re-traces.
 """
 from __future__ import annotations
 
@@ -20,8 +29,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .sparse_format import (BlockSparseWeight, pack, packed_spec,
-                            balanced_capacity, unpack)
+from .sparse_format import (BlockSparseWeight, pack, pack_blocks,
+                            packed_spec, balanced_capacity, unpack)
 from .pruning import prune_kv
 
 KV_BLOCK_TOKENS = 128
@@ -149,6 +158,49 @@ def maybe_refreeze(cache: SparseKVCache, k_sparsity: float,
     if int(cache.tail_len) >= t:
         return refreeze(cache, k_sparsity, v_sparsity)
     return cache
+
+
+# ---------------------------------------------------------------------------
+# pooled-cache primitives (serving CachePool — jit-stable, static shapes)
+# ---------------------------------------------------------------------------
+
+def freeze_chunk_blocks(k: jax.Array, v: jax.Array,
+                        k_sparsity: float, v_sparsity: float,
+                        bs: int, cap_k: int, cap_v: int):
+    """Compress a block-aligned K/V chunk at *static* per-block capacities.
+
+    ``k/v [B, Hkv, C, D]`` with ``C % bs == 0`` -> ``(k_bitmap [B, Hkv, Cb,
+    bs*D//32], k_values [B, Hkv, Cb, cap_k], v_bitmap, v_values)``.
+
+    The magnitude threshold is computed per leading batch entry (the
+    paper's layer-wide rule, applied per request slot), then each
+    ``(bs, D)`` token block is packed at the pool's fixed capacity via
+    :func:`pack_blocks` — if pruning leaves a block denser than the
+    capacity, the overflow is dropped consistently from bitmap and values.
+    Everything here is traceable with static shapes, so the serving refreeze
+    can run inside a once-compiled ``jax.jit``.
+    """
+    b, hkv, c, d = k.shape
+    assert c % bs == 0, (c, bs)
+    mask_k = jax.vmap(lambda a: prune_kv(a, k_sparsity))(k)
+    mask_v = jax.vmap(lambda a: prune_kv(a, v_sparsity))(v)
+
+    def blocks(a):
+        return a.reshape(b, hkv, c // bs, bs * d)
+    k_bm, k_vals = pack_blocks(blocks(k), blocks(mask_k), cap_k)
+    v_bm, v_vals = pack_blocks(blocks(v), blocks(mask_v), cap_v)
+    return k_bm, k_vals, v_bm, v_vals
+
+
+def pooled_view(bitmap: jax.Array, values: jax.Array, bs: int, d: int
+                ) -> BlockSparseWeight:
+    """Pooled block arrays ``[B, Hkv, Sb, X]`` -> the structured
+    ``BlockSparseWeight`` view (``[B, Hkv, Sb, 1, X]``) the decode-attention
+    kernels consume.  Zero-copy (reshape only)."""
+    sb = bitmap.shape[2]
+    return BlockSparseWeight(
+        bitmap=bitmap[:, :, :, None, :], values=values[:, :, :, None, :],
+        scale=None, shape=(sb * bs, d), block=(bs, d))
 
 
 def abstract_cache(batch: int, hkv: int, prefix: int, d: int,

@@ -17,6 +17,12 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import jax.experimental.pallas.tpu as pltpu
+
+# jax<=0.4.x exposes TPUCompilerParams; newer releases renamed it to
+# CompilerParams.  All kernels route through this alias.
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
 
 
 def unpack_bits_block(words: jax.Array, bk: int, bn: int) -> jax.Array:

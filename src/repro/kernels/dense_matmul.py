@@ -19,6 +19,8 @@ import jax.numpy as jnp
 import jax.experimental.pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from .common import CompilerParams
+
 
 def _kernel(x_ref, w_ref, o_ref, acc_ref):
     @pl.when(pl.program_id(2) == 0)
@@ -59,7 +61,7 @@ def dense_matmul_pallas(x: jax.Array, w: jax.Array,
         out_specs=pl.BlockSpec((tm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
         scratch_shapes=[pltpu.VMEM((tm, bn), acc_dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="dense_matmul",

@@ -133,16 +133,23 @@ def sparse_decode_attention(q: jax.Array,
                             sm_scale: float,
                             k_tail: Optional[jax.Array] = None,
                             v_tail: Optional[jax.Array] = None,
-                            tail_len: Optional[jax.Array] = None) -> jax.Array:
+                            tail_len: Optional[jax.Array] = None,
+                            prefix_len: Optional[jax.Array] = None
+                            ) -> jax.Array:
     """Decode attention over a compressed frozen prefix + dense tail.
 
     q: [B, Hq, D]; k_sp/v_sp packed from the [B*Hkv*S, D] cache view with
     block (bs, D); k_tail/v_tail: [B, Hkv, T, D].
+
+    ``tail_len``/``prefix_len`` may be scalar (uniform batch) or per-slot
+    ``[B]`` int32 (pooled continuous-batching cache).  ``prefix_len`` must
+    be a whole number of (bs,)-token blocks; on the Pallas path it becomes a
+    per-slot valid-block count the kernel skips past.
     """
     interp = _pallas()
     if interp is None:
         return ref.sparse_decode_attention_ref(
-            q, k_sp, v_sp, sm_scale, k_tail, v_tail, tail_len)
+            q, k_sp, v_sp, sm_scale, k_tail, v_tail, tail_len, prefix_len)
 
     b, hq, d = q.shape
     g = hq // hkv
@@ -158,16 +165,24 @@ def sparse_decode_attention(q: jax.Array,
     kvv = k_sp.values.reshape(b, hkv, sb, k_sp.capacity)
     vbm = v_sp.bitmap.reshape(b, hkv, sb, words)
     vvv = v_sp.values.reshape(b, hkv, sb, v_sp.capacity)
+    n_blocks = None
+    if prefix_len is not None:
+        n_blocks = jnp.broadcast_to(
+            jnp.asarray(prefix_len, jnp.int32) // bs, (b,))
     o, lse = sparse_decode_attention_pallas(
-        qg, kbm, kvv, vbm, vvv, bs=bs, sm_scale=sm_scale, interpret=interp)
+        qg, kbm, kvv, vbm, vvv, bs=bs, sm_scale=sm_scale, interpret=interp,
+        n_blocks=n_blocks)
     o = o.reshape(b, hq, d)
     lse = lse.reshape(b, hq)
+    if prefix_len is not None:
+        # an all-skipped prefix must lose the merge against a real tail
+        empty_p = jnp.broadcast_to(jnp.atleast_1d(
+            jnp.asarray(prefix_len)) <= 0, (b,))
+        lse = jnp.where(empty_p[:, None], -1e30, lse)
 
     if k_tail is not None and k_tail.shape[2] > 0:
         t = k_tail.shape[2]
-        valid = jnp.arange(t)[None, :] < (
-            tail_len if tail_len is not None else t)
-        valid = jnp.broadcast_to(valid, (b, t))
+        valid = ref._len_valid(t, tail_len if tail_len is not None else t, b)
         kt = jnp.repeat(k_tail, g, axis=1)
         vt = jnp.repeat(v_tail, g, axis=1)
         o2, lse2 = ref.attn_partial_ref(q, kt, vt, sm_scale, valid)

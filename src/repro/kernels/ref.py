@@ -127,19 +127,34 @@ def attn_partial_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return o / l_safe[..., None], m_safe + jnp.log(l_safe)
 
 
+def _len_valid(n: int, length, b: int) -> jax.Array:
+    """[B, n] validity mask from a scalar or per-slot [B] length."""
+    length = jnp.asarray(length)
+    if length.ndim == 1:
+        length = length[:, None]
+    return jnp.broadcast_to(jnp.arange(n)[None, :] < length, (b, n))
+
+
 def sparse_decode_attention_ref(
         q: jax.Array,
         k_sp: BlockSparseWeight, v_sp: BlockSparseWeight,
         sm_scale: float,
         k_tail: Optional[jax.Array] = None,
         v_tail: Optional[jax.Array] = None,
-        tail_len: Optional[jax.Array] = None) -> jax.Array:
+        tail_len: Optional[jax.Array] = None,
+        prefix_len: Optional[jax.Array] = None) -> jax.Array:
     """Oracle for the sparse-KV flash-decode kernel (paper §6.2).
 
     q: [B, Hq, D].  k_sp/v_sp hold the *compressed frozen prefix*: their
     logical shape is [(B*Hkv*S), D] blocked row-major, i.e. they were packed
     from the [B*Hkv*S, D] view of the cache.  k_tail/v_tail: dense dynamic
     tail [B, Hkv, T, D] with `tail_len` valid positions.
+
+    ``tail_len`` and ``prefix_len`` may be scalars (uniform batch — the
+    legacy one-shot engine) or per-slot int32 ``[B]`` (the pooled
+    continuous-batching cache, where every slot has its own lengths).
+    ``prefix_len`` masks prefix positions ``>= prefix_len[b]`` — slots whose
+    compressed prefix only partially fills the pool's fixed-capacity storage.
     """
     b, hq, d = q.shape
     hkv = k_tail.shape[1] if k_tail is not None else hq
@@ -154,12 +169,17 @@ def sparse_decode_attention_ref(
         v = vd.reshape(b, hkv, s_len, d)
     g = hq // hkv
     qg = q.reshape(b, hkv, g, d)
-    o, lse = gqa_partial_ref(qg, k, v, sm_scale)
+    valid_p = None
+    if prefix_len is not None:
+        valid_p = _len_valid(k.shape[2], prefix_len, b)
+    o, lse = gqa_partial_ref(qg, k, v, sm_scale, valid_p)
+    if valid_p is not None:
+        # an empty prefix must not win the lse merge against a real tail
+        empty_p = ~jnp.any(valid_p, axis=-1)
+        lse = jnp.where(empty_p[:, None, None], -1e30, lse)
     if k_tail is not None and k_tail.shape[2] > 0:
         t = k_tail.shape[2]
-        valid = (jnp.arange(t)[None, :] <
-                 (tail_len if tail_len is not None else t))
-        valid = jnp.broadcast_to(valid, (b, t))
+        valid = _len_valid(t, tail_len if tail_len is not None else t, b)
         o2, lse2 = gqa_partial_ref(qg, k_tail, v_tail, sm_scale, valid)
         # a fully-empty tail contributes nothing
         empty = ~jnp.any(valid, axis=-1)

@@ -23,12 +23,12 @@ import jax.numpy as jnp
 import jax.experimental.pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from .common import decompress_block
+from .common import CompilerParams, decompress_block
 
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, kbm_ref, kval_ref, vbm_ref, vval_ref,
+def _kernel(nb_ref, q_ref, kbm_ref, kval_ref, vbm_ref, vval_ref,
             o_ref, lse_ref, acc_ref, m_ref, l_ref, *, bs, d, sm_scale):
     s_idx = pl.program_id(2)
 
@@ -38,24 +38,30 @@ def _kernel(q_ref, kbm_ref, kval_ref, vbm_ref, vval_ref,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    k_blk = decompress_block(kbm_ref[0, 0, 0], kval_ref[0, 0, 0], bs, d,
-                             dtype=jnp.float32)                 # (bs, D)
-    q = q_ref[0, 0].astype(jnp.float32)                          # (G, D)
-    s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * sm_scale
+    # Per-slot valid-block count (pooled cache: each request fills only a
+    # prefix of the fixed-capacity block storage).  Blocks past it are
+    # skipped entirely — zero compute, zero softmax contribution.
+    @pl.when(s_idx < nb_ref[0, 0])
+    def _block():
+        k_blk = decompress_block(kbm_ref[0, 0, 0], kval_ref[0, 0, 0], bs, d,
+                                 dtype=jnp.float32)              # (bs, D)
+        q = q_ref[0, 0].astype(jnp.float32)                      # (G, D)
+        s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
 
-    m_prev = m_ref[:, 0]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))             # (G,)
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new[:, None])                              # (G, bs)
-    l_new = l_ref[:, 0] * alpha + jnp.sum(p, axis=-1)
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))         # (G,)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])                          # (G, bs)
+        l_new = l_ref[:, 0] * alpha + jnp.sum(p, axis=-1)
 
-    v_blk = decompress_block(vbm_ref[0, 0, 0], vval_ref[0, 0, 0], bs, d,
-                             dtype=jnp.float32)                 # (bs, D)
-    acc_ref[...] = (acc_ref[...] * alpha[:, None]
-                    + jnp.dot(p, v_blk, preferred_element_type=jnp.float32))
-    m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
-    l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+        v_blk = decompress_block(vbm_ref[0, 0, 0], vval_ref[0, 0, 0], bs, d,
+                                 dtype=jnp.float32)              # (bs, D)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jnp.dot(p, v_blk,
+                                  preferred_element_type=jnp.float32))
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
 
     @pl.when(s_idx == pl.num_programs(2) - 1)
     def _done():
@@ -69,23 +75,32 @@ def sparse_decode_attention_pallas(
         q: jax.Array,
         k_bitmap: jax.Array, k_values: jax.Array,
         v_bitmap: jax.Array, v_values: jax.Array,
-        bs: int, sm_scale: float, interpret: bool = True):
+        bs: int, sm_scale: float, interpret: bool = True,
+        n_blocks: jax.Array | None = None):
     """Prefix-partial attention over the compressed cache.
 
     q:         [B, Hkv, G, D]
     k_bitmap:  uint32 [B, Hkv, Sb, bs*D//32]   (same for v_bitmap)
     k_values:  [B, Hkv, Sb, Ck]                (v_values: [.., Cv])
+    n_blocks:  optional int32 [B] — per-slot count of *valid* sequence
+               blocks (pooled serving cache); blocks past it are skipped.
+               None means every block is valid.
     Returns (out [B, Hkv, G, D] f32, lse [B, Hkv, G] f32).
     """
     b, hkv, g, d = q.shape
     sb = k_bitmap.shape[2]
     words = k_bitmap.shape[3]
     ck, cv = k_values.shape[3], v_values.shape[3]
+    if n_blocks is None:
+        n_blocks = jnp.full((b,), sb, jnp.int32)
+    nb2 = n_blocks.astype(jnp.int32).reshape(b, 1)   # 2-D for SMEM
 
     out, lse = pl.pallas_call(
         partial(_kernel, bs=bs, d=d, sm_scale=sm_scale),
         grid=(b, hkv, sb),
         in_specs=[
+            pl.BlockSpec((1, 1), lambda bb, h, s: (bb, 0),
+                         memory_space=pltpu.SMEM),
             pl.BlockSpec((1, 1, g, d), lambda bb, h, s: (bb, h, 0, 0)),
             pl.BlockSpec((1, 1, 1, words), lambda bb, h, s: (bb, h, s, 0)),
             pl.BlockSpec((1, 1, 1, ck), lambda bb, h, s: (bb, h, s, 0)),
@@ -105,9 +120,9 @@ def sparse_decode_attention_pallas(
             pltpu.VMEM((g, 128), jnp.float32),
             pltpu.VMEM((g, 128), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="sparse_decode_attention",
-    )(q, k_bitmap, k_values, v_bitmap, v_values)
+    )(nb2, q, k_bitmap, k_values, v_bitmap, v_values)
     return out, lse

@@ -22,7 +22,7 @@ import jax.experimental.pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.core.sparse_format import BlockSparseWeight
-from .common import decompress_block
+from .common import CompilerParams, decompress_block
 
 
 def _kernel(x_ref, bm_ref, val_ref, o_ref, acc_ref, *, bk, bn):
@@ -68,7 +68,7 @@ def sparse_gemv_pallas(x: jax.Array, sw: BlockSparseWeight,
         out_specs=pl.BlockSpec((tm, bn), lambda j, kk: (0, j)),
         out_shape=jax.ShapeDtypeStruct((tm, nb * bn), out_dtype),
         scratch_shapes=[pltpu.VMEM((tm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
         name="sparse_gemv",

@@ -24,7 +24,7 @@ import jax.experimental.pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.core.sparse_format import BlockSparseWeight
-from .common import decompress_block
+from .common import CompilerParams, decompress_block
 
 
 def _kernel(x_ref, bm_ref, val_ref, o_ref, acc_ref, *, bk, bn):
@@ -67,7 +67,7 @@ def sparse_matmul_pallas(x: jax.Array, sw: BlockSparseWeight,
         out_specs=pl.BlockSpec((tm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, nb * bn), out_dtype),
         scratch_shapes=[pltpu.VMEM((tm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="sparse_matmul",

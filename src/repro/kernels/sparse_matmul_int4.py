@@ -16,7 +16,7 @@ import jax.experimental.pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.core.sparse_format import BlockSparseWeight
-from .common import decompress_block
+from .common import CompilerParams, decompress_block
 
 
 def _unpack_nibbles(b):
@@ -74,7 +74,7 @@ def sparse_matmul_int4_pallas(xq: jax.Array, sx: jax.Array,
         out_specs=pl.BlockSpec((tm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, nb * bn), out_dtype),
         scratch_shapes=[pltpu.VMEM((tm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="sparse_matmul_int4",

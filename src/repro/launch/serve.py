@@ -1,11 +1,18 @@
-"""Serving launcher: sparse-weight + sparse-KV decode with batched requests.
+"""Serving launcher: sparse-weight + sparse-KV decode over streamed requests.
 
-Demonstrates the paper's full inference path at CPU scale: init (or load) a
-model, convert linear layers to the compressed sparse format, prefill a
-batch of prompts, freeze the cache, and decode.
+Demonstrates the paper's full inference path at serving scale: init (or
+load) a model, convert linear layers to the compressed sparse format, then
+either
+
+* **stream mode (default)** — drive the continuous-batching
+  ``ContinuousEngine``: a Poisson-ish stream of requests with mixed prompt
+  and output lengths flows through the pooled sparse-KV cache (chunked
+  prefill interleaved with decode, slot recycling, zero decode retraces);
+* ``--one-shot`` — the legacy static-batch ``Engine`` (prefill the whole
+  batch, decode lockstep), kept as the baseline.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
-      --batch 4 --prompt-len 64 --steps 16 --sparsity 0.5 [--int8]
+      --requests 8 --slots 4 --prompt-len 64 --steps 16 --sparsity 0.5
 """
 from __future__ import annotations
 
@@ -21,7 +28,7 @@ from repro.data import DataConfig, host_batch
 from repro.distributed import ShardCtx, NULL_CTX, default_rules
 from repro.distributed.convert_plan import convert_concrete
 from repro.models import lm
-from repro.serving import Engine
+from repro.serving import Engine, ContinuousEngine
 
 
 def main(argv=None):
@@ -35,6 +42,15 @@ def main(argv=None):
     ap.add_argument("--int8", action="store_true")
     ap.add_argument("--dense", action="store_true",
                     help="baseline: dense weights + dense KV")
+    ap.add_argument("--one-shot", action="store_true",
+                    help="legacy static-batch engine instead of the "
+                         "continuous-batching stream")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="stream mode: number of requests (default: batch)")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="stream mode: cache-pool slots (default: batch)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="stream mode: prompt tokens prefilled per tick")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -56,25 +72,62 @@ def main(argv=None):
               f"{tot_d/1e6:.1f}MB -> {tot_c/1e6:.1f}MB "
               f"({tot_c/tot_d:.3f}x)")
 
+    n_req = args.requests or args.batch
     dc = DataConfig(vocab=cfg.vocab, seq_len=args.prompt_len,
-                    global_batch=args.batch)
+                    global_batch=max(n_req, args.batch))
     prompts = jnp.asarray(host_batch(dc, 0)["tokens"])
-    batch = {"tokens": prompts}
-    if cfg.family == "encdec":
-        batch["src_embeds"] = jnp.zeros(
-            (args.batch, args.prompt_len, cfg.d_model), jnp.float32)
-    if cfg.frontend:
-        batch["frontend_embeds"] = jnp.zeros(
-            (args.batch, cfg.frontend_tokens, cfg.d_model), jnp.float32)
 
-    eng = Engine(params, cfg,
-                 kv_mode="dense" if args.dense else "sparse")
+    one_shot = args.one_shot
+    if not one_shot:
+        try:
+            lm._attn_kinds(cfg)
+        except AssertionError:
+            print(f"[serve] {cfg.family}/frontend={bool(cfg.frontend)} has "
+                  "no continuous-batching path yet; falling back to the "
+                  "one-shot engine (see --one-shot)")
+            one_shot = True
+    if one_shot:
+        batch = {"tokens": prompts[:args.batch]}
+        if cfg.family == "encdec":
+            batch["src_embeds"] = jnp.zeros(
+                (args.batch, args.prompt_len, cfg.d_model), jnp.float32)
+        if cfg.frontend:
+            batch["frontend_embeds"] = jnp.zeros(
+                (args.batch, cfg.frontend_tokens, cfg.d_model), jnp.float32)
+        eng = Engine(params, cfg,
+                     kv_mode="dense" if args.dense else "sparse")
+        t0 = time.time()
+        toks, _ = eng.generate(batch, steps=args.steps)
+        dt = time.time() - t0
+        print(f"[serve] one-shot: {args.steps} tokens x {args.batch} reqs "
+              f"in {dt:.2f}s ({args.steps*args.batch/dt:.1f} tok/s)")
+        print("[serve] sample:", np.asarray(toks)[0][:16])
+        return 0
+
+    # request-stream mode: mixed lengths through the pooled engine
+    if args.dense:
+        # dense-KV baseline: zero KV sparsity makes the pooled compression
+        # a bit-exact round trip at full per-block capacity
+        cfg = dataclasses.replace(cfg, kv_k_sparsity=0.0, kv_v_sparsity=0.0)
+    slots = args.slots or args.batch
+    eng = ContinuousEngine(
+        params, cfg, slots=slots,
+        max_tokens=args.prompt_len + args.steps + cfg.kv_tail,
+        prefill_chunk=args.prefill_chunk or None)
+    rng = np.random.default_rng(0)
     t0 = time.time()
-    toks, _ = eng.generate(batch, steps=args.steps)
+    rids = []
+    for i in range(n_req):
+        plen = int(rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1))
+        steps = int(rng.integers(max(args.steps // 2, 1), args.steps + 1))
+        rids.append(eng.submit(np.asarray(prompts[i][:plen]), steps))
+    out = eng.run()
     dt = time.time() - t0
-    print(f"[serve] generated {args.steps} tokens x {args.batch} reqs "
-          f"in {dt:.2f}s ({args.steps*args.batch/dt:.1f} tok/s)")
-    print("[serve] sample:", np.asarray(toks)[0][:16])
+    total = sum(len(v) for v in out.values())
+    print(f"[serve] stream: {n_req} requests, {total} tokens in {dt:.2f}s "
+          f"({total/dt:.1f} tok/s) on {slots} slots")
+    print(f"[serve] jit traces: {eng.trace_counts()}")
+    print("[serve] sample:", out[rids[0]][:16])
     return 0
 
 

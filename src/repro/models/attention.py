@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
-from repro.core.sparse_kv import SparseKVCache, append_token
+from repro.core.sparse_format import unpack
+from repro.core.sparse_kv import SparseKVCache, append_token, pooled_view
 from .module import ParamSpec
 from .layers import rms_norm, rope_angles, apply_rope
 from .flash import blocked_attention, full_attention
@@ -175,6 +176,89 @@ def attn_decode(p, x_t: jax.Array, cache, cfg, ctx,
 
     out = ops.linear(o.reshape(b, hq * hd).astype(x_t.dtype), p["wo"])
     return out, cache
+
+
+def pooled_attn_decode(p, x_t: jax.Array, kv: Dict[str, jax.Array], cfg,
+                       ctx, positions: jax.Array, prefix_blocks: jax.Array,
+                       tail_len: jax.Array, slot_mask: jax.Array, bs: int
+                       ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step against one layer of the pooled serving cache.
+
+    Unlike :func:`attn_decode` (one scalar position for the whole batch),
+    every slot here carries its own position, prefix length, and tail fill —
+    the per-slot variable-length semantics continuous batching needs.  All
+    shapes are static: the pooled prefix storage is fixed-capacity and
+    masked by ``prefix_blocks * bs``, so this traces exactly once.
+
+    x_t [B, d]; kv: {"k_bitmap" [B,Hkv,Sb,W], "k_values" [B,Hkv,Sb,Ck],
+    "v_bitmap", "v_values", "k_tail"/"v_tail" [B,Hkv,T,D]};
+    positions/prefix_blocks/tail_len int32 [B]; slot_mask bool [B] (inactive
+    slots keep their cache bit-identical and produce ignorable outputs).
+    """
+    b, _ = x_t.shape
+    hq, hkv, hd = cfg.padded_heads, cfg.n_kv, cfg.hd
+    q = _project_q(p, x_t, cfg)                               # [B,Hq,hd]
+    k_new, v_new = _project_kv(p, x_t, cfg)                   # [B,Hkv,hd]
+    cos, sin = rope_angles(positions, hd, cfg.rope_theta)     # [B, hd//2]
+    q = apply_rope(q[:, None], cos[:, None], sin[:, None])[:, 0]
+    k_new = apply_rope(k_new[:, None], cos[:, None], sin[:, None])[:, 0]
+    sm = 1.0 / hd ** 0.5
+
+    def append(tail, new):
+        upd = jax.vmap(lambda tl, nw, i: jax.lax.dynamic_update_slice_in_dim(
+            tl, nw[:, None].astype(tl.dtype), i, axis=1))(
+                tail, new, tail_len)
+        return jnp.where(slot_mask[:, None, None, None], upd, tail)
+
+    k_tail = append(kv["k_tail"], k_new)
+    v_tail = append(kv["v_tail"], v_new)
+    t_att = tail_len + slot_mask.astype(jnp.int32)
+    k_sp = pooled_view(kv["k_bitmap"], kv["k_values"], bs, hd)
+    v_sp = pooled_view(kv["v_bitmap"], kv["v_values"], bs, hd)
+    o = ops.sparse_decode_attention(q, k_sp, v_sp, hkv, sm,
+                                    k_tail, v_tail, t_att,
+                                    prefix_len=prefix_blocks * bs)
+    out = ops.linear(o.reshape(b, hq * hd).astype(x_t.dtype), p["wo"])
+    return out, {**kv, "k_tail": k_tail, "v_tail": v_tail}
+
+
+def pooled_attn_prefill_chunk(p, x: jax.Array, kv: Dict[str, jax.Array],
+                              cfg, ctx, positions: jax.Array,
+                              ctx_len: jax.Array, bs: int
+                              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunked-prefill attention for ONE slot of the pooled cache.
+
+    Queries attend causally within the chunk plus fully over the slot's
+    already-frozen compressed prefix (decompressed here; the chunk path is
+    off the per-token hot loop).  ``x [1, C, d]``; ``kv``: slot-sliced
+    pooled leaves (``[1, Hkv, Sb, X]``); ``positions [C]`` absolute;
+    ``ctx_len`` scalar int32 — valid prefix tokens.  Returns
+    ``(out [1, C, d], k_chunk, v_chunk [1, Hkv, C, hd] post-RoPE)`` so the
+    caller can freeze the chunk into the pool.
+    """
+    b, c, _ = x.shape
+    hq, hkv, hd = cfg.padded_heads, cfg.n_kv, cfg.hd
+    g = hq // hkv
+    q = _project_q(p, x, cfg)                                # [1,C,Hq,hd]
+    k, v = _project_kv(p, x, cfg)                            # [1,C,Hkv,hd]
+    cos, sin = rope_angles(positions, hd, cfg.rope_theta)    # [C, hd//2]
+    q = apply_rope(q, cos[None], sin[None])
+    k = apply_rope(k, cos[None], sin[None])
+    q = q.transpose(0, 2, 1, 3)                              # [1,Hq,C,hd]
+    k = k.transpose(0, 2, 1, 3)                              # [1,Hkv,C,hd]
+    v = v.transpose(0, 2, 1, 3)
+
+    k_ctx = unpack(pooled_view(kv["k_bitmap"], kv["k_values"], bs, hd))
+    v_ctx = unpack(pooled_view(kv["v_bitmap"], kv["v_values"], bs, hd))
+    s_ctx = k_ctx.shape[2]
+    kv_valid = jnp.concatenate(
+        [jnp.arange(s_ctx) < ctx_len, jnp.ones((c,), bool)])[None, :]
+    kk = _repeat_kv(jnp.concatenate([k_ctx.astype(k.dtype), k], axis=2), g)
+    vv = _repeat_kv(jnp.concatenate([v_ctx.astype(v.dtype), v], axis=2), g)
+    sm = 1.0 / hd ** 0.5
+    o = full_attention(q, kk, vv, sm, causal=True, kv_valid=kv_valid)
+    o = o.transpose(0, 2, 1, 3).reshape(b, c, hq * hd)
+    return ops.linear(o, p["wo"]), k, v
 
 
 def cross_attn_decode(p, x_t: jax.Array, k: jax.Array, v: jax.Array,

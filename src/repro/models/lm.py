@@ -28,7 +28,8 @@ from .module import ParamSpec
 from .layers import (rms_norm, norm_spec, embed_specs, embed_apply,
                      unembed_apply, mlp_specs, mlp_apply)
 from .attention import (attn_specs, attn_apply, attn_decode, DenseKVCache,
-                        cross_attn_decode)
+                        cross_attn_decode, pooled_attn_decode,
+                        pooled_attn_prefill_chunk)
 from .moe import moe_specs, moe_apply
 from .ssm import (mamba_specs, mamba_apply, mamba_decode, mamba_init_state,
                   rwkv_specs, rwkv_time_mix, rwkv_channel_mix,
@@ -375,6 +376,145 @@ def _sublayer_decode(x_t, p, cache_j, kind, cfg, ctx, position,
     else:
         h2 = mlp_apply(p["ffn"], h2)
     return x_t + h2, new_cache
+
+
+def _attn_kinds(cfg) -> List[Tuple[str, str]]:
+    assert cfg.family != "encdec" and not cfg.frontend, \
+        "pooled serving has no cross-attention / frontend-embedding path"
+    pl = period_len(cfg)
+    kinds = [layer_kind(cfg, j) for j in range(pl)]
+    assert all(k[0] == "attn" for k in kinds), \
+        "pooled serving supports attention stacks (dense/moe families)"
+    return kinds
+
+
+def forward_decode_pooled(params, state, tokens: jax.Array,
+                          slot_mask: jax.Array, cfg, ctx, bs: int
+                          ) -> Tuple[jax.Array, Any]:
+    """One decode tick over every slot of the pooled serving cache.
+
+    tokens [B, 1]; slot_mask bool [B] (False slots are pure passthrough —
+    their cache, lengths and positions come back bit-identical, so a
+    mid-prefill or empty slot can ride along in the same compiled step).
+    Every array in ``state`` keeps its shape, so this jits exactly once per
+    pool geometry — refreezes and admissions never retrace it.
+    Returns (logits [B, V] f32, new state).
+    """
+    x_t = embed_apply(params["embed"], tokens[:, 0], cfg)
+    x_t = ctx.constrain(x_t, ("batch", "embed"))
+    kinds = _attn_kinds(cfg)
+    positions = state["pos"]
+    prefix_blocks = state["prefix_blocks"]
+    tail_len = state["tail_len"]
+
+    def body(xc, xs):
+        pp, cc = xs
+        new_cc = {}
+        for j, kind in enumerate(kinds):
+            pj, cj = pp[f"l{j}"], cc[f"l{j}"]
+            h = rms_norm(xc, pj["ln1"])
+            h, new_kv = pooled_attn_decode(
+                pj["mixer"], h, cj["kv"], cfg, ctx, positions,
+                prefix_blocks, tail_len, slot_mask, bs)
+            xc = xc + h
+            h2 = rms_norm(xc, pj["ln2"])
+            if kind[1] == "moe":
+                h2 = moe_apply(pj["ffn"], h2[:, None, :], cfg, ctx)[:, 0]
+            else:
+                h2 = mlp_apply(pj["ffn"], h2)
+            xc = xc + h2
+            new_cc[f"l{j}"] = {"kv": new_kv}
+        return xc, new_cc
+
+    x_t, new_layers = lax.scan(body, x_t,
+                               (params["blocks"], state["layers"]))
+    x_t = rms_norm(x_t, params["final_norm"])
+    logits = unembed_apply(params["embed"], x_t, cfg)
+    logits = ctx.constrain(logits, ("batch", "vocab"))
+    live = slot_mask.astype(jnp.int32)
+    new_state = {**state, "layers": new_layers,
+                 "pos": positions + live, "tail_len": tail_len + live}
+    return logits, new_state
+
+
+def forward_prefill_chunk(params, state, tokens: jax.Array, slot: jax.Array,
+                          cfg, ctx, bs: int) -> Tuple[jax.Array, Any]:
+    """Prefill one prompt chunk for a single slot of the pooled cache.
+
+    tokens [1, C]; slot scalar int32.  The chunk attends to the slot's
+    already-frozen prefix, then its full (bs)-token blocks are pruned +
+    packed straight into the slot's prefix storage at the pool's static
+    capacity; a trailing remainder (< bs tokens — last chunk only) lands in
+    the dense tail.  One ``jax.jit`` trace per distinct chunk length; the
+    slot index and start position are traced values, so admitting a request
+    into *any* slot at *any* offset reuses the same compiled step.
+    Returns (last-token logits [1, V], new state).
+    """
+    c = tokens.shape[1]
+    nb_new, rem = c // bs, c % bs
+    kinds = _attn_kinds(cfg)
+    x = embed_apply(params["embed"], tokens, cfg)            # [1, C, d]
+    start = jnp.take(state["pos"], slot)
+    pb0 = jnp.take(state["prefix_blocks"], slot)
+    positions = start + jnp.arange(c)
+    ctx_len = pb0 * bs
+    slot_layers = jax.tree_util.tree_map(
+        lambda a: lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
+        state["layers"])
+
+    def body(xc, xs):
+        pp, cc = xs
+        chunk_kv = {}
+        for j, kind in enumerate(kinds):
+            pj, cj = pp[f"l{j}"], cc[f"l{j}"]
+            h = rms_norm(xc, pj["ln1"])
+            h, k_c, v_c = pooled_attn_prefill_chunk(
+                pj["mixer"], h, cj["kv"], cfg, ctx, positions, ctx_len, bs)
+            xc = xc + h
+            h2 = rms_norm(xc, pj["ln2"])
+            if kind[1] == "moe":
+                h2 = moe_apply(pj["ffn"], h2, cfg, ctx)
+            else:
+                h2 = mlp_apply(pj["ffn"], h2, ctx)
+            xc = xc + h2
+            chunk_kv[f"l{j}"] = {"k": k_c, "v": v_c}
+        return xc, chunk_kv
+
+    x, chunk_kv = lax.scan(body, x, (params["blocks"], slot_layers))
+    hidden = rms_norm(x, params["final_norm"])
+    logits = logits_fn(params, hidden[:, -1:], cfg, ctx)[:, 0]
+
+    from repro.core.sparse_kv import freeze_chunk_blocks
+    new_layers = {}
+    for name, leaf in state["layers"].items():
+        kv = dict(leaf["kv"])
+        ck, cv = chunk_kv[name]["k"], chunk_kv[name]["v"]    # [P,1,Hkv,C,hd]
+        p_, _, hkv, _, hd = ck.shape
+        if nb_new:
+            cap_k = kv["k_values"].shape[-1]
+            cap_v = kv["v_values"].shape[-1]
+            k_bm, k_vl, v_bm, v_vl = freeze_chunk_blocks(
+                ck[:, 0, :, :nb_new * bs], cv[:, 0, :, :nb_new * bs],
+                cfg.kv_k_sparsity, cfg.kv_v_sparsity, bs, cap_k, cap_v)
+            for key, upd in (("k_bitmap", k_bm), ("k_values", k_vl),
+                             ("v_bitmap", v_bm), ("v_values", v_vl)):
+                kv[key] = lax.dynamic_update_slice(
+                    kv[key], upd[:, None].astype(kv[key].dtype),
+                    (0, slot, 0, pb0, 0))
+        if rem:
+            for key, src in (("k_tail", ck), ("v_tail", cv)):
+                kv[key] = lax.dynamic_update_slice(
+                    kv[key], src[:, :, :, nb_new * bs:].astype(
+                        kv[key].dtype),
+                    (0, slot, 0, 0, 0))
+        new_layers[name] = {"kv": kv}
+
+    new_state = {**state, "layers": new_layers,
+                 "pos": state["pos"].at[slot].set(start + c),
+                 "prefix_blocks":
+                     state["prefix_blocks"].at[slot].set(pb0 + nb_new),
+                 "tail_len": state["tail_len"].at[slot].set(rem)}
+    return logits, new_state
 
 
 def forward_decode(params, cache, tokens: jax.Array, cfg, ctx

@@ -42,7 +42,9 @@ def compress_and_reduce(grads: Any, err_state: Any, axis_names,
     """
     n = 1
     for ax in axis_names:
-        n *= jax.lax.axis_size(ax)
+        # jax.lax.axis_size only exists on newer jax; psum(1) is portable
+        n *= (jax.lax.axis_size(ax) if hasattr(jax.lax, "axis_size")
+              else jax.lax.psum(1, ax))
 
     def one(g, e):
         acc = g.astype(jnp.float32) + e

@@ -1,1 +1,3 @@
-from .engine import Engine
+from .engine import Engine, ContinuousEngine, retrace_count
+from .cache_pool import CachePool
+from .scheduler import Scheduler, Request

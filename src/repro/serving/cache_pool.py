@@ -1,0 +1,186 @@
+"""Slot-pooled, jit-stable sparse-KV cache for continuous batching.
+
+The legacy one-shot engine stored the compressed prefix at whatever
+capacity the data produced, so every refreeze grew the cache shapes and
+forced a fresh ``jax.jit`` trace of the decode step — fatal for a serving
+engine.  The pool inverts that: **storage is sized once, data moves within
+it**.
+
+Per layer period, every slot owns
+
+* a fixed grid of ``max_blocks`` compressed sequence blocks — bitmap words
+  plus packed values at a *static* per-block capacity (``pack_blocks``
+  drops overflow consistently from bitmap and values, so the bitmap always
+  describes exactly what is stored);
+* a dense ``tail`` ring of ``tail`` tokens for freshly decoded K/V.
+
+Slot occupancy lives in three int32 ``[slots]`` vectors (``pos``,
+``prefix_blocks``, ``tail_len``); validity is *masked*, never re-shaped.
+Refreeze therefore folds a full tail into the next free prefix blocks **in
+place**: compress the tail of every full slot at the pool's static
+capacity, scatter the new blocks at each slot's own offset, bump the
+lengths.  No shape changes, no retrace — the decode step compiles exactly
+once per pool geometry, which is the property the paper's "cache frozen in
+model state" design needs to survive heavy multi-tenant traffic.
+
+Both dense and sparse KV live behind this one interface: a dense pool is
+just ``k_sparsity = v_sparsity = 0`` (full per-block capacity), for which
+compression is a bit-exact round trip.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse_format import _ceil_to, LANE
+from repro.core.sparse_kv import freeze_chunk_blocks
+from repro.models import lm
+
+
+@dataclasses.dataclass(frozen=True)
+class CachePool:
+    """Geometry + pure state-transition ops for the pooled serving cache.
+
+    The dataclass itself is immutable config; all state lives in the pytree
+    returned by :meth:`init_state` and flows through the pure methods below
+    (each is jitted exactly once by the engine).
+    """
+    cfg: Any
+    slots: int
+    max_blocks: int          # compressed-prefix capacity, in (bs,)-blocks
+    bs: int                  # tokens per compressed block
+    tail: int                # dense-tail ring size (tokens)
+    cap_k: int               # packed K values per block (static)
+    cap_v: int
+
+    @classmethod
+    def build(cls, cfg, slots: int, max_tokens: int,
+              bs: int = 0, capacity_slack: float = 1.25) -> "CachePool":
+        """Size a pool for ``slots`` concurrent requests of up to
+        ``max_tokens`` context each.
+
+        Per-block value capacity is the nominal density times the block
+        size, padded by ``capacity_slack`` and rounded to the lane size —
+        headroom for the unevenness of the paper's layer-wide magnitude
+        rule.  Zero sparsity always gets full capacity (exact round trip).
+        """
+        lm._attn_kinds(cfg)   # reject ssm/hybrid/encdec/frontend families
+        bs = bs or min(128, cfg.kv_tail)
+        assert cfg.kv_tail % bs == 0, (cfg.kv_tail, bs)
+        l = bs * cfg.hd
+
+        def cap(sparsity: float) -> int:
+            density = 1.0 - sparsity
+            if density >= 1.0:
+                return l
+            return min(_ceil_to(int(round(density * l * capacity_slack)),
+                                LANE), l)
+        max_blocks = max(-(-int(max_tokens) // bs), 1)
+        return cls(cfg=cfg, slots=slots, max_blocks=max_blocks, bs=bs,
+                   tail=cfg.kv_tail, cap_k=cap(cfg.kv_k_sparsity),
+                   cap_v=cap(cfg.kv_v_sparsity))
+
+    # -- geometry -----------------------------------------------------------
+    @property
+    def capacity_tokens(self) -> int:
+        """Max context length a slot may be admitted for.
+
+        Conservative: refreeze folds the whole live context into the prefix
+        over time, so admission bounds by the prefix storage alone — the
+        tail is working space, not extra capacity."""
+        return self.max_blocks * self.bs
+
+    def nbytes(self) -> int:
+        """Total pooled storage, for capacity planning."""
+        return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                   for l in jax.tree_util.tree_leaves(
+                       jax.eval_shape(self.init_state)))
+
+    # -- state --------------------------------------------------------------
+    def init_state(self) -> Dict[str, Any]:
+        """Zeroed pool pytree.  Leaves under ``layers`` carry a leading
+        period axis so the model's ``lax.scan`` slices them per layer."""
+        cfg = self.cfg
+        p = lm.period_len(cfg)
+        n_periods = cfg.n_layers // p
+        hkv, hd, dt = cfg.n_kv, cfg.hd, cfg.cdtype
+        b, sb, w = self.slots, self.max_blocks, self.bs * hd // 32
+
+        def kv_leaf():
+            return {
+                "k_bitmap": jnp.zeros((n_periods, b, hkv, sb, w), jnp.uint32),
+                "k_values": jnp.zeros((n_periods, b, hkv, sb, self.cap_k),
+                                      dt),
+                "v_bitmap": jnp.zeros((n_periods, b, hkv, sb, w), jnp.uint32),
+                "v_values": jnp.zeros((n_periods, b, hkv, sb, self.cap_v),
+                                      dt),
+                "k_tail": jnp.zeros((n_periods, b, hkv, self.tail, hd), dt),
+                "v_tail": jnp.zeros((n_periods, b, hkv, self.tail, hd), dt),
+            }
+        return {
+            "pos": jnp.zeros((b,), jnp.int32),
+            "prefix_blocks": jnp.zeros((b,), jnp.int32),
+            "tail_len": jnp.zeros((b,), jnp.int32),
+            "layers": {f"l{j}": {"kv": kv_leaf()} for j in range(p)},
+        }
+
+    # -- transitions (pure; the engine jits each exactly once) --------------
+    def refreeze(self, state: Dict[str, Any]) -> Dict[str, Any]:
+        """Fold every full tail into its slot's next free prefix blocks.
+
+        In-place at static shapes: compress all slots' tails at the pool
+        capacity, scatter each full slot's new blocks at its own
+        ``prefix_blocks`` offset, select per slot.  Slots whose tail is not
+        full come back bit-identical.  The caller must ensure no full slot
+        overflows ``max_blocks`` (see ``Scheduler`` admission).
+        """
+        cfg = self.cfg
+        t, tb = self.tail, self.tail // self.bs
+        full = state["tail_len"] >= t                           # [B]
+        pb = state["prefix_blocks"]
+        new_layers = {}
+        for name, leaf in state["layers"].items():
+            kv = leaf["kv"]
+            p_, b_, hkv, _, hd = kv["k_tail"].shape
+            flat = lambda a: a.reshape(p_ * b_, hkv, t, hd)
+            k_bm, k_vl, v_bm, v_vl = freeze_chunk_blocks(
+                flat(kv["k_tail"]), flat(kv["v_tail"]),
+                cfg.kv_k_sparsity, cfg.kv_v_sparsity,
+                self.bs, self.cap_k, self.cap_v)
+            unflat = lambda a: a.reshape((p_, b_) + a.shape[1:])
+
+            def write(dst, upd):
+                # per-slot offset scatter over the block axis
+                out = jax.vmap(
+                    lambda db, ub, off: jax.lax.dynamic_update_slice(
+                        db, ub.astype(db.dtype), (0, 0, off, 0)),
+                    in_axes=(1, 1, 0), out_axes=1)(dst, upd, pb)
+                sel = full.reshape((1, b_) + (1,) * (dst.ndim - 2))
+                return jnp.where(sel, out, dst)
+
+            new_layers[name] = {"kv": {
+                **kv,
+                "k_bitmap": write(kv["k_bitmap"], unflat(k_bm)),
+                "k_values": write(kv["k_values"], unflat(k_vl)),
+                "v_bitmap": write(kv["v_bitmap"], unflat(v_bm)),
+                "v_values": write(kv["v_values"], unflat(v_vl)),
+            }}
+        grow = jnp.where(full, tb, 0).astype(jnp.int32)
+        return {**state, "layers": new_layers,
+                "prefix_blocks": pb + grow,
+                "tail_len": jnp.where(full, 0, state["tail_len"])}
+
+    def release(self, state: Dict[str, Any], slot: jax.Array
+                ) -> Dict[str, Any]:
+        """Recycle a slot: zero its lengths.  Stale prefix/tail contents
+        stay in storage but are fully masked (validity is length-gated
+        everywhere), so the next admission simply overwrites them."""
+        keep = jnp.arange(self.slots) != slot
+        z = lambda a: jnp.where(keep, a, 0)
+        return {**state, "pos": z(state["pos"]),
+                "prefix_blocks": z(state["prefix_blocks"]),
+                "tail_len": z(state["tail_len"])}

@@ -1,19 +1,25 @@
-"""Serving engine: prefill -> freeze (compress) -> token-by-token decode.
+"""Serving engines over the paper's §6.2 compressed-KV design.
 
-This is the paper's §6.2 serving design, end to end:
+Two engines share the kernels but differ in how they treat traffic:
 
-1. ``prefill`` runs the full forward over the prompt and collects every
-   layer's K/V (or recurrent state);
-2. the prefill cache is magnitude-pruned and packed into the frozen
-   compressed prefix (offline preprocessing, exactly like the paper's
-   weight packing — "not suitable for dynamic KV values but remains
-   effective for cached prompts");
-3. ``generate`` decodes one token at a time against the compressed prefix +
-   dense tail, optionally refreezing when the tail fills.
+* :class:`Engine` — the legacy **one-shot** engine: one static batch,
+  prefill -> freeze -> decode.  Refreezing grows the cache shapes, so each
+  refreeze re-traces the jitted decode.  Kept as the numerical baseline
+  and for single-batch benchmarking.
+
+* :class:`ContinuousEngine` — the **continuous-batching** engine: requests
+  stream through a :class:`~repro.serving.cache_pool.CachePool` of
+  fixed-geometry slots under a :class:`~repro.serving.scheduler.Scheduler`.
+  Chunked prefill interleaves with decode ticks, slots recycle on EOS, and
+  every jitted step — decode over ``(params, pool_state, tokens,
+  slot_mask)``, per-chunk-length prefill, refreeze, release — compiles
+  exactly once.  This is the paper's "cache frozen in model state" design
+  made multi-tenant: refreeze folds tails into the prefix *in place* at
+  static shapes instead of reallocating.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +29,18 @@ from repro.core.sparse_kv import SparseKVCache, freeze_prefix
 from repro.distributed import NULL_CTX
 from repro.models import lm
 from repro.models.attention import DenseKVCache
+
+from .cache_pool import CachePool
+from .scheduler import Scheduler
+
+
+def retrace_count(jitted) -> int:
+    """Number of traces a ``jax.jit``-wrapped callable has accumulated.
+
+    The continuous engine's invariant is that this stays flat after warmup
+    (one trace per shape family); tests assert it directly.
+    """
+    return int(jitted._cache_size())
 
 
 class Engine:
@@ -146,16 +164,159 @@ class Engine:
         return {**cache, "layers": layers}
 
     def _repack(self, kvc, cap_k, cap_v):
-        from repro.core.sparse_kv import SparseKVCache
+        """Re-store one period's cache at the stack-wide common capacity.
 
-        def grow(sw, cap):
-            pad = cap - sw.capacity
-            if pad <= 0:
-                return sw
-            from repro.core.sparse_format import BlockSparseWeight
-            vals = jnp.pad(sw.values,
-                           [(0, 0)] * (sw.values.ndim - 1) + [(0, pad)])
-            return BlockSparseWeight(sw.bitmap, vals, sw.scale, sw.shape,
-                                     sw.block, sw.packed4)
-        return SparseKVCache(grow(kvc.k_sp, cap_k), grow(kvc.v_sp, cap_v),
+        Uses :func:`repack_capacity`, which keeps bitmap and values
+        consistent in both directions (the old grow-only pad left the
+        bitmap claiming truncated values when capacities shrank)."""
+        from repro.core.sparse_format import repack_capacity
+        return SparseKVCache(repack_capacity(kvc.k_sp, cap_k),
+                             repack_capacity(kvc.v_sp, cap_v),
                              kvc.k_tail, kvc.v_tail, kvc.tail_len)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+class ContinuousEngine:
+    """Continuous-batching serving engine on the pooled sparse-KV cache.
+
+    One engine tick (:meth:`step`):
+
+    1. **refreeze** — any decoding slot whose tail ring is full gets its
+       tail pruned + folded into its compressed prefix, in place;
+    2. **admission / chunked prefill** — the oldest request owed prompt
+       work gets one chunk processed against its slot's frozen prefix;
+       finishing the prompt yields the request's first token;
+    3. **decode** — every decoding slot advances one token in a single
+       batched step jitted over ``(params, pool_state, tokens, slot_mask)``.
+
+    All device work reuses four compiled functions (decode / refreeze /
+    release, plus one prefill per distinct chunk length); admissions,
+    evictions and refreezes never retrace — see :func:`retrace_count`.
+    Host<->device traffic per tick is one token vector; slot lengths are
+    mirrored host-side.
+    """
+
+    def __init__(self, params, cfg, ctx=NULL_CTX, slots: int = 4,
+                 max_tokens: int = 0, bs: int = 0,
+                 prefill_chunk: Optional[int] = None):
+        self.params = params
+        self.cfg = cfg
+        self.ctx = ctx
+        max_tokens = max_tokens or 4 * cfg.kv_tail
+        if not bs:
+            # largest tail divisor <= min(128, prefill_chunk): chunks stay
+            # block-aligned and the tail folds in whole blocks
+            limit = min(128, prefill_chunk or 128, cfg.kv_tail)
+            bs = next(d for d in range(limit, 0, -1)
+                      if cfg.kv_tail % d == 0)
+        self.pool = CachePool.build(cfg, slots, max_tokens, bs=bs)
+        self.state = self.pool.init_state()
+        self.scheduler = Scheduler(slots, self.pool.capacity_tokens,
+                                   self.pool.bs, chunk=prefill_chunk)
+        bs_ = self.pool.bs
+
+        # greedy argmax stays on device: only [slots]-sized int32 token
+        # vectors cross the host boundary each tick, never [slots, vocab]
+        # logits
+        def _decode(p, st, t, m):
+            logits, st = lm.forward_decode_pooled(p, st, t, m, cfg, ctx, bs_)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), st
+
+        def _prefill(p, st, t, s):
+            logits, st = lm.forward_prefill_chunk(p, st, t, s, cfg, ctx, bs_)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), st
+
+        self._decode = jax.jit(_decode)
+        self._prefill_chunk = jax.jit(_prefill)
+        self._refreeze = jax.jit(self.pool.refreeze)
+        self._release = jax.jit(self.pool.release)
+        # host mirrors (avoid a device sync per tick)
+        self._tail_len = np.zeros(slots, np.int64)
+        self._last_tok: Dict[int, int] = {}           # slot -> last token
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int,
+               eos_id: Optional[int] = None) -> int:
+        """Queue a request (any iterable of token ids).  Returns its id."""
+        return self.scheduler.submit([int(t) for t in np.asarray(prompt)],
+                                     max_new_tokens, eos_id)
+
+    def run(self) -> Dict[int, List[int]]:
+        """Tick until every submitted request finished; returns
+        ``{request id: generated tokens}`` (greedy decoding)."""
+        while not self.scheduler.done():
+            self.step()
+        return {rid: req.generated
+                for rid, req in self.scheduler.finished.items()}
+
+    def generate_batch(self, prompts: jax.Array, steps: int) -> jax.Array:
+        """Convenience mirror of the legacy ``Engine.generate``: submit all
+        rows of ``prompts [B, S]``, return ``[B, steps + 1]`` greedy tokens
+        (the first comes from the prompt's last logits, like the legacy
+        engine's prefill token)."""
+        rids = [self.submit(row, steps + 1) for row in np.asarray(prompts)]
+        out = self.run()
+        return jnp.asarray([out[r] for r in rids], jnp.int32)
+
+    def trace_counts(self) -> Dict[str, int]:
+        return {"decode": retrace_count(self._decode),
+                "prefill_chunk": retrace_count(self._prefill_chunk),
+                "refreeze": retrace_count(self._refreeze),
+                "release": retrace_count(self._release)}
+
+    # -- one tick -----------------------------------------------------------
+    def step(self) -> None:
+        sch = self.scheduler
+        # admission: fill every free slot from the queue
+        while sch.queue and sch.free_slots():
+            sch.admit()
+
+        # refreeze before decode appends: any decoding slot with a full tail
+        if any(self._tail_len[s] >= self.pool.tail
+               for s in sch.decoding_slots()):
+            self.state = self._refreeze(self.state)
+            for s in range(self.pool.slots):
+                if self._tail_len[s] >= self.pool.tail:
+                    self._tail_len[s] = 0
+
+        # one prefill chunk for the oldest request still owed prompt work
+        req = sch.next_prefill()
+        if req is not None:
+            chunk = sch.prefill_chunk(req)
+            toks = jnp.asarray(np.asarray(chunk, np.int32)[None, :])
+            tok, self.state = self._prefill_chunk(
+                self.params, self.state, toks, jnp.int32(req.slot))
+            # device-side tail_len after a chunk = chunk_len % bs, and all
+            # chunks before the last are block-aligned
+            self._tail_len[req.slot] = req.prefill_done % self.pool.bs
+            if req.prefill_done >= len(req.prompt):
+                self._emit(req.slot, int(np.asarray(tok)[0]))
+
+        # decode tick for every slot with a live request past prefill
+        slots = sch.decoding_slots()
+        if not slots:
+            return
+        b = self.pool.slots
+        tokens = np.zeros((b, 1), np.int32)
+        mask = np.zeros((b,), bool)
+        for s in slots:
+            tokens[s, 0] = self._last_tok[s]
+            mask[s] = True
+        tok, self.state = self._decode(
+            self.params, self.state, jnp.asarray(tokens), jnp.asarray(mask))
+        picked = np.asarray(tok)
+        for s in slots:
+            self._tail_len[s] += 1
+            self._emit(s, int(picked[s]))
+
+    def _emit(self, slot: int, tok: int) -> None:
+        """Record a generated token; recycle the slot if that finished it."""
+        if self.scheduler.record_token(slot, tok):
+            self.state = self._release(self.state, jnp.int32(slot))
+            self._tail_len[slot] = 0
+            self._last_tok.pop(slot, None)
+        else:
+            self._last_tok[slot] = tok

@@ -1,0 +1,136 @@
+"""Request scheduler for the continuous-batching engine.
+
+Pure host-side bookkeeping — no jax in here.  The scheduler owns the
+request lifecycle (queued -> prefilling -> decoding -> finished), maps live
+requests onto cache-pool slots, splits prompts into block-aligned prefill
+chunks, and recycles slots on EOS / length exhaustion.  The engine asks it
+three questions per tick: *which request gets a prefill chunk*, *which
+slots decode*, and *who is finished*.
+
+Admission control: a request is only admitted when a slot is free AND its
+worst-case context (prompt + max_new_tokens) fits the pool's per-slot
+token capacity — the refreeze scatter is unguarded on device, so the
+scheduler is the component that makes overflow impossible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request."""
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    # -- lifecycle state (scheduler-owned) --
+    slot: int = -1
+    prefill_done: int = 0            # prompt tokens already chunk-prefilled
+    generated: List[int] = dataclasses.field(default_factory=list)
+    finished: bool = False
+
+    @property
+    def decoding(self) -> bool:
+        return (self.slot >= 0 and not self.finished
+                and self.prefill_done >= len(self.prompt))
+
+
+class Scheduler:
+    """Maps requests onto ``slots`` pool slots with chunked prefill.
+
+    ``chunk`` is the max prompt tokens prefill processes per engine tick
+    (rounded down to a block multiple for every chunk but the last, so the
+    pool's frozen prefix stays block-aligned).  ``capacity_tokens`` is the
+    pool's per-slot limit used for admission.
+    """
+
+    def __init__(self, slots: int, capacity_tokens: int, bs: int,
+                 chunk: Optional[int] = None):
+        assert chunk is None or chunk >= bs, (chunk, bs)
+        self.slots = slots
+        self.capacity_tokens = capacity_tokens
+        self.bs = bs
+        self.chunk = (chunk // bs * bs) if chunk else None
+        self.queue: Deque[Request] = deque()
+        self.active: Dict[int, Request] = {}          # slot -> request
+        self.finished: Dict[int, Request] = {}        # rid -> request
+        self._next_rid = 0
+
+    # -- submission ---------------------------------------------------------
+    def submit(self, prompt: List[int], max_new_tokens: int,
+               eos_id: Optional[int] = None) -> int:
+        """Queue a request; returns its id.  Raises if it can never fit."""
+        if not prompt:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        need = len(prompt) + max_new_tokens
+        if need > self.capacity_tokens:
+            raise ValueError(
+                f"request needs {need} tokens; pool slots hold "
+                f"{self.capacity_tokens}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, list(prompt), max_new_tokens, eos_id))
+        return rid
+
+    # -- per-tick queries ---------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [s for s in range(self.slots) if s not in self.active]
+
+    def admit(self) -> Optional[Request]:
+        """Move the oldest queued request into a free slot (if any)."""
+        if not self.queue:
+            return None
+        free = self.free_slots()
+        if not free:
+            return None
+        req = self.queue.popleft()
+        req.slot = free[0]
+        self.active[req.slot] = req
+        return req
+
+    def next_prefill(self) -> Optional[Request]:
+        """The request owed a prefill chunk this tick (oldest first)."""
+        for req in sorted(self.active.values(), key=lambda r: r.rid):
+            if req.prefill_done < len(req.prompt):
+                return req
+        return None
+
+    def prefill_chunk(self, req: Request) -> List[int]:
+        """Slice the next chunk off ``req``'s prompt and mark it done.
+
+        Every chunk except the last is a multiple of ``bs`` (the frozen
+        prefix grows whole blocks); the final chunk carries the remainder
+        into the dense tail.
+        """
+        left = len(req.prompt) - req.prefill_done
+        take = left if self.chunk is None else min(self.chunk, left)
+        if take < left:                   # not final: keep block-aligned
+            take = take // self.bs * self.bs
+        chunk = req.prompt[req.prefill_done:req.prefill_done + take]
+        req.prefill_done += take
+        return chunk
+
+    def decoding_slots(self) -> List[int]:
+        return [s for s, r in self.active.items() if r.decoding]
+
+    # -- completion ---------------------------------------------------------
+    def record_token(self, slot: int, token: int) -> bool:
+        """Append a generated token; returns True if the request finished
+        (EOS or max_new_tokens) and its slot should be released."""
+        req = self.active[slot]
+        req.generated.append(token)
+        if ((req.eos_id is not None and token == req.eos_id)
+                or len(req.generated) >= req.max_new_tokens):
+            req.finished = True
+            del self.active[slot]
+            self.finished[req.rid] = req
+            return True
+        return False
+
+    def done(self) -> bool:
+        return not self.queue and not self.active

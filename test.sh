@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 test entry point.
+#
+# 8 simulated host devices so the sharding / context-parallel tests see a
+# mesh (the dry-run subprocesses override XLA_FLAGS themselves); repo code
+# imports as `repro` via PYTHONPATH=src.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+exec python -m pytest -x -q "$@"

@@ -53,6 +53,73 @@ def test_refreeze_prunes_new_tokens():
     assert 0.2 < frac_zero < 0.45        # ~30% K pruning over prefix+tail
 
 
+def test_pack_capacity_truncation_keeps_bitmap_consistent():
+    """Regression: pack() at a capacity below a block's nnz used to keep
+    every mask bit while silently dropping the overflow values — unpack
+    then gathered garbage for ~1/3 of the entries.  The bitmap must now
+    describe exactly what is stored."""
+    from repro.core.sparse_format import pack, unpack
+    w = rand((128, 64), 7)
+    mask = jnp.abs(w) > 0.5                      # nnz >> capacity
+    sw = pack(w, mask, block=(128, 64), capacity=2048)
+    nnz = int(np.unpackbits(np.asarray(sw.bitmap).view(np.uint8)).sum())
+    assert nnz == 2048                           # bits == stored values
+    back = np.asarray(unpack(sw))
+    kept = back != 0
+    # every claimed entry round-trips its true value, and the kept set is
+    # the magnitude-top-capacity of the requested mask
+    np.testing.assert_array_equal(back[kept], np.asarray(w)[kept])
+    dropped_max = np.abs(np.asarray(w))[np.asarray(mask) & ~kept].max()
+    assert dropped_max <= np.abs(back[kept]).min() + 1e-7
+
+
+def test_repack_capacity_roundtrip_grow_and_shrink():
+    """Regression for Engine._repack: growing pads bit-exactly; shrinking
+    re-ranks and keeps bitmap/values consistent."""
+    from repro.core.sparse_format import pack, unpack, repack_capacity
+    w = rand((256, 64), 8)
+    mask = jnp.abs(w) > 0.9
+    sw = pack(w, mask, block=(128, 64))          # natural capacity
+    grown = repack_capacity(sw, sw.capacity + 256)
+    np.testing.assert_array_equal(np.asarray(unpack(grown)),
+                                  np.asarray(unpack(sw)))
+    shrunk = repack_capacity(sw, 128)
+    back = np.asarray(unpack(shrunk))
+    kept = back != 0
+    np.testing.assert_array_equal(back[kept], np.asarray(w)[kept])
+    nnz = int(np.unpackbits(np.asarray(shrunk.bitmap).view(np.uint8)).sum())
+    assert nnz == kept.sum() and nnz <= 2 * 128  # <= Kb blocks * capacity
+
+
+def test_engine_repack_preserves_decode_attention():
+    """Stacked-period repack at a common capacity must not change what any
+    period decodes to (the motivating bug for the pooled redesign)."""
+    from repro.serving.engine import Engine
+    from repro.core import freeze_prefix
+
+    class _E(Engine):                            # repack without a model
+        def __init__(self):
+            pass
+    b, hkv, s, d = 1, 2, 128, 64
+    caches = [freeze_prefix(rand((b, hkv, s, d), 30 + i) * (1.0 + i),
+                            rand((b, hkv, s, d), 40 + i), 0.3, 0.5,
+                            tail_size=128, bs=128) for i in range(2)]
+    cap_k = max(c.k_sp.capacity for c in caches)
+    cap_v = max(c.v_sp.capacity for c in caches)
+    eng = _E()
+    q = rand((b, 4, d), 9)
+    sm = 1.0 / d ** 0.5
+    for c in caches:
+        r = eng._repack(c, cap_k, cap_v)
+        assert r.k_sp.capacity == cap_k and r.v_sp.capacity == cap_v
+        o1 = ref.sparse_decode_attention_ref(q, c.k_sp, c.v_sp, sm,
+                                             c.k_tail, c.v_tail, c.tail_len)
+        o2 = ref.sparse_decode_attention_ref(q, r.k_sp, r.v_sp, sm,
+                                             r.k_tail, r.v_tail, r.tail_len)
+        np.testing.assert_allclose(np.asarray(o2), np.asarray(o1),
+                                   rtol=1e-5, atol=1e-5)
+
+
 def test_engine_generates_past_tail_capacity():
     """Decoding more tokens than the tail holds triggers refreeze and keeps
     generating valid tokens."""

@@ -1,0 +1,207 @@
+"""Continuous-batching serving: pooled cache, scheduler, and the zero-
+retrace invariant.
+
+The acceptance bar for the pooled redesign:
+* continuous-batching greedy tokens == legacy one-shot engine tokens,
+  token for token, across a refreeze and with chunked prefill;
+* >=3 refreezes and >=2 admissions/evictions add ZERO jax.jit retraces
+  (the decode step compiles exactly once per pool geometry).
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core.sparse_kv import freeze_chunk_blocks, pooled_view
+from repro.core.sparse_format import unpack
+from repro.models import lm
+from repro.serving import (Engine, ContinuousEngine, CachePool, Scheduler,
+                           retrace_count)
+
+
+def _setup(seed=0, b=2, s=32, kv_tail=32, **cfg_kw):
+    cfg = get_config("qwen3-0.6b").reduced()
+    cfg = dataclasses.replace(cfg, kv_k_sparsity=0.0, kv_v_sparsity=0.0,
+                              kv_tail=kv_tail, **cfg_kw)
+    params = lm.init_params(cfg, jax.random.PRNGKey(seed))
+    toks = jnp.asarray(np.random.default_rng(seed).integers(
+        0, cfg.vocab, (b, s)), jnp.int32)
+    return cfg, params, toks
+
+
+# ---------------------------------------------------------------------------
+# pooled primitives
+# ---------------------------------------------------------------------------
+
+def test_freeze_chunk_blocks_exact_at_zero_sparsity():
+    rng = np.random.default_rng(0)
+    b, hkv, c, d, bs = 2, 2, 32, 16, 16
+    k = jnp.asarray(rng.normal(size=(b, hkv, c, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, hkv, c, d)).astype(np.float32))
+    cap = bs * d
+    k_bm, k_vl, v_bm, v_vl = freeze_chunk_blocks(k, v, 0.0, 0.0, bs,
+                                                 cap, cap)
+    back = unpack(pooled_view(k_bm, k_vl, bs, d))      # [B, Hkv, C, D]
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(k))
+    back_v = unpack(pooled_view(v_bm, v_vl, bs, d))
+    np.testing.assert_array_equal(np.asarray(back_v), np.asarray(v))
+
+
+def test_freeze_chunk_blocks_capped_capacity_is_consistent():
+    """With a capacity below the pruned density, the bitmap must describe
+    exactly the stored values (the legacy repack bug dropped values but
+    kept their bits)."""
+    rng = np.random.default_rng(1)
+    b, hkv, c, d, bs = 1, 2, 32, 16, 16
+    k = jnp.asarray(rng.normal(size=(b, hkv, c, d)).astype(np.float32))
+    cap = 128                                          # < bs*d*0.7
+    k_bm, k_vl, _, _ = freeze_chunk_blocks(k, k, 0.3, 0.3, bs, cap, cap)
+    nnz = int(np.unpackbits(np.asarray(k_bm).view(np.uint8)).sum())
+    assert nnz <= k_bm.shape[2] * b * hkv * cap
+    back = unpack(pooled_view(k_bm, k_vl, bs, d))
+    # every bitmap-claimed entry round-trips its true value
+    mask = np.asarray(back) != 0
+    np.testing.assert_array_equal(np.asarray(back)[mask],
+                                  np.asarray(k)[mask])
+
+
+def test_pool_refreeze_in_place_static_shapes():
+    cfg, params, _ = _setup(kv_tail=16)
+    pool = CachePool.build(cfg, slots=2, max_tokens=64, bs=16)
+    state = pool.init_state()
+    shapes = jax.tree_util.tree_map(lambda a: a.shape, state)
+    rng = np.random.default_rng(2)
+    # slot 0: full tail; slot 1: half-full (must come back bit-identical)
+    for name, leaf in state["layers"].items():
+        kv = leaf["kv"]
+        kv["k_tail"] = jnp.asarray(rng.normal(
+            size=kv["k_tail"].shape)).astype(kv["k_tail"].dtype)
+        kv["v_tail"] = kv["k_tail"] * 0.5
+    state["tail_len"] = jnp.asarray([16, 8], jnp.int32)
+    state["pos"] = jnp.asarray([16, 8], jnp.int32)
+    out = jax.jit(pool.refreeze)(state)
+    assert jax.tree_util.tree_map(lambda a: a.shape, out) == shapes
+    assert out["prefix_blocks"].tolist() == [1, 0]
+    assert out["tail_len"].tolist() == [0, 8]
+    kv = out["layers"]["l0"]["kv"]
+    src = state["layers"]["l0"]["kv"]
+    # slot 0 block 0 holds the folded tail exactly (zero sparsity)
+    back = unpack(pooled_view(kv["k_bitmap"][0], kv["k_values"][0],
+                              pool.bs, cfg.hd))
+    np.testing.assert_array_equal(
+        np.asarray(back[0, :, :16]),
+        np.asarray(src["k_tail"][0, 0].astype(back.dtype)))
+    # slot 1 prefix untouched (still empty)
+    assert not np.asarray(kv["k_bitmap"])[:, 1].any()
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_admission_when_pool_full():
+    sch = Scheduler(slots=2, capacity_tokens=128, bs=16)
+    rids = [sch.submit([1, 2, 3], 4) for _ in range(3)]
+    assert sch.admit().rid == rids[0]
+    assert sch.admit().rid == rids[1]
+    assert sch.admit() is None                    # pool full
+    assert len(sch.queue) == 1
+    # finishing one frees its slot for the queued request
+    slot = sch.active[0].slot
+    for t in (7, 8, 9, 10):
+        done = sch.record_token(slot, t)
+    assert done and slot in sch.free_slots()
+    assert sch.admit().rid == rids[2]
+    assert sch.active[slot].rid == rids[2]        # slot recycled
+
+
+def test_pool_rejects_unsupported_families():
+    """Families the pooled path cannot serve must fail loudly at build
+    time, not silently drop cross-attention / frontend / recurrent state."""
+    for arch in ("rwkv6-7b", "jamba-1.5-large-398b", "seamless-m4t-medium",
+                 "internvl2-1b"):
+        with pytest.raises(AssertionError):
+            CachePool.build(get_config(arch).reduced(), 2, 64)
+
+
+def test_scheduler_eos_and_capacity():
+    sch = Scheduler(slots=1, capacity_tokens=64, bs=16)
+    with pytest.raises(ValueError):
+        sch.submit(list(range(60)), 10)           # can never fit
+    with pytest.raises(ValueError):
+        sch.submit([], 4)                         # empty prompt
+    with pytest.raises(ValueError):
+        sch.submit([1], 0)                        # nothing to generate
+    rid = sch.submit([1, 2], 40, eos_id=42)
+    req = sch.admit()
+    assert not sch.record_token(req.slot, 7)
+    assert sch.record_token(req.slot, 42)         # EOS finishes early
+    assert sch.finished[rid].generated == [7, 42]
+
+
+def test_scheduler_chunking_block_aligned():
+    sch = Scheduler(slots=1, capacity_tokens=256, bs=16, chunk=40)
+    assert sch.chunk == 32                        # rounded down to blocks
+    rid = sch.submit(list(range(70)), 1)
+    req = sch.admit()
+    sizes = []
+    while req.prefill_done < len(req.prompt):
+        sizes.append(len(sch.prefill_chunk(req)))
+    assert sizes == [32, 32, 6]                   # remainder only at the end
+    assert rid == req.rid
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence + the zero-retrace acceptance bar
+# ---------------------------------------------------------------------------
+
+def test_continuous_matches_legacy_tokens():
+    """Interleaved chunked prefill + decode + refreeze must be greedily
+    token-identical to the legacy one-shot engine."""
+    cfg, params, toks = _setup(b=2, s=32, kv_tail=32)
+    legacy = Engine(params, cfg, kv_mode="sparse")
+    out_leg, _ = legacy.generate({"tokens": toks}, steps=40)  # 1+ refreeze
+
+    eng = ContinuousEngine(params, cfg, slots=2, max_tokens=128, bs=16,
+                           prefill_chunk=16)
+    out = eng.generate_batch(toks, steps=40)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_leg))
+
+
+def test_zero_retraces_across_refreezes_and_evictions():
+    """>=3 refreezes and >=2 admissions/evictions after warmup add zero
+    jax.jit traces; the decode step compiles exactly once."""
+    cfg, params, toks = _setup(b=2, s=16, kv_tail=16)
+    eng = ContinuousEngine(params, cfg, slots=2, max_tokens=128, bs=16)
+
+    # warmup wave: touches every compiled path once (prefill len 16,
+    # decode, >=1 refreeze at tail=16, release on completion)
+    eng.generate_batch(toks, steps=20)
+    warm = eng.trace_counts()
+    assert warm["decode"] == 1
+
+    # second + third waves: 4 more requests through 2 slots -> >=2
+    # admissions and evictions; 56 decode steps -> >=3 refreezes per slot
+    prompts = np.random.default_rng(3).integers(0, cfg.vocab, (4, 16))
+    rids = [eng.submit(row, 56) for row in prompts]
+    res = eng.run()
+    assert [len(res[r]) for r in rids] == [56] * 4
+    after = eng.trace_counts()
+    assert after == warm, f"retraced: {warm} -> {after}"
+
+
+def test_uneven_prompt_lengths_and_tail_remainders():
+    """Prompts that are not block multiples park a remainder in the dense
+    tail; decode + refreeze must still match a fresh engine run exactly."""
+    cfg, params, _ = _setup(kv_tail=16)
+    toks = jnp.asarray(np.random.default_rng(5).integers(
+        0, cfg.vocab, (2, 21)), jnp.int32)          # 21 = 16 + 5 remainder
+    eng = ContinuousEngine(params, cfg, slots=2, max_tokens=128, bs=16)
+    out1 = eng.generate_batch(toks, steps=30)
+    # same prompts again through the (recycled) pool -> same tokens
+    out2 = eng.generate_batch(toks, steps=30)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert out1.shape == (2, 31)
