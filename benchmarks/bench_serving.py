@@ -1,4 +1,5 @@
-"""Serving-engine benchmark: legacy static batch vs continuous batching.
+"""Serving-engine benchmark: legacy static batch vs continuous batching,
+and the cost of the per-slot sampling lanes.
 
 Measures, at batch/slot counts 1/4/8 on ``qwen3-0.6b --reduced``:
 
@@ -7,7 +8,11 @@ Measures, at batch/slot counts 1/4/8 on ``qwen3-0.6b --reduced``:
   pooled ``ContinuousEngine`` (chunked prefill interleaved with decode,
   in-place refreeze, decode compiled exactly once);
 * the decode-step retrace count of each across the run — the compile-time
-  tax the pooled redesign removes.
+  tax the pooled redesign removes;
+* **sampled vs greedy decode ticks** on one engine: the on-device
+  temperature/top-k/top-p lanes ride inside the same compiled decode step,
+  so switching every request from greedy to seeded sampling must add no
+  traces and <5% tick time (reported as ``overhead``).
 
   PYTHONPATH=src python -m benchmarks.bench_serving
 """
@@ -22,7 +27,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import lm
-from repro.serving import Engine, ContinuousEngine, retrace_count
+from repro.serving import (Engine, ContinuousEngine, SamplingParams,
+                           retrace_count)
 
 from .common import emit
 
@@ -44,9 +50,11 @@ def run():
                            jnp.int32)
 
         legacy = Engine(params, cfg, kv_mode="sparse")
-        legacy.generate({"tokens": toks}, steps=2)          # compile
+        legacy.generate({"tokens": toks},
+                        SamplingParams(max_new_tokens=3))       # compile
         t0 = time.perf_counter()
-        legacy.generate({"tokens": toks}, steps=STEPS)
+        legacy.generate({"tokens": toks},
+                        SamplingParams(max_new_tokens=STEPS))
         dt = time.perf_counter() - t0
         legacy_traces = retrace_count(legacy._decode)
         emit(f"serving/legacy/batch={b}", dt * 1e6,
@@ -54,13 +62,38 @@ def run():
 
         eng = ContinuousEngine(params, cfg, slots=b,
                                max_tokens=PROMPT + STEPS + KV_TAIL)
-        eng.generate_batch(toks[:, :PROMPT], steps=2)       # compile
+        eng.generate_batch(toks[:, :PROMPT],
+                           SamplingParams(max_new_tokens=3))    # compile
         t0 = time.perf_counter()
-        eng.generate_batch(toks, steps=STEPS)
+        eng.generate_batch(toks, SamplingParams(max_new_tokens=STEPS))
         dt = time.perf_counter() - t0
         emit(f"serving/continuous/batch={b}", dt * 1e6,
              f"tok_s={b * STEPS / dt:.1f};"
              f"decode_traces={eng.trace_counts()['decode']}")
+
+    # -- sampled vs greedy decode ticks (one engine, same compiled step) ----
+    b = 4
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, PROMPT)), jnp.int32)
+    eng = ContinuousEngine(params, cfg, slots=b,
+                           max_tokens=PROMPT + STEPS + KV_TAIL)
+    grid = {
+        "greedy": SamplingParams(max_new_tokens=STEPS),
+        "sampled": SamplingParams(temperature=0.8, top_k=40, top_p=0.95,
+                                  seed=0, max_new_tokens=STEPS),
+    }
+    for sp in grid.values():                                    # compile
+        eng.generate_batch(toks, dataclasses.replace(sp, max_new_tokens=3))
+    times = {}
+    for label, sp in grid.items():
+        t0 = time.perf_counter()
+        eng.generate_batch(toks, sp)
+        times[label] = time.perf_counter() - t0
+    overhead = times["sampled"] / times["greedy"] - 1.0
+    for label, dt in times.items():
+        emit(f"serving/decode_{label}/batch={b}", dt * 1e6,
+             f"tok_s={b * STEPS / dt:.1f};"
+             f"decode_traces={eng.trace_counts()['decode']};"
+             f"overhead={overhead * 100:+.1f}%")
 
 
 if __name__ == "__main__":

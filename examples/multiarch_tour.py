@@ -17,7 +17,7 @@ from repro.core import sparsity_report
 from repro.distributed import NULL_CTX
 from repro.distributed.convert_plan import convert_concrete
 from repro.models import lm
-from repro.serving import Engine
+from repro.serving import Engine, SamplingParams
 
 ARCHS = ["qwen3-0.6b", "phi3.5-moe-42b-a6.6b", "seamless-m4t-medium",
          "rwkv6-7b", "jamba-1.5-large-398b"]
@@ -37,7 +37,7 @@ for arch in ARCHS:
         batch["frontend_embeds"] = jnp.zeros(
             (2, cfg.frontend_tokens, cfg.d_model), jnp.float32)
     eng = Engine(sp, cfg, kv_mode="sparse")
-    toks, cache = eng.generate(batch, steps=4)
+    toks, cache = eng.generate(batch, SamplingParams(max_new_tokens=5))
     kinds = {lm.layer_kind(cfg, j)[0] for j in range(lm.period_len(cfg))}
     print(f"{arch:<26} [{cfg.family:>6}] mixers={sorted(kinds)} "
           f"{len(rep):>2} sparse weights {d/1e6:6.1f}->{c/1e6:6.1f}MB "

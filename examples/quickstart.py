@@ -36,7 +36,7 @@ from repro.configs import get_config
 from repro.models import lm
 from repro.distributed import NULL_CTX
 from repro.distributed.convert_plan import convert_concrete
-from repro.serving import Engine
+from repro.serving import Engine, SamplingParams
 
 cfg = get_config("llama3-8b").reduced()
 params = lm.init_params(cfg, jax.random.PRNGKey(0))
@@ -49,6 +49,7 @@ print(f"converted {len(rep)} linear weights: "
 
 eng = Engine(sparse_params, cfg, kv_mode="sparse")
 prompts = jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)), jnp.int32)
-tokens, _ = eng.generate({"tokens": prompts}, steps=8)
+tokens, _ = eng.generate({"tokens": prompts},
+                         SamplingParams(max_new_tokens=9))
 print("decoded tokens:", np.asarray(tokens)[0])
 print("OK")

@@ -7,10 +7,12 @@ continuous-batching engine.
 
 Flow: init model -> offline preprocessing (prune+pack weights, the paper's
 "few minutes for 8B models" step) -> submit a request stream with mixed
-prompt/output lengths -> the scheduler interleaves chunked prefill with
-decode ticks over the pooled compressed cache (refreeze folds tails into
-each slot's frozen prefix in place; slots recycle as requests finish) ->
-report throughput, retrace counts, and bytes.
+prompt/output lengths AND mixed per-request SamplingParams (greedy and
+seeded temperature/top-k/top-p lanes share one batched decode step) -> the
+scheduler interleaves chunked prefill with decode ticks over the pooled
+compressed cache (refreeze folds tails into each slot's frozen prefix in
+place; slots recycle as requests finish) -> stream RequestOutputs as
+tokens land -> report throughput, per-request latency, retrace counts.
 """
 import argparse
 import time
@@ -25,7 +27,7 @@ from repro.data import DataConfig, host_batch
 from repro.distributed import NULL_CTX
 from repro.distributed.convert_plan import convert_concrete
 from repro.models import lm
-from repro.serving import ContinuousEngine
+from repro.serving import ContinuousEngine, SamplingParams
 
 
 def main():
@@ -75,14 +77,29 @@ def main():
     for i in range(args.requests):
         plen = int(rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1))
         steps = int(rng.integers(max(args.steps // 2, 1), args.steps + 1))
-        rids.append(eng.submit(prompts[i][:plen], steps))
-    out = eng.run()
+        # heterogeneous per-request sampling in one pool: even requests
+        # decode greedily, odd ones with seeded temperature/top-k/top-p —
+        # all lanes share the single compiled decode step
+        sp = (SamplingParams(max_new_tokens=steps) if i % 2 == 0 else
+              SamplingParams(temperature=0.8, top_k=40, top_p=0.95,
+                             seed=i, max_new_tokens=steps))
+        rids.append(eng.submit(prompts[i][:plen], sp))
+
+    # stream: one RequestOutput snapshot per emitted token
+    done = {}
+    for snap in eng.stream():
+        if snap.finished:
+            done[snap.request_id] = snap
+            print(f"[done] req {snap.request_id}: "
+                  f"{len(snap.token_ids)} toks ({snap.finish_reason}), "
+                  f"ttft {snap.metrics.ttft*1e3:.0f}ms, "
+                  f"e2e {snap.metrics.e2e_latency*1e3:.0f}ms")
     dt = time.time() - t0
-    total = sum(len(v) for v in out.values())
+    total = sum(len(o.token_ids) for o in done.values())
     print(f"[stream] {args.requests} requests -> {total} tokens in "
           f"{dt:.2f}s ({total/dt:.1f} tok/s) on {args.slots} slots")
     print(f"[jit] traces: {eng.trace_counts()} (decode compiled once)")
-    print("[sample]", out[rids[0]][:16])
+    print("[sample]", list(done[rids[0]].token_ids[:16]))
 
 
 if __name__ == "__main__":

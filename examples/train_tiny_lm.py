@@ -19,7 +19,7 @@ from repro.distributed.convert_plan import convert_concrete
 from repro.launch.train import train_loop
 from repro.models import lm
 from repro.optim import OptConfig
-from repro.serving import Engine
+from repro.serving import Engine, SamplingParams
 
 
 def main():
@@ -46,7 +46,8 @@ def main():
     sp = convert_concrete(params, lm.model_specs(cfg), cfg, NULL_CTX)
     eng = Engine(sp, cfg, kv_mode="sparse")
     prompts = jnp.asarray(host_batch(dc, 10_000)["tokens"][:2, :32])
-    toks, _ = eng.generate({"tokens": prompts}, steps=8)
+    toks, _ = eng.generate({"tokens": prompts},
+                           SamplingParams(max_new_tokens=9))
     print("[serve] sparse-weight decode of the trained model:",
           np.asarray(toks)[0])
 

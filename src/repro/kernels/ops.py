@@ -50,7 +50,7 @@ def backend(name: str):
         set_backend(prev)
 
 
-def _pallas(interpret_ok=True) -> Optional[bool]:
+def _pallas() -> Optional[bool]:
     """None -> use XLA ref; True -> interpret pallas; False -> real pallas."""
     if _BACKEND == "xla":
         return None

@@ -28,7 +28,7 @@ from repro.data import DataConfig, host_batch
 from repro.distributed import ShardCtx, NULL_CTX, default_rules
 from repro.distributed.convert_plan import convert_concrete
 from repro.models import lm
-from repro.serving import Engine, ContinuousEngine
+from repro.serving import Engine, ContinuousEngine, SamplingParams
 
 
 def main(argv=None):
@@ -37,7 +37,8 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=16,
+                    help="max_new_tokens per request")
     ap.add_argument("--sparsity", type=float, default=0.5)
     ap.add_argument("--int8", action="store_true")
     ap.add_argument("--dense", action="store_true",
@@ -51,6 +52,11 @@ def main(argv=None):
                     help="stream mode: cache-pool slots (default: batch)")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="stream mode: prompt tokens prefilled per tick")
+    # sampling (0 temperature = greedy; each request gets its own seed)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -96,8 +102,11 @@ def main(argv=None):
                 (args.batch, cfg.frontend_tokens, cfg.d_model), jnp.float32)
         eng = Engine(params, cfg,
                      kv_mode="dense" if args.dense else "sparse")
+        sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                            top_p=args.top_p, seed=args.seed,
+                            max_new_tokens=args.steps)
         t0 = time.time()
-        toks, _ = eng.generate(batch, steps=args.steps)
+        toks, _ = eng.generate(batch, sp)
         dt = time.time() - t0
         print(f"[serve] one-shot: {args.steps} tokens x {args.batch} reqs "
               f"in {dt:.2f}s ({args.steps*args.batch/dt:.1f} tok/s)")
@@ -120,14 +129,22 @@ def main(argv=None):
     for i in range(n_req):
         plen = int(rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1))
         steps = int(rng.integers(max(args.steps // 2, 1), args.steps + 1))
-        rids.append(eng.submit(np.asarray(prompts[i][:plen]), steps))
+        sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                            top_p=args.top_p, seed=args.seed + i,
+                            max_new_tokens=steps)
+        rids.append(eng.submit(np.asarray(prompts[i][:plen]), sp))
     out = eng.run()
     dt = time.time() - t0
-    total = sum(len(v) for v in out.values())
+    total = sum(len(o.token_ids) for o in out.values())
     print(f"[serve] stream: {n_req} requests, {total} tokens in {dt:.2f}s "
           f"({total/dt:.1f} tok/s) on {slots} slots")
     print(f"[serve] jit traces: {eng.trace_counts()}")
-    print("[serve] sample:", out[rids[0]][:16])
+    ttfts = [o.metrics.ttft for o in out.values()]
+    lats = [o.metrics.e2e_latency for o in out.values()]
+    print(f"[serve] ttft p50={np.median(ttfts)*1e3:.0f}ms "
+          f"max={max(ttfts)*1e3:.0f}ms; e2e p50={np.median(lats)*1e3:.0f}ms; "
+          f"finish: { {o.finish_reason for o in out.values()} }")
+    print("[serve] sample:", list(out[rids[0]].token_ids[:16]))
     return 0
 
 

@@ -57,12 +57,9 @@ def embed_apply(p, tokens: jax.Array, cfg) -> jax.Array:
 
 def unembed_apply(p, x: jax.Array, cfg) -> jax.Array:
     w = p["tok"].T.astype(cfg.cdtype) if cfg.tie_embeddings else p["lm_head"]
-    if isinstance(w, jax.Array) or hasattr(w, "dtype"):
-        try:
-            return ops.linear(x, w, out_dtype=jnp.float32)
-        except Exception:
-            pass
-    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+    # ops.linear dispatches on the leaf type (dense / sparse-bf16 / int8 /
+    # packed4); never swallow kernel errors behind a silent dense fallback
+    return ops.linear(x, w, out_dtype=jnp.float32)
 
 
 # ---------------------------------------------------------------------------

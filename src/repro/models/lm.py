@@ -398,7 +398,12 @@ def forward_decode_pooled(params, state, tokens: jax.Array,
     mid-prefill or empty slot can ride along in the same compiled step).
     Every array in ``state`` keeps its shape, so this jits exactly once per
     pool geometry — refreezes and admissions never retrace it.
-    Returns (logits [B, V] f32, new state).
+
+    Returns (logits [B, V] f32, new state): token *selection* is not this
+    function's job — the serving engine feeds the logits to the per-slot
+    sampler (``repro.serving.sampling.sample_step``) inside the same jitted
+    step.  Keys of ``state`` this function does not own (e.g. the engine's
+    ``"sample"`` lanes) pass through untouched.
     """
     x_t = embed_apply(params["embed"], tokens[:, 0], cfg)
     x_t = ctx.constrain(x_t, ("batch", "embed"))
@@ -448,7 +453,9 @@ def forward_prefill_chunk(params, state, tokens: jax.Array, slot: jax.Array,
     the dense tail.  One ``jax.jit`` trace per distinct chunk length; the
     slot index and start position are traced values, so admitting a request
     into *any* slot at *any* offset reuses the same compiled step.
-    Returns (last-token logits [1, V], new state).
+    Returns (last-token logits [1, V], new state) — the engine samples the
+    request's first token from these logits under the slot's lane; unknown
+    ``state`` keys pass through untouched.
     """
     c = tokens.shape[1]
     nb_new, rem = c // bs, c % bs

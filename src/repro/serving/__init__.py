@@ -1,3 +1,4 @@
 from .engine import Engine, ContinuousEngine, retrace_count
 from .cache_pool import CachePool
+from .sampling import RequestMetrics, RequestOutput, SamplingParams
 from .scheduler import Scheduler, Request

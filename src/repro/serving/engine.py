@@ -12,14 +12,21 @@ Two engines share the kernels but differ in how they treat traffic:
   fixed-geometry slots under a :class:`~repro.serving.scheduler.Scheduler`.
   Chunked prefill interleaves with decode ticks, slots recycle on EOS, and
   every jitted step — decode over ``(params, pool_state, tokens,
-  slot_mask)``, per-chunk-length prefill, refreeze, release — compiles
-  exactly once.  This is the paper's "cache frozen in model state" design
-  made multi-tenant: refreeze folds tails into the prefix *in place* at
-  static shapes instead of reallocating.
+  slot_mask)``, per-chunk-length prefill, refreeze, release, lane set —
+  compiles exactly once.  This is the paper's "cache frozen in model
+  state" design made multi-tenant: refreeze folds tails into the prefix
+  *in place* at static shapes instead of reallocating.
+
+Both engines speak the request-level API of :mod:`repro.serving.sampling`:
+callers pass :class:`SamplingParams` and get tokens / RequestOutputs back.
+The model's decode steps return **logits**; token selection is the
+sampler's job (per-slot on-device lanes in the continuous engine, one
+broadcast lane in the legacy engine) — argmax is just the
+``temperature=0`` lane of that sampler.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional
+from typing import (Any, Callable, Dict, Iterator, List, Optional)
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +37,9 @@ from repro.distributed import NULL_CTX
 from repro.models import lm
 from repro.models.attention import DenseKVCache
 
+from . import sampling
 from .cache_pool import CachePool
+from .sampling import RequestOutput, SamplingParams
 from .scheduler import Scheduler
 
 
@@ -53,6 +62,7 @@ class Engine:
             lambda p, c, t: lm.forward_decode(p, c, t, cfg, ctx))
         self._prefill = jax.jit(
             lambda p, b: lm.forward_prefill(p, b, cfg, ctx))
+        self._sample = jax.jit(sampling.sample_step)
 
     # ------------------------------------------------------------------
     def prefill(self, batch: Dict[str, jax.Array]):
@@ -111,22 +121,37 @@ class Engine:
         return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per)
 
     # ------------------------------------------------------------------
-    def generate(self, batch: Dict[str, jax.Array], steps: int,
-                 greedy: bool = True, rng: Optional[jax.Array] = None):
+    def generate(self, batch: Dict[str, jax.Array],
+                 params: Optional[SamplingParams] = None):
+        """Decode ``params.max_new_tokens`` tokens for the whole batch.
+
+        Every row shares ``params`` (a static batch is one lockstep wave,
+        not a request stream — per-request params, eos/stop handling and
+        streaming live on :class:`ContinuousEngine`; eos/stop params are
+        rejected here rather than silently decoded past).  The decode step
+        returns logits; token selection happens in the shared jitted
+        sampler, so ``temperature=0`` is exactly the old greedy path.
+        Returns ``([B, max_new_tokens] int32 tokens, final cache)`` — the
+        first token is sampled from the prompt's last logits.
+        """
+        params = params if params is not None else SamplingParams()
+        if params.eos_id is not None or params.stop_ids:
+            raise ValueError(
+                "the one-shot Engine decodes fixed-length lockstep batches "
+                "and cannot honor eos_id/stop_ids; submit to "
+                "ContinuousEngine for per-request stop handling")
         cache, logits = self.prefill(batch)
         b = batch["tokens"].shape[0]
+        lanes = sampling.broadcast_lanes(params, b)
+        live = jnp.ones((b,), bool)
         toks = []
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        for i in range(steps):
+        tok, lanes = self._sample(logits, lanes, live)
+        for i in range(params.max_new_tokens - 1):
             toks.append(tok)
             if self.kv_mode == "sparse":
                 cache = self._maybe_refreeze(cache)
             logits, cache = self._decode(self.params, cache, tok[:, None])
-            if greedy:
-                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            else:
-                rng, sub = jax.random.split(rng)
-                tok = jax.random.categorical(sub, logits).astype(jnp.int32)
+            tok, lanes = self._sample(logits, lanes, live)
         toks.append(tok)
         return jnp.stack(toks, axis=1), cache
 
@@ -186,17 +211,22 @@ class ContinuousEngine:
 
     1. **refreeze** — any decoding slot whose tail ring is full gets its
        tail pruned + folded into its compressed prefix, in place;
-    2. **admission / chunked prefill** — the oldest request owed prompt
-       work gets one chunk processed against its slot's frozen prefix;
-       finishing the prompt yields the request's first token;
+    2. **admission / chunked prefill** — admitted requests get their
+       sampling lane (temperature / top-k / top-p / seeded RNG key)
+       written into device state; the oldest request owed prompt work gets
+       one chunk processed against its slot's frozen prefix, and finishing
+       the prompt samples the request's first token;
     3. **decode** — every decoding slot advances one token in a single
-       batched step jitted over ``(params, pool_state, tokens, slot_mask)``.
+       batched step jitted over ``(params, pool_state, tokens, slot_mask)``
+       — the model returns per-slot logits and the on-device sampler draws
+       each slot's token under its own lane, splitting the ``[slots, 2]``
+       RNG lane in place.
 
-    All device work reuses four compiled functions (decode / refreeze /
-    release, plus one prefill per distinct chunk length); admissions,
-    evictions and refreezes never retrace — see :func:`retrace_count`.
-    Host<->device traffic per tick is one token vector; slot lengths are
-    mirrored host-side.
+    All device work reuses five compiled functions (decode / refreeze /
+    release / set_lane, plus one prefill per distinct chunk length);
+    admissions, evictions, refreezes and *heterogeneous sampling params*
+    never retrace — see :func:`retrace_count`.  Host<->device traffic per
+    tick is one token vector; slot lengths are mirrored host-side.
     """
 
     def __init__(self, params, cfg, ctx=NULL_CTX, slots: int = 4,
@@ -213,66 +243,111 @@ class ContinuousEngine:
             bs = next(d for d in range(limit, 0, -1)
                       if cfg.kv_tail % d == 0)
         self.pool = CachePool.build(cfg, slots, max_tokens, bs=bs)
-        self.state = self.pool.init_state()
+        # pool storage + per-slot sampling lanes travel as one state pytree
+        # through every jitted transition (the pool ops pass unknown keys
+        # through untouched)
+        self.state = {**self.pool.init_state(),
+                      "sample": sampling.init_lanes(slots)}
         self.scheduler = Scheduler(slots, self.pool.capacity_tokens,
                                    self.pool.bs, chunk=prefill_chunk)
         bs_ = self.pool.bs
 
-        # greedy argmax stays on device: only [slots]-sized int32 token
-        # vectors cross the host boundary each tick, never [slots, vocab]
-        # logits
+        # sampling stays on device: only [slots]-sized int32 token vectors
+        # cross the host boundary each tick, never [slots, vocab] logits
         def _decode(p, st, t, m):
             logits, st = lm.forward_decode_pooled(p, st, t, m, cfg, ctx, bs_)
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), st
+            tok, lanes = sampling.sample_step(logits, st["sample"], m)
+            return tok, {**st, "sample": lanes}
 
-        def _prefill(p, st, t, s):
+        def _prefill(p, st, t, s, final):
             logits, st = lm.forward_prefill_chunk(p, st, t, s, cfg, ctx, bs_)
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), st
+            lanes = st["sample"]
+            lane = {k: jax.lax.dynamic_slice_in_dim(v, s, 1, axis=0)
+                    for k, v in lanes.items()}
+            # the key advances only when the chunk is final (= a token is
+            # actually sampled), keeping the request's RNG stream a pure
+            # function of its sampled-token count
+            tok, lane = sampling.sample_step(
+                logits, lane, jnp.reshape(final, (1,)))
+            lanes = {**lanes, "rng": jax.lax.dynamic_update_slice_in_dim(
+                lanes["rng"], lane["rng"], s, axis=0)}
+            return tok, {**st, "sample": lanes}
 
         self._decode = jax.jit(_decode)
         self._prefill_chunk = jax.jit(_prefill)
         self._refreeze = jax.jit(self.pool.refreeze)
         self._release = jax.jit(self.pool.release)
+        self._set_lane = jax.jit(sampling.set_lane)
         # host mirrors (avoid a device sync per tick)
         self._tail_len = np.zeros(slots, np.int64)
         self._last_tok: Dict[int, int] = {}           # slot -> last token
+        self._callbacks: Dict[int, Callable[[RequestOutput], None]] = {}
 
     # -- public API ---------------------------------------------------------
-    def submit(self, prompt, max_new_tokens: int,
-               eos_id: Optional[int] = None) -> int:
-        """Queue a request (any iterable of token ids).  Returns its id."""
-        return self.scheduler.submit([int(t) for t in np.asarray(prompt)],
-                                     max_new_tokens, eos_id)
+    def submit(self, prompt, params: Optional[SamplingParams] = None,
+               on_token: Optional[Callable[[RequestOutput], None]] = None
+               ) -> int:
+        """Queue a request (any iterable of token ids) under its own
+        :class:`SamplingParams`.  Returns the request id.
 
-    def run(self) -> Dict[int, List[int]]:
+        ``on_token`` is called with a :class:`RequestOutput` snapshot after
+        every token this request emits (the last one has ``finished``).
+        """
+        rid = self.scheduler.submit([int(t) for t in np.asarray(prompt)],
+                                    params)
+        if on_token is not None:
+            self._callbacks[rid] = on_token
+        return rid
+
+    def run(self) -> Dict[int, RequestOutput]:
         """Tick until every submitted request finished; returns
-        ``{request id: generated tokens}`` (greedy decoding)."""
+        ``{request id: RequestOutput}``."""
         while not self.scheduler.done():
             self.step()
-        return {rid: req.generated
+        return {rid: req.output()
                 for rid, req in self.scheduler.finished.items()}
 
-    def generate_batch(self, prompts: jax.Array, steps: int) -> jax.Array:
+    def stream(self) -> Iterator[RequestOutput]:
+        """Tick until the queue drains, yielding a :class:`RequestOutput`
+        snapshot per emitted token (interleaved across live requests, in
+        emission order).  Submitting more work mid-iteration extends the
+        stream."""
+        while not self.scheduler.done():
+            yield from self.step()
+
+    def generate_batch(self, prompts: jax.Array,
+                       params: Optional[SamplingParams] = None) -> jax.Array:
         """Convenience mirror of the legacy ``Engine.generate``: submit all
-        rows of ``prompts [B, S]``, return ``[B, steps + 1]`` greedy tokens
-        (the first comes from the prompt's last logits, like the legacy
-        engine's prefill token)."""
-        rids = [self.submit(row, steps + 1) for row in np.asarray(prompts)]
+        rows of ``prompts [B, S]`` under one ``params``, return
+        ``[B, max_new_tokens]`` tokens (the first comes from the prompt's
+        last logits, like the legacy engine's prefill token)."""
+        params = params if params is not None else SamplingParams()
+        rids = [self.submit(row, params) for row in np.asarray(prompts)]
         out = self.run()
-        return jnp.asarray([out[r] for r in rids], jnp.int32)
+        return jnp.asarray([out[r].token_ids for r in rids], jnp.int32)
 
     def trace_counts(self) -> Dict[str, int]:
         return {"decode": retrace_count(self._decode),
                 "prefill_chunk": retrace_count(self._prefill_chunk),
                 "refreeze": retrace_count(self._refreeze),
-                "release": retrace_count(self._release)}
+                "release": retrace_count(self._release),
+                "set_lane": retrace_count(self._set_lane)}
 
     # -- one tick -----------------------------------------------------------
-    def step(self) -> None:
+    def step(self) -> List[RequestOutput]:
+        """Advance the engine one tick; returns a snapshot per token emitted
+        (empty while the pool is still prefilling)."""
+        events: List[RequestOutput] = []
         sch = self.scheduler
-        # admission: fill every free slot from the queue
+        # admission: fill every free slot from the queue, writing each new
+        # request's sampling lane into device state
         while sch.queue and sch.free_slots():
-            sch.admit()
+            req = sch.admit()
+            p = req.params
+            self.state = self._set_lane(
+                self.state, jnp.int32(req.slot),
+                jnp.float32(p.temperature), jnp.int32(p.top_k),
+                jnp.float32(p.top_p), sampling.request_key(p))
 
         # refreeze before decode appends: any decoding slot with a full tail
         if any(self._tail_len[s] >= self.pool.tail
@@ -286,19 +361,21 @@ class ContinuousEngine:
         req = sch.next_prefill()
         if req is not None:
             chunk = sch.prefill_chunk(req)
+            final = req.prefill_done >= len(req.prompt)
             toks = jnp.asarray(np.asarray(chunk, np.int32)[None, :])
             tok, self.state = self._prefill_chunk(
-                self.params, self.state, toks, jnp.int32(req.slot))
+                self.params, self.state, toks, jnp.int32(req.slot),
+                jnp.asarray(final))
             # device-side tail_len after a chunk = chunk_len % bs, and all
             # chunks before the last are block-aligned
             self._tail_len[req.slot] = req.prefill_done % self.pool.bs
-            if req.prefill_done >= len(req.prompt):
-                self._emit(req.slot, int(np.asarray(tok)[0]))
+            if final:
+                self._emit(req.slot, int(np.asarray(tok)[0]), events)
 
         # decode tick for every slot with a live request past prefill
         slots = sch.decoding_slots()
         if not slots:
-            return
+            return events
         b = self.pool.slots
         tokens = np.zeros((b, 1), np.int32)
         mask = np.zeros((b,), bool)
@@ -310,11 +387,21 @@ class ContinuousEngine:
         picked = np.asarray(tok)
         for s in slots:
             self._tail_len[s] += 1
-            self._emit(s, int(picked[s]))
+            self._emit(s, int(picked[s]), events)
+        return events
 
-    def _emit(self, slot: int, tok: int) -> None:
+    def _emit(self, slot: int, tok: int,
+              events: List[RequestOutput]) -> None:
         """Record a generated token; recycle the slot if that finished it."""
-        if self.scheduler.record_token(slot, tok):
+        req = self.scheduler.active[slot]
+        finished = self.scheduler.record_token(slot, tok) is not None
+        out = req.output()
+        events.append(out)
+        cb = self._callbacks.get(req.rid)
+        if cb is not None:
+            cb(out)
+        if finished:
+            self._callbacks.pop(req.rid, None)
             self.state = self._release(self.state, jnp.int32(slot))
             self._tail_len[slot] = 0
             self._last_tok.pop(slot, None)

@@ -1,0 +1,229 @@
+"""Request-level sampling: ``SamplingParams`` in, ``RequestOutput`` out,
+and the jit-stable on-device sampler between them.
+
+The serving engines treat decoding as *sampling lanes*: every cache-pool
+slot carries its own ``temperature`` / ``top_k`` / ``top_p`` scalar and a
+``[2]`` uint32 RNG key inside the engine's device state, so requests with
+heterogeneous :class:`SamplingParams` coexist in one batched decode step.
+Everything in here is shape-static — lanes are ``[slots]`` vectors that are
+*written*, never re-shaped, so admitting a request with new params is an
+``at[slot].set`` and the jitted step never retraces.
+
+Key discipline (what makes seeded sampling reproducible): a request's lane
+key is ``PRNGKey(params.seed)``, split **on device** once per sampled
+token — at the final prefill chunk (first token) and at every decode tick
+after that.  The key never mixes in the slot index or co-tenant state, so
+the same request produces the same tokens no matter which slot it lands in
+or who it shares the batch with.
+
+``temperature == 0`` lanes bypass the categorical entirely and reduce to
+exactly ``jnp.argmax(logits, -1).astype(int32)`` — bit-identical to the
+greedy-only engine this API replaces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# request-level API objects
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding contract.
+
+    temperature: 0 = greedy (exact argmax); > 0 scales logits before the
+      categorical draw.
+    top_k: keep only the k highest logits (0 = disabled).
+    top_p: nucleus sampling — keep the smallest prefix of the sorted
+      distribution whose mass reaches ``top_p`` (1.0 = disabled).
+    seed: per-request RNG seed; same seed => same tokens, regardless of
+      slot placement or batch co-tenants.
+    max_new_tokens: generation budget (includes the first token sampled
+      from the prompt's last logits).
+    eos_id: single stop token (finish_reason "stop").
+    stop_ids: stop *sequences* — each entry is a token-id tuple (a bare int
+      means a 1-token sequence); generation finishes when the generated
+      tail matches one.  Stop tokens are included in the output.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    stop_ids: Tuple[Tuple[int, ...], ...] = ()
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0: {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0: {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1]: {self.top_p}")
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1: {self.max_new_tokens}")
+        norm = tuple(
+            (int(s),) if isinstance(s, int) else tuple(int(t) for t in s)
+            for s in self.stop_ids)
+        if any(not s for s in norm):
+            raise ValueError("empty stop sequence")
+        object.__setattr__(self, "stop_ids", norm)
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestMetrics:
+    """Wall-clock timing of one request (``time.monotonic`` seconds)."""
+    arrival_time: float
+    first_token_time: Optional[float]
+    finished_time: Optional[float]
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token (queue wait + prefill)."""
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def e2e_latency(self) -> Optional[float]:
+        if self.finished_time is None:
+            return None
+        return self.finished_time - self.arrival_time
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestOutput:
+    """Snapshot of one request's generation state.
+
+    Streaming yields one per emitted token (``finish_reason is None`` while
+    running); ``ContinuousEngine.run`` returns the final one per request.
+    """
+    request_id: int
+    prompt_token_ids: Tuple[int, ...]
+    token_ids: Tuple[int, ...]
+    finish_reason: Optional[str]          # None | "stop" | "length"
+    metrics: RequestMetrics
+
+    @property
+    def finished(self) -> bool:
+        return self.finish_reason is not None
+
+
+# ---------------------------------------------------------------------------
+# sampling lanes (device state)
+# ---------------------------------------------------------------------------
+
+def init_lanes(slots: int) -> Dict[str, jax.Array]:
+    """Zeroed lane state: every slot starts greedy with a null key."""
+    return {
+        "temperature": jnp.zeros((slots,), jnp.float32),
+        "top_k": jnp.zeros((slots,), jnp.int32),
+        "top_p": jnp.ones((slots,), jnp.float32),
+        "rng": jnp.zeros((slots, 2), jnp.uint32),
+    }
+
+
+def request_key(params: SamplingParams) -> jax.Array:
+    """The per-request RNG lane seed — deliberately slot-independent."""
+    return jax.random.PRNGKey(params.seed)
+
+
+def broadcast_lanes(params: SamplingParams, batch: int
+                    ) -> Dict[str, jax.Array]:
+    """Uniform lanes for a static batch (the legacy one-shot engine): every
+    row shares ``params``, including the key — rows are independent
+    requests that happen to be decoded lockstep."""
+    key = request_key(params)
+    return {
+        "temperature": jnp.full((batch,), params.temperature, jnp.float32),
+        "top_k": jnp.full((batch,), params.top_k, jnp.int32),
+        "top_p": jnp.full((batch,), params.top_p, jnp.float32),
+        "rng": jnp.tile(key[None, :], (batch, 1)),
+    }
+
+
+def set_lane(state: Dict[str, Any], slot: jax.Array, temperature: jax.Array,
+             top_k: jax.Array, top_p: jax.Array, key: jax.Array
+             ) -> Dict[str, Any]:
+    """Write one slot's lane at admission (pure; the engine jits it once —
+    slot and every param are traced scalars, so any request reuses it)."""
+    sm = state["sample"]
+    return {**state, "sample": {
+        "temperature": sm["temperature"].at[slot].set(temperature),
+        "top_k": sm["top_k"].at[slot].set(top_k),
+        "top_p": sm["top_p"].at[slot].set(top_p),
+        "rng": sm["rng"].at[slot].set(key),
+    }}
+
+
+# ---------------------------------------------------------------------------
+# the sampler
+# ---------------------------------------------------------------------------
+
+def _mask_logits(logits: jax.Array, temperature: jax.Array,
+                 top_k: jax.Array, top_p: jax.Array) -> jax.Array:
+    """Temperature -> top-k -> top-p, all vectorized over the lane axis.
+
+    Returns masked/scaled logits [B, V] ready for a categorical draw; at
+    least one token always survives.  top_k == 0 and top_p == 1 are exact
+    no-ops (modulo temperature scaling).
+    """
+    v = logits.shape[-1]
+    # temperature == 0 lanes take the argmax path in sample_step; the clamp
+    # only keeps this branch finite for them.
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    sorted_desc = -jnp.sort(-scaled, axis=-1)                    # [B, V]
+
+    k = jnp.clip(jnp.where(top_k > 0, top_k, v), 1, v)
+    kth = jnp.take_along_axis(sorted_desc, (k - 1)[:, None], axis=-1)
+    kept = jnp.where(scaled < kth, -jnp.inf, scaled)
+
+    # nucleus over the already top-k-masked distribution: keep the sorted
+    # prefix whose mass *before* each token is < top_p (the first token is
+    # always kept), then translate back via a value cutoff.
+    sorted_kept = jnp.where(sorted_desc < kth, -jnp.inf, sorted_desc)
+    probs = jax.nn.softmax(sorted_kept, axis=-1)
+    cum_before = jnp.cumsum(probs, axis=-1) - probs
+    in_nucleus = cum_before < top_p[:, None]
+    cutoff = jnp.min(jnp.where(in_nucleus, sorted_desc, jnp.inf),
+                     axis=-1, keepdims=True)
+    return jnp.where(kept < cutoff, -jnp.inf, kept)
+
+
+def sample_step(logits: jax.Array, lanes: Dict[str, jax.Array],
+                advance: jax.Array
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Draw one token per lane; split each advancing lane's key on device.
+
+    logits [B, V] (any float dtype); lanes as in :func:`init_lanes`;
+    advance bool [B] — lanes whose RNG consumes a split this step (the
+    engine passes its live-slot mask, so parked slots keep their key and a
+    request's token stream depends only on its own tick count).
+
+    Returns (tokens int32 [B], new lanes).  ``temperature == 0`` lanes are
+    exactly ``argmax(logits)``.
+    """
+    logits = logits.astype(jnp.float32)
+    temp = lanes["temperature"]
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    split = jax.vmap(lambda k: jax.random.split(k, 2))(lanes["rng"])
+    carry, sub = split[:, 0], split[:, 1]
+    masked = _mask_logits(logits, temp, lanes["top_k"], lanes["top_p"])
+    sampled = jax.vmap(jax.random.categorical)(sub, masked).astype(jnp.int32)
+
+    tok = jnp.where(temp > 0.0, sampled, greedy_tok)
+    new_rng = jnp.where(advance[:, None], carry, lanes["rng"])
+    return tok, {**lanes, "rng": new_rng}

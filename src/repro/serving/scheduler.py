@@ -3,9 +3,15 @@
 Pure host-side bookkeeping — no jax in here.  The scheduler owns the
 request lifecycle (queued -> prefilling -> decoding -> finished), maps live
 requests onto cache-pool slots, splits prompts into block-aligned prefill
-chunks, and recycles slots on EOS / length exhaustion.  The engine asks it
-three questions per tick: *which request gets a prefill chunk*, *which
-slots decode*, and *who is finished*.
+chunks, and recycles slots on completion.  The engine asks it three
+questions per tick: *which request gets a prefill chunk*, *which slots
+decode*, and *who is finished*.
+
+Every request carries its own :class:`~repro.serving.sampling.SamplingParams`
+— the scheduler enforces the host-side half of that contract (eos / stop
+sequences / max_new_tokens => ``finish_reason``); the device-side half
+(temperature / top-k / top-p / seeded RNG) lives in the engine's sampling
+lanes.
 
 Admission control: a request is only admitted when a slot is free AND its
 worst-case context (prompt + max_new_tokens) fits the pool's per-slot
@@ -15,27 +21,54 @@ scheduler is the component that makes overflow impossible.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Sequence
+
+from .sampling import RequestMetrics, RequestOutput, SamplingParams
 
 
 @dataclasses.dataclass
 class Request:
-    """One generation request."""
+    """One generation request: immutable contract + scheduler-owned state."""
     rid: int
     prompt: List[int]
-    max_new_tokens: int
-    eos_id: Optional[int] = None
+    params: SamplingParams
     # -- lifecycle state (scheduler-owned) --
     slot: int = -1
     prefill_done: int = 0            # prompt tokens already chunk-prefilled
     generated: List[int] = dataclasses.field(default_factory=list)
-    finished: bool = False
+    finish_reason: Optional[str] = None        # None | "stop" | "length"
+    arrival_time: float = 0.0
+    first_token_time: Optional[float] = None
+    finished_time: Optional[float] = None
+
+    @property
+    def finished(self) -> bool:
+        return self.finish_reason is not None
 
     @property
     def decoding(self) -> bool:
         return (self.slot >= 0 and not self.finished
                 and self.prefill_done >= len(self.prompt))
+
+    def output(self) -> RequestOutput:
+        """Immutable snapshot of the current generation state."""
+        return RequestOutput(
+            request_id=self.rid,
+            prompt_token_ids=tuple(self.prompt),
+            token_ids=tuple(self.generated),
+            finish_reason=self.finish_reason,
+            metrics=RequestMetrics(self.arrival_time, self.first_token_time,
+                                   self.finished_time))
+
+
+def _matches_stop(generated: List[int],
+                  stop_ids: Sequence[Sequence[int]]) -> bool:
+    """True if the generated tail equals any stop sequence."""
+    return any(len(generated) >= len(s)
+               and generated[len(generated) - len(s):] == list(s)
+               for s in stop_ids)
 
 
 class Scheduler:
@@ -48,33 +81,35 @@ class Scheduler:
     """
 
     def __init__(self, slots: int, capacity_tokens: int, bs: int,
-                 chunk: Optional[int] = None):
+                 chunk: Optional[int] = None,
+                 clock=time.monotonic):
         assert chunk is None or chunk >= bs, (chunk, bs)
         self.slots = slots
         self.capacity_tokens = capacity_tokens
         self.bs = bs
         self.chunk = (chunk // bs * bs) if chunk else None
+        self.clock = clock
         self.queue: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}          # slot -> request
         self.finished: Dict[int, Request] = {}        # rid -> request
         self._next_rid = 0
 
     # -- submission ---------------------------------------------------------
-    def submit(self, prompt: List[int], max_new_tokens: int,
-               eos_id: Optional[int] = None) -> int:
+    def submit(self, prompt: List[int],
+               params: Optional[SamplingParams] = None) -> int:
         """Queue a request; returns its id.  Raises if it can never fit."""
+        params = params if params is not None else SamplingParams()
         if not prompt:
             raise ValueError("empty prompt")
-        if max_new_tokens < 1:
-            raise ValueError("max_new_tokens must be >= 1")
-        need = len(prompt) + max_new_tokens
+        need = len(prompt) + params.max_new_tokens
         if need > self.capacity_tokens:
             raise ValueError(
                 f"request needs {need} tokens; pool slots hold "
                 f"{self.capacity_tokens}")
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, list(prompt), max_new_tokens, eos_id))
+        self.queue.append(Request(rid, list(prompt), params,
+                                  arrival_time=self.clock()))
         return rid
 
     # -- per-tick queries ---------------------------------------------------
@@ -119,18 +154,29 @@ class Scheduler:
         return [s for s, r in self.active.items() if r.decoding]
 
     # -- completion ---------------------------------------------------------
-    def record_token(self, slot: int, token: int) -> bool:
-        """Append a generated token; returns True if the request finished
-        (EOS or max_new_tokens) and its slot should be released."""
+    def record_token(self, slot: int, token: int) -> Optional[str]:
+        """Append a generated token; returns the finish reason (``"stop"``
+        for eos / stop sequences, ``"length"`` for max_new_tokens, None if
+        still running).  A stop hit on the budget's last token wins over
+        "length".  Finishing releases the slot for re-admission."""
         req = self.active[slot]
         req.generated.append(token)
-        if ((req.eos_id is not None and token == req.eos_id)
-                or len(req.generated) >= req.max_new_tokens):
-            req.finished = True
+        now = self.clock()
+        if req.first_token_time is None:
+            req.first_token_time = now
+        p = req.params
+        reason = None
+        if ((p.eos_id is not None and token == p.eos_id)
+                or _matches_stop(req.generated, p.stop_ids)):
+            reason = "stop"
+        elif len(req.generated) >= p.max_new_tokens:
+            reason = "length"
+        if reason is not None:
+            req.finish_reason = reason
+            req.finished_time = now
             del self.active[slot]
             self.finished[req.rid] = req
-            return True
-        return False
+        return reason
 
     def done(self) -> bool:
         return not self.queue and not self.active

@@ -10,7 +10,7 @@ from repro.configs import get_config
 from repro.core import (freeze_prefix, append_token, refreeze, unpack)
 from repro.kernels import ref
 from repro.models import lm
-from repro.serving import Engine
+from repro.serving import Engine, SamplingParams
 
 
 def rand(shape, seed=0):
@@ -129,8 +129,9 @@ def test_engine_generates_past_tail_capacity():
     toks = jnp.asarray(np.random.default_rng(0).integers(
         0, cfg.vocab, (2, 64)), jnp.int32)
     eng = Engine(params, cfg, kv_mode="sparse")
-    steps = 64 + 8                      # exceeds the tail
-    out, cache = eng.generate({"tokens": toks}, steps=steps)
+    steps = 64 + 8                      # decode steps exceed the tail
+    out, cache = eng.generate({"tokens": toks},
+                              SamplingParams(max_new_tokens=steps + 1))
     assert out.shape == (2, steps + 1)
     assert int(cache["pos"]) == 64 + steps
     # prefix grew by one tail fold

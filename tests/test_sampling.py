@@ -1,0 +1,355 @@
+"""Request-level serving API: SamplingParams, per-slot on-device sampling
+lanes, streaming outputs, and the scheduler's finish-reason contract.
+
+Acceptance bars pinned here:
+* ``SamplingParams(temperature=0)`` through ``ContinuousEngine`` is
+  token-identical to the greedy legacy engine (the equivalence suite in
+  test_serving_pool covers the greedy path; here the *sampled* lanes);
+* a mixed-params batch — greedy + temperature/top-k/top-p slots in one
+  pool — completes with ``trace_counts()`` flat after warmup;
+* same request, different slot => same tokens (seeded lanes are
+  slot-independent);
+* stop sequences beat max_new_tokens when both trigger on the same token.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serving import (ContinuousEngine, Engine, SamplingParams,
+                           Scheduler, sampling)
+
+VOCAB = 64
+
+
+# ---------------------------------------------------------------------------
+# the sampler (pure unit tests)
+# ---------------------------------------------------------------------------
+
+def _lanes(temps, top_ks=None, top_ps=None, seeds=None):
+    b = len(temps)
+    lanes = sampling.init_lanes(b)
+    lanes["temperature"] = jnp.asarray(temps, jnp.float32)
+    if top_ks is not None:
+        lanes["top_k"] = jnp.asarray(top_ks, jnp.int32)
+    if top_ps is not None:
+        lanes["top_p"] = jnp.asarray(top_ps, jnp.float32)
+    keys = [jax.random.PRNGKey(s) for s in (seeds or range(b))]
+    lanes["rng"] = jnp.stack(keys)
+    return lanes
+
+
+def _draws(logits, lanes, n):
+    """n successive sample_step draws (the lane RNG advances in between)."""
+    toks = []
+    adv = jnp.ones((logits.shape[0],), bool)
+    for _ in range(n):
+        tok, lanes = sampling.sample_step(logits, lanes, adv)
+        toks.append(np.asarray(tok))
+    return np.stack(toks)                                  # [n, B]
+
+
+def test_temperature0_is_exact_argmax():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(4, VOCAB)).astype(np.float32))
+    tok, _ = sampling.sample_step(logits, _lanes([0.0] * 4),
+                                  jnp.ones((4,), bool))
+    np.testing.assert_array_equal(
+        np.asarray(tok), np.asarray(jnp.argmax(logits, -1)))
+    assert tok.dtype == jnp.int32
+
+
+def test_top_k1_is_argmax_at_any_temperature():
+    rng = np.random.default_rng(1)
+    logits = jnp.asarray(rng.normal(size=(2, VOCAB)).astype(np.float32))
+    draws = _draws(logits, _lanes([5.0, 0.7], top_ks=[1, 1]), 20)
+    np.testing.assert_array_equal(
+        draws, np.tile(np.asarray(jnp.argmax(logits, -1)), (20, 1)))
+
+
+def test_top_k_restricts_support():
+    rng = np.random.default_rng(2)
+    logits = jnp.asarray(rng.normal(size=(1, VOCAB)).astype(np.float32))
+    top3 = set(np.asarray(jnp.argsort(-logits[0]))[:3].tolist())
+    draws = _draws(logits, _lanes([1.5], top_ks=[3]), 200).ravel()
+    assert set(draws.tolist()) <= top3
+    assert len(set(draws.tolist())) > 1            # it does sample, not argmax
+
+
+def test_top_p_restricts_support():
+    probs = np.full(8, 1e-6)
+    probs[:4] = [0.5, 0.3, 0.1, 0.1 - 6e-6 + 2e-6]
+    logits = jnp.log(jnp.asarray(probs, jnp.float32))[None, :]
+    # nucleus at 0.6: token 0 (mass before it 0) and token 1 (0.5) are in,
+    # token 2 (0.8) is out
+    draws = _draws(logits, _lanes([1.0], top_ps=[0.6]), 200).ravel()
+    assert set(draws.tolist()) <= {0, 1}
+    assert set(draws.tolist()) == {0, 1}
+
+
+def test_seeded_determinism_and_seed_variation():
+    rng = np.random.default_rng(3)
+    logits = jnp.asarray(rng.normal(size=(1, VOCAB)).astype(np.float32))
+    a = _draws(logits, _lanes([1.0], seeds=[7]), 50)
+    b = _draws(logits, _lanes([1.0], seeds=[7]), 50)
+    c = _draws(logits, _lanes([1.0], seeds=[8]), 50)
+    np.testing.assert_array_equal(a, b)
+    assert (a != c).any()
+
+
+def test_mixed_lanes_one_batch():
+    """A greedy lane and a sampled lane coexist in one sample_step call."""
+    rng = np.random.default_rng(4)
+    row = rng.normal(size=(VOCAB,)).astype(np.float32)
+    logits = jnp.asarray(np.stack([row, row]))
+    lanes = _lanes([0.0, 2.0], top_ks=[0, 4], seeds=[0, 1])
+    draws = _draws(logits, lanes, 50)
+    top4 = set(np.asarray(jnp.argsort(-logits[1]))[:4].tolist())
+    assert (draws[:, 0] == int(jnp.argmax(logits[0]))).all()
+    assert set(draws[:, 1].tolist()) <= top4
+    assert len(set(draws[:, 1].tolist())) > 1
+
+
+def test_masked_lanes_keep_their_key():
+    """advance=False lanes must not consume RNG (a parked slot's stream
+    may not depend on how long it sat parked)."""
+    rng = np.random.default_rng(5)
+    logits = jnp.asarray(rng.normal(size=(2, VOCAB)).astype(np.float32))
+    lanes = _lanes([1.0, 1.0], seeds=[3, 3])
+    adv = jnp.asarray([True, False])
+    _, lanes2 = sampling.sample_step(logits, lanes, adv)
+    assert (np.asarray(lanes2["rng"][0]) != np.asarray(lanes["rng"][0])).any()
+    np.testing.assert_array_equal(np.asarray(lanes2["rng"][1]),
+                                  np.asarray(lanes["rng"][1]))
+
+
+def test_params_validation():
+    for bad in (dict(temperature=-0.1), dict(top_k=-1), dict(top_p=0.0),
+                dict(top_p=1.5), dict(max_new_tokens=0),
+                dict(stop_ids=((),))):
+        with pytest.raises(ValueError):
+            SamplingParams(**bad)
+    sp = SamplingParams(stop_ids=(5, (6, 7)))
+    assert sp.stop_ids == ((5,), (6, 7))           # ints become 1-sequences
+    assert SamplingParams().greedy
+    assert not SamplingParams(temperature=0.1).greedy
+
+
+# ---------------------------------------------------------------------------
+# scheduler edge cases (host-side, no model)
+# ---------------------------------------------------------------------------
+
+def test_admission_exactly_fills_capacity():
+    sch = Scheduler(slots=1, capacity_tokens=64, bs=16)
+    rid = sch.submit(list(range(48)), SamplingParams(max_new_tokens=16))
+    req = sch.admit()
+    assert req is not None and req.rid == rid      # 48 + 16 == 64 admits
+    with pytest.raises(ValueError):                # one past capacity: never
+        sch.submit(list(range(49)), SamplingParams(max_new_tokens=16))
+
+
+def test_stop_sequence_beats_max_new_tokens():
+    """A stop hit on the budget's very last token must report "stop"."""
+    sch = Scheduler(slots=1, capacity_tokens=64, bs=16)
+    rid = sch.submit([1, 2], SamplingParams(max_new_tokens=4,
+                                            stop_ids=((7, 8),)))
+    sch.admit()
+    assert sch.record_token(0, 5) is None
+    assert sch.record_token(0, 6) is None
+    assert sch.record_token(0, 7) is None
+    assert sch.record_token(0, 8) == "stop"        # token #4 = budget edge
+    assert sch.finished[rid].finish_reason == "stop"
+    assert sch.finished[rid].generated == [5, 6, 7, 8]
+
+
+def test_stop_sequence_mid_stream_and_length_reason():
+    sch = Scheduler(slots=2, capacity_tokens=64, bs=16)
+    r1 = sch.submit([1], SamplingParams(max_new_tokens=8,
+                                        stop_ids=(9, (3, 4))))
+    r2 = sch.submit([1], SamplingParams(max_new_tokens=2))
+    sch.admit(), sch.admit()
+    assert sch.record_token(0, 3) is None
+    assert sch.record_token(0, 4) == "stop"        # 2-token sequence match
+    assert sch.record_token(1, 3) is None
+    assert sch.record_token(1, 4) == "length"      # no stop_ids -> budget
+    assert sch.finished[r1].finish_reason == "stop"
+    assert sch.finished[r2].finish_reason == "length"
+    # timing is populated monotonically
+    m = sch.finished[r1]
+    assert m.arrival_time <= m.first_token_time <= m.finished_time
+
+
+def test_request_output_snapshot():
+    sch = Scheduler(slots=1, capacity_tokens=64, bs=16)
+    rid = sch.submit([1, 2], SamplingParams(max_new_tokens=2))
+    req = sch.admit()
+    sch.record_token(0, 5)
+    out = req.output()
+    assert (out.request_id, out.prompt_token_ids, out.token_ids) == \
+        (rid, (1, 2), (5,))
+    assert out.finish_reason is None and not out.finished
+    assert out.metrics.ttft is not None and out.metrics.e2e_latency is None
+    sch.record_token(0, 6)
+    out = req.output()
+    assert out.finished and out.finish_reason == "length"
+    assert out.metrics.e2e_latency >= 0
+
+
+# ---------------------------------------------------------------------------
+# engine-level: sampling lanes through the pooled decode step
+# ---------------------------------------------------------------------------
+
+def _setup(seed=0, b=2, s=16, kv_tail=16):
+    cfg = get_config("qwen3-0.6b").reduced()
+    cfg = dataclasses.replace(cfg, kv_k_sparsity=0.0, kv_v_sparsity=0.0,
+                              kv_tail=kv_tail)
+    params = lm.init_params(cfg, jax.random.PRNGKey(seed))
+    toks = jnp.asarray(np.random.default_rng(seed).integers(
+        0, cfg.vocab, (b, s)), jnp.int32)
+    return cfg, params, toks
+
+
+@pytest.fixture(scope="module")
+def engine_env():
+    cfg, params, toks = _setup()
+    eng = ContinuousEngine(params, cfg, slots=2, max_tokens=128, bs=16)
+    return cfg, params, toks, eng
+
+
+def test_mixed_params_batch_zero_retraces(engine_env):
+    """Greedy + temperature/top-k/top-p requests in one pool: completes,
+    differs from greedy where expected, and adds ZERO jit traces after
+    warmup — heterogeneous SamplingParams are data, not shapes."""
+    cfg, params, toks, eng = engine_env
+    # warmup wave touches every compiled path (incl. a sampled lane)
+    eng.submit(toks[0], SamplingParams(max_new_tokens=20))
+    eng.submit(toks[1], SamplingParams(temperature=0.9, top_k=8, top_p=0.9,
+                                       seed=0, max_new_tokens=20))
+    eng.run()
+    warm = eng.trace_counts()
+    assert warm["decode"] == 1 and warm["set_lane"] == 1
+
+    grid = [SamplingParams(max_new_tokens=12),
+            SamplingParams(temperature=0.7, seed=1, max_new_tokens=12),
+            SamplingParams(temperature=1.3, top_k=5, seed=2,
+                           max_new_tokens=12),
+            SamplingParams(temperature=0.5, top_p=0.8, seed=3,
+                           max_new_tokens=12)]
+    rids = [eng.submit(toks[i % 2], sp) for i, sp in enumerate(grid)]
+    res = eng.run()
+    assert all(len(res[r].token_ids) == 12 for r in rids)
+    assert eng.trace_counts() == warm, \
+        f"sampling lanes retraced: {warm} -> {eng.trace_counts()}"
+    # the greedy and sampled streams over the same prompt diverge
+    assert res[rids[0]].token_ids != res[rids[1]].token_ids
+
+
+def test_seeded_sampling_slot_independent(engine_env):
+    """Same request, different slot => same tokens: the RNG lane seeds from
+    the request, never the slot, and slots are numerically independent."""
+    cfg, params, toks, eng = engine_env
+    sp = SamplingParams(temperature=0.8, top_k=8, seed=11, max_new_tokens=10)
+
+    r1 = eng.submit(toks[0], sp)
+    first = eng.run()[r1]
+    assert eng.scheduler.finished[r1].slot == 0
+
+    # occupy slot 0 with a longer filler, then resubmit the probe -> slot 1
+    eng.submit(toks[1], SamplingParams(max_new_tokens=24))
+    eng.step()
+    r2 = eng.submit(toks[0], sp)
+    res = eng.run()
+    assert eng.scheduler.finished[r2].slot == 1
+    assert res[r2].token_ids == first.token_ids
+
+
+def test_temperature0_lane_equals_legacy_greedy(engine_env):
+    """The acceptance bar: SamplingParams(temperature=0) through the
+    continuous engine is token-identical to the legacy greedy engine."""
+    cfg, params, toks, eng = engine_env
+    legacy = Engine(params, cfg, kv_mode="sparse")
+    sp = SamplingParams(temperature=0.0, max_new_tokens=24)
+    out_leg, _ = legacy.generate({"tokens": toks}, sp)
+    out = eng.generate_batch(toks, sp)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_leg))
+
+
+def test_sampled_continuous_matches_legacy_same_seed(engine_env):
+    """Same seed + same params => the continuous engine's sampled stream
+    matches the legacy engine's (both sample one split per token from
+    PRNGKey(seed), and the logits agree)."""
+    cfg, params, toks, eng = engine_env
+    sp = SamplingParams(temperature=0.7, seed=3, max_new_tokens=16)
+    legacy = Engine(params, cfg, kv_mode="sparse")
+    out_leg, _ = legacy.generate({"tokens": toks}, sp)
+    out = eng.generate_batch(toks, sp)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_leg))
+
+
+def test_engine_stop_sequence_and_eos(engine_env):
+    cfg, params, toks, eng = engine_env
+    greedy = [int(t) for t in np.asarray(
+        eng.generate_batch(toks[:1], SamplingParams(max_new_tokens=8)))[0]]
+
+    # stop on a 2-token sequence the greedy stream is known to produce
+    sp = SamplingParams(max_new_tokens=8, stop_ids=(tuple(greedy[2:4]),))
+    rid = eng.submit(toks[0], sp)
+    out = eng.run()[rid]
+    assert list(out.token_ids) == greedy[:4]
+    assert out.finish_reason == "stop"
+
+    # eos_id finishes early too
+    rid = eng.submit(toks[0], SamplingParams(max_new_tokens=8,
+                                             eos_id=greedy[1]))
+    out = eng.run()[rid]
+    assert list(out.token_ids) == greedy[:2]
+    assert out.finish_reason == "stop"
+
+
+def test_streaming_iterator_and_callback(engine_env):
+    cfg, params, toks, eng = engine_env
+    got_cb = []
+    r1 = eng.submit(toks[0], SamplingParams(max_new_tokens=6),
+                    on_token=got_cb.append)
+    r2 = eng.submit(toks[1], SamplingParams(temperature=0.6, seed=4,
+                                            max_new_tokens=4))
+    seen = {r1: [], r2: []}
+    for snap in eng.stream():
+        assert snap.request_id in seen
+        prev = seen[snap.request_id]
+        # each snapshot extends the previous by exactly one token
+        assert len(snap.token_ids) == len(prev) + 1
+        assert list(snap.token_ids[:len(prev)]) == prev
+        seen[snap.request_id] = list(snap.token_ids)
+    assert len(seen[r1]) == 6 and len(seen[r2]) == 4
+    assert eng.scheduler.done()
+    # callback saw the same snapshots as the iterator, in order
+    assert [len(s.token_ids) for s in got_cb] == [1, 2, 3, 4, 5, 6]
+    assert got_cb[-1].finished and got_cb[-1].finish_reason == "length"
+    assert list(got_cb[-1].token_ids) == seen[r1]
+    assert got_cb[-1].metrics.ttft is not None
+
+
+def test_legacy_engine_rejects_stop_params(engine_env):
+    """The lockstep one-shot engine cannot honor eos/stop; it must refuse
+    rather than silently decode past them."""
+    cfg, params, toks = engine_env[:3]
+    legacy = Engine(params, cfg, kv_mode="sparse")
+    for bad in (SamplingParams(eos_id=2), SamplingParams(stop_ids=(5,))):
+        with pytest.raises(ValueError, match="ContinuousEngine"):
+            legacy.generate({"tokens": toks}, bad)
+
+
+def test_run_returns_request_outputs(engine_env):
+    cfg, params, toks, eng = engine_env
+    rid = eng.submit(toks[0], SamplingParams(max_new_tokens=3))
+    out = eng.run()
+    assert set(out) >= {rid}
+    o = out[rid]
+    assert o.finished and len(o.token_ids) == 3
+    assert o.prompt_token_ids == tuple(int(t) for t in np.asarray(toks[0]))
+    assert o.metrics.e2e_latency >= o.metrics.ttft >= 0

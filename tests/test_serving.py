@@ -11,7 +11,7 @@ import pytest
 from repro.configs import get_config
 from repro.distributed import NULL_CTX
 from repro.models import lm
-from repro.serving import Engine
+from repro.serving import Engine, SamplingParams
 
 
 def _params_and_prompt(arch, seed=0, b=2, s=64):
@@ -129,6 +129,7 @@ def test_int8_sparse_weights_close():
 def test_generate_multi_step_cache_consistency():
     cfg, params, toks = _params_and_prompt("qwen3-0.6b", seed=5, s=32)
     eng = Engine(params, cfg, kv_mode="sparse")
-    out, cache = eng.generate({"tokens": toks}, steps=8)
+    out, cache = eng.generate({"tokens": toks},
+                              SamplingParams(max_new_tokens=9))
     assert out.shape == (2, 9)
     assert int(cache["pos"]) == 32 + 8

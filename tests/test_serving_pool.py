@@ -18,8 +18,12 @@ from repro.configs import get_config
 from repro.core.sparse_kv import freeze_chunk_blocks, pooled_view
 from repro.core.sparse_format import unpack
 from repro.models import lm
-from repro.serving import (Engine, ContinuousEngine, CachePool, Scheduler,
-                           retrace_count)
+from repro.serving import (Engine, ContinuousEngine, CachePool,
+                           SamplingParams, Scheduler, retrace_count)
+
+
+def _sp(max_new_tokens, **kw):
+    return SamplingParams(max_new_tokens=max_new_tokens, **kw)
 
 
 def _setup(seed=0, b=2, s=32, kv_tail=32, **cfg_kw):
@@ -104,7 +108,7 @@ def test_pool_refreeze_in_place_static_shapes():
 
 def test_scheduler_admission_when_pool_full():
     sch = Scheduler(slots=2, capacity_tokens=128, bs=16)
-    rids = [sch.submit([1, 2, 3], 4) for _ in range(3)]
+    rids = [sch.submit([1, 2, 3], _sp(4)) for _ in range(3)]
     assert sch.admit().rid == rids[0]
     assert sch.admit().rid == rids[1]
     assert sch.admit() is None                    # pool full
@@ -113,7 +117,7 @@ def test_scheduler_admission_when_pool_full():
     slot = sch.active[0].slot
     for t in (7, 8, 9, 10):
         done = sch.record_token(slot, t)
-    assert done and slot in sch.free_slots()
+    assert done == "length" and slot in sch.free_slots()
     assert sch.admit().rid == rids[2]
     assert sch.active[slot].rid == rids[2]        # slot recycled
 
@@ -130,22 +134,23 @@ def test_pool_rejects_unsupported_families():
 def test_scheduler_eos_and_capacity():
     sch = Scheduler(slots=1, capacity_tokens=64, bs=16)
     with pytest.raises(ValueError):
-        sch.submit(list(range(60)), 10)           # can never fit
+        sch.submit(list(range(60)), _sp(10))      # can never fit
     with pytest.raises(ValueError):
-        sch.submit([], 4)                         # empty prompt
+        sch.submit([], _sp(4))                    # empty prompt
     with pytest.raises(ValueError):
-        sch.submit([1], 0)                        # nothing to generate
-    rid = sch.submit([1, 2], 40, eos_id=42)
+        sch.submit([1], _sp(0))                   # nothing to generate
+    rid = sch.submit([1, 2], _sp(40, eos_id=42))
     req = sch.admit()
-    assert not sch.record_token(req.slot, 7)
-    assert sch.record_token(req.slot, 42)         # EOS finishes early
+    assert sch.record_token(req.slot, 7) is None
+    assert sch.record_token(req.slot, 42) == "stop"   # EOS finishes early
     assert sch.finished[rid].generated == [7, 42]
+    assert sch.finished[rid].finish_reason == "stop"
 
 
 def test_scheduler_chunking_block_aligned():
     sch = Scheduler(slots=1, capacity_tokens=256, bs=16, chunk=40)
     assert sch.chunk == 32                        # rounded down to blocks
-    rid = sch.submit(list(range(70)), 1)
+    rid = sch.submit(list(range(70)), _sp(1))
     req = sch.admit()
     sizes = []
     while req.prefill_done < len(req.prompt):
@@ -163,11 +168,11 @@ def test_continuous_matches_legacy_tokens():
     token-identical to the legacy one-shot engine."""
     cfg, params, toks = _setup(b=2, s=32, kv_tail=32)
     legacy = Engine(params, cfg, kv_mode="sparse")
-    out_leg, _ = legacy.generate({"tokens": toks}, steps=40)  # 1+ refreeze
+    out_leg, _ = legacy.generate({"tokens": toks}, _sp(41))   # 1+ refreeze
 
     eng = ContinuousEngine(params, cfg, slots=2, max_tokens=128, bs=16,
                            prefill_chunk=16)
-    out = eng.generate_batch(toks, steps=40)
+    out = eng.generate_batch(toks, _sp(41))
     np.testing.assert_array_equal(np.asarray(out), np.asarray(out_leg))
 
 
@@ -179,16 +184,17 @@ def test_zero_retraces_across_refreezes_and_evictions():
 
     # warmup wave: touches every compiled path once (prefill len 16,
     # decode, >=1 refreeze at tail=16, release on completion)
-    eng.generate_batch(toks, steps=20)
+    eng.generate_batch(toks, _sp(21))
     warm = eng.trace_counts()
     assert warm["decode"] == 1
 
     # second + third waves: 4 more requests through 2 slots -> >=2
     # admissions and evictions; 56 decode steps -> >=3 refreezes per slot
     prompts = np.random.default_rng(3).integers(0, cfg.vocab, (4, 16))
-    rids = [eng.submit(row, 56) for row in prompts]
+    rids = [eng.submit(row, _sp(56)) for row in prompts]
     res = eng.run()
-    assert [len(res[r]) for r in rids] == [56] * 4
+    assert [len(res[r].token_ids) for r in rids] == [56] * 4
+    assert {res[r].finish_reason for r in rids} == {"length"}
     after = eng.trace_counts()
     assert after == warm, f"retraced: {warm} -> {after}"
 
@@ -200,8 +206,8 @@ def test_uneven_prompt_lengths_and_tail_remainders():
     toks = jnp.asarray(np.random.default_rng(5).integers(
         0, cfg.vocab, (2, 21)), jnp.int32)          # 21 = 16 + 5 remainder
     eng = ContinuousEngine(params, cfg, slots=2, max_tokens=128, bs=16)
-    out1 = eng.generate_batch(toks, steps=30)
+    out1 = eng.generate_batch(toks, _sp(31))
     # same prompts again through the (recycled) pool -> same tokens
-    out2 = eng.generate_batch(toks, steps=30)
+    out2 = eng.generate_batch(toks, _sp(31))
     np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
     assert out1.shape == (2, 31)
