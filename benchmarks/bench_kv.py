@@ -6,6 +6,13 @@ real structure, then measure teacher-forced next-token CE through the
 frozen-compressed cache at the paper's sparsity grid.  Paper claim: <1%
 downstream-accuracy drop at 30% K / 50% V (Fig 14); perplexity +~0.6
 (Fig 17).  Speedup: decode-byte model at 16k context (paper: 1.14x).
+
+``--breakdown`` instead profiles one decode tick's attention at the ops
+layer: the fused prefix+tail flash-decode (one kernel, zero XLA-side tail
+merge) vs the legacy two-pass split (prefix partial + XLA tail attention +
+lse merge), plus the per-tick sampler cost, written to ``BENCH_decode.json``.
+
+  PYTHONPATH=src python -m benchmarks.bench_kv --breakdown
 """
 from __future__ import annotations
 
@@ -80,5 +87,115 @@ def run(train_steps: int = 40):
     return losses
 
 
+def breakdown(slots: int = 8, sb: int = 16, bs: int = 64, tail: int = 64,
+              hkv: int = 8, g: int = 4, d: int = 128, vocab: int = 32768,
+              backend: str = "xla", out_json: str = "BENCH_decode.json"):
+    """Per-tick decode-attention breakdown: fused vs two-pass.
+
+    Builds one pool-layout layer (``slots`` requests, ``sb`` compressed
+    blocks of ``bs`` tokens each, a ``tail``-token ring, mixed per-slot
+    lengths) and times, per tick:
+
+    * ``fused``      — ``ops.sparse_decode_attention`` with tails: ONE
+                       kernel, final output; its ``xla_tail_merge_us`` is
+                       structurally 0.0 (there is nothing left to run).
+    * ``unfused``    — the legacy split: prefix partial, then the XLA-side
+                       grouped tail attention + lse merge that used to run
+                       per token per layer.
+    * ``sampler_us`` — one ``sample_step`` over ``[slots, vocab]`` logits
+                       (sort-free top-k/top-p bucket + logprob lane).
+    """
+    import json
+
+    from repro.core.sparse_kv import freeze_chunk_blocks, pooled_view
+    from repro.kernels import ops, ref
+    from repro.serving import sampling
+    from .common import time_jax
+
+    rng = np.random.default_rng(0)
+    rnd = lambda *s: jnp.asarray(rng.normal(size=s).astype(np.float32))
+    k = rnd(slots, hkv, sb * bs, d)
+    v = rnd(slots, hkv, sb * bs, d)
+    cap = bs * d
+    k_bm, k_vl, v_bm, v_vl = freeze_chunk_blocks(k, v, 0.3, 0.5, bs,
+                                                 cap, cap)
+    k_sp = pooled_view(k_bm, k_vl, bs, d)
+    v_sp = pooled_view(v_bm, v_vl, bs, d)
+    k_tail = rnd(slots, hkv, tail, d)
+    v_tail = rnd(slots, hkv, tail, d)
+    q = rnd(slots, hkv * g, d)
+    tl = jnp.asarray(rng.integers(0, tail + 1, slots), jnp.int32)
+    pl_ = jnp.asarray(rng.integers(0, sb + 1, slots), jnp.int32) * bs
+    sm = 1.0 / d ** 0.5
+
+    with ops.backend(backend):
+        fused = jax.jit(lambda qq: ops.sparse_decode_attention(
+            qq, k_sp, v_sp, hkv, sm, k_tail, v_tail, tl, prefix_len=pl_))
+        prefix_only = jax.jit(lambda qq: ops.sparse_decode_attention(
+            qq, k_sp, v_sp, hkv, sm, prefix_len=pl_))
+        fused_us = time_jax(fused, q)
+        prefix_us = time_jax(prefix_only, q)
+
+    # the legacy two-pass tail: grouped tail partial + lse merge, exactly
+    # what the fused kernel absorbed off the per-token hot loop
+    def two_pass_tail(qq, o1, lse1):
+        qg = qq.reshape(slots, hkv, g, d)
+        valid = ref._len_valid(tail, tl, slots)
+        o2, lse2 = ref.gqa_partial_ref(qg, k_tail, v_tail, sm, valid)
+        empty = ~jnp.any(valid, axis=-1)
+        lse2 = jnp.where(empty[:, None, None], lse1 - 60.0, lse2)
+        o, _ = ref._merge_attn(o1, lse1, o2, lse2)
+        return o.reshape(slots, hkv * g, d)
+
+    qg = q.reshape(slots, hkv, g, d)
+    kp, vp = ref._unpack_prefix(q, k_sp, v_sp, hkv)
+    o1, lse1 = ref.gqa_partial_ref(qg, kp, vp, sm,
+                                   ref._len_valid(sb * bs, pl_, slots))
+    merge_us = time_jax(jax.jit(two_pass_tail), q, o1, lse1)
+
+    logits = rnd(slots, vocab)
+    lanes = sampling.init_lanes(slots)
+    lanes["temperature"] = jnp.full((slots,), 0.8, jnp.float32)
+    lanes["top_k"] = jnp.full((slots,), 40, jnp.int32)
+    lanes["top_p"] = jnp.full((slots,), 0.95, jnp.float32)
+    sampler_us = time_jax(jax.jit(sampling.sample_step), logits, lanes,
+                          jnp.ones((slots,), bool))
+
+    result = {
+        "backend": backend,
+        "geometry": {"slots": slots, "prefix_blocks": sb, "bs": bs,
+                     "tail": tail, "hkv": hkv, "g": g, "d": d,
+                     "vocab": vocab},
+        "fused": {"attention_us": fused_us, "xla_tail_merge_us": 0.0},
+        "unfused": {"prefix_kernel_us": prefix_us,
+                    "xla_tail_merge_us": merge_us,
+                    "attention_us": prefix_us + merge_us},
+        "sampler_us": sampler_us,
+    }
+    with open(out_json, "w") as f:
+        json.dump(result, f, indent=2)
+    emit("decode_breakdown/fused_attention", fused_us,
+         "xla_tail_merge_us=0.00")
+    emit("decode_breakdown/unfused_prefix", prefix_us, "")
+    emit("decode_breakdown/unfused_tail_merge", merge_us,
+         f"fused_saves={merge_us:.2f}us_per_layer_per_tick")
+    emit("decode_breakdown/sampler", sampler_us, f"vocab={vocab}")
+    print(f"[bench_kv] wrote {out_json}")
+    return result
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--breakdown", action="store_true",
+                    help="per-tick decode-attention breakdown (fused vs "
+                         "two-pass) instead of the accuracy/speedup sweep")
+    ap.add_argument("--backend", default="xla",
+                    choices=("xla", "interpret"),
+                    help="breakdown: kernel backend to profile")
+    ap.add_argument("--train-steps", type=int, default=40)
+    args = ap.parse_args()
+    if args.breakdown:
+        breakdown(backend=args.backend)
+    else:
+        run(args.train_steps)

@@ -90,10 +90,12 @@ def main():
     for snap in eng.stream():
         if snap.finished:
             done[snap.request_id] = snap
+            lps = [lp for lp in snap.logprobs if lp is not None]
             print(f"[done] req {snap.request_id}: "
                   f"{len(snap.token_ids)} toks ({snap.finish_reason}), "
                   f"ttft {snap.metrics.ttft*1e3:.0f}ms, "
-                  f"e2e {snap.metrics.e2e_latency*1e3:.0f}ms")
+                  f"e2e {snap.metrics.e2e_latency*1e3:.0f}ms, "
+                  f"mean logprob {sum(lps)/max(len(lps),1):.2f}")
     dt = time.time() - t0
     total = sum(len(o.token_ids) for o in done.values())
     print(f"[stream] {args.requests} requests -> {total} tokens in "

@@ -17,6 +17,15 @@ with one tiny pair of collectives per layer:
 
 The dense dynamic tail is computed redundantly per shard (it's ~128 tokens)
 and merged locally after the combine, so it never enters the psum.
+
+NOTE — this module is deliberately **pinned to the partial+merge entry
+points** (``ref.gqa_partial_ref`` / ``ref._merge_attn`` /
+``ref.sparse_decode_attention_ref`` and, on TPU, the prefix-partial
+``sparse_decode_attention_pallas``): the per-shard (o_i, lse_i) partials
+must cross chips before they can be normalized, so the single-chip fused
+prefix+tail kernel (``sparse_decode_attention_fused_pallas``, used by
+``ops.sparse_decode_attention`` everywhere else) structurally cannot apply
+here.  Everything outside this module goes through the fused path.
 """
 from __future__ import annotations
 
@@ -71,7 +80,9 @@ def sparse_decode_attention_cp(q: jax.Array, cache: SparseKVCache,
     for a in seq_axes:
         seq_size *= mesh.shape[a]
     if seq_size <= 1 or sb % seq_size != 0:
-        # cannot context-shard: fall back to the replicated reference
+        # cannot context-shard: fall back to the replicated two-pass
+        # reference (this path stays partial+merge by design — see the
+        # module docstring)
         return ref.sparse_decode_attention_ref(
             q, cache.k_sp, cache.v_sp, sm_scale, cache.k_tail,
             cache.v_tail, cache.tail_len)

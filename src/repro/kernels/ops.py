@@ -25,7 +25,8 @@ from .dense_matmul import dense_matmul_pallas
 from .sparse_matmul import sparse_matmul_pallas
 from .sparse_matmul_int8 import sparse_matmul_int8_pallas
 from .sparse_gemv import sparse_gemv_pallas
-from .sparse_attention import sparse_decode_attention_pallas
+from .sparse_attention import (sparse_decode_attention_pallas,
+                               sparse_decode_attention_fused_pallas)
 
 _BACKEND = "tpu" if jax.default_backend() == "tpu" else "xla"
 
@@ -145,11 +146,24 @@ def sparse_decode_attention(q: jax.Array,
     ``[B]`` int32 (pooled continuous-batching cache).  ``prefix_len`` must
     be a whole number of (bs,)-token blocks; on the Pallas path it becomes a
     per-slot valid-block count the kernel skips past.
+
+    When a tail is passed, ONE fused ``pallas_call`` (or, on the XLA
+    backend, one grouped-GQA softmax over the concatenated sequence)
+    produces the final output: there is no XLA-side tail attention, no lse
+    merge, and no ``jnp.repeat`` head materialization on the per-token hot
+    path.  The two-pass partial+merge semantics survive only in
+    ``repro.distributed.cp_attention``, where per-shard partials must cross
+    chips before the merge.
     """
     interp = _pallas()
+    has_tail = k_tail is not None and k_tail.shape[2] > 0
     if interp is None:
+        if has_tail:
+            return ref.sparse_decode_attention_fused_ref(
+                q, k_sp, v_sp, sm_scale, k_tail, v_tail, tail_len,
+                prefix_len)
         return ref.sparse_decode_attention_ref(
-            q, k_sp, v_sp, sm_scale, k_tail, v_tail, tail_len, prefix_len)
+            q, k_sp, v_sp, sm_scale, None, None, None, prefix_len)
 
     b, hq, d = q.shape
     g = hq // hkv
@@ -169,25 +183,27 @@ def sparse_decode_attention(q: jax.Array,
     if prefix_len is not None:
         n_blocks = jnp.broadcast_to(
             jnp.asarray(prefix_len, jnp.int32) // bs, (b,))
-    o, lse = sparse_decode_attention_pallas(
-        qg, kbm, kvv, vbm, vvv, bs=bs, sm_scale=sm_scale, interpret=interp,
-        n_blocks=n_blocks)
-    o = o.reshape(b, hq, d)
-    lse = lse.reshape(b, hq)
-    if prefix_len is not None:
-        # an all-skipped prefix must lose the merge against a real tail
-        empty_p = jnp.broadcast_to(jnp.atleast_1d(
-            jnp.asarray(prefix_len)) <= 0, (b,))
-        lse = jnp.where(empty_p[:, None], -1e30, lse)
 
-    if k_tail is not None and k_tail.shape[2] > 0:
+    if has_tail:
         t = k_tail.shape[2]
-        valid = ref._len_valid(t, tail_len if tail_len is not None else t, b)
-        kt = jnp.repeat(k_tail, g, axis=1)
-        vt = jnp.repeat(v_tail, g, axis=1)
-        o2, lse2 = ref.attn_partial_ref(q, kt, vt, sm_scale, valid)
-        empty = ~jnp.any(valid, axis=-1)
-        lse2 = jnp.where(empty[:, None], -jnp.inf, lse2)
-        lse2 = jnp.where(jnp.isfinite(lse2), lse2, lse.min() - 60.0)
-        o, _ = ref._merge_attn(o, lse, o2, lse2)
-    return o.astype(q.dtype)
+        tl = jnp.broadcast_to(jnp.asarray(
+            tail_len if tail_len is not None else t, jnp.int32), (b,))
+        # pad the ring to whole (bs,)-token panels; padding is masked by tl
+        pad = -t % bs
+        if pad:
+            k_tail = jnp.pad(k_tail, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            v_tail = jnp.pad(v_tail, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        o = sparse_decode_attention_fused_pallas(
+            qg, kbm, kvv, vbm, vvv, k_tail, v_tail, bs=bs,
+            sm_scale=sm_scale, interpret=interp, n_blocks=n_blocks,
+            tail_len=tl)
+    else:
+        o, _ = sparse_decode_attention_pallas(
+            qg, kbm, kvv, vbm, vvv, bs=bs, sm_scale=sm_scale,
+            interpret=interp, n_blocks=n_blocks)
+        if prefix_len is not None:
+            # a fully-skipped prefix leaves the accumulator untouched
+            empty_p = jnp.broadcast_to(jnp.atleast_1d(
+                jnp.asarray(prefix_len)) <= 0, (b,))
+            o = jnp.where(empty_p[:, None, None, None], 0.0, o)
+    return o.reshape(b, hq, d).astype(q.dtype)

@@ -135,6 +135,82 @@ def _len_valid(n: int, length, b: int) -> jax.Array:
     return jnp.broadcast_to(jnp.arange(n)[None, :] < length, (b, n))
 
 
+def _unpack_prefix(q, k_sp, v_sp, hkv):
+    """Decompress the frozen prefix to dense [B, Hkv, S, D] (both the
+    structured [B, Hkv, Sb, 1, ...] and the flat [(B*Hkv*Sb), 1, ...]
+    block layouts)."""
+    b, hq, d = q.shape
+    if k_sp.bitmap.ndim == 5:       # structured [B, Hkv, Sb, 1, ...]
+        return unpack(k_sp), unpack(v_sp)
+    kd = unpack(k_sp)                                 # [(B Hkv S), D]
+    vd = unpack(v_sp)
+    s_len = kd.shape[0] // (b * hkv)
+    return (kd.reshape(b, hkv, s_len, d),
+            vd.reshape(b, hkv, s_len, d))
+
+
+def sparse_decode_attention_fused_ref(
+        q: jax.Array,
+        k_sp: BlockSparseWeight, v_sp: BlockSparseWeight,
+        sm_scale: float,
+        k_tail: jax.Array, v_tail: jax.Array,
+        tail_len: Optional[jax.Array] = None,
+        prefix_len: Optional[jax.Array] = None) -> jax.Array:
+    """Oracle for the FUSED prefix+tail flash-decode kernel.
+
+    Fused semantics: ONE softmax over the union of valid prefix and tail
+    positions — no partials, no lse merge, no special-casing of empty
+    prefixes (an all-invalid prefix simply contributes nothing).  Grouped
+    GQA throughout: the tail is consumed at [B, Hkv, T, D], never
+    materialized to Hq heads.
+
+    q [B, Hq, D]; k_sp/v_sp the compressed frozen prefix (structured or
+    flat layout); k_tail/v_tail [B, Hkv, T, D].  ``tail_len`` /
+    ``prefix_len`` may be scalar or per-slot [B] int32; slots where both
+    are empty return zeros.
+
+    Concat-free: prefix and tail are scored by two grouped einsums (bf16
+    cache operands stay bf16 — no f32 copies, no [S+T] concatenation)
+    that share ONE softmax normalizer — the fused kernel's online softmax
+    unrolled to two panels, each panel exponentiated against its own
+    local max (the flash recurrence's rescaling trick, which also keeps
+    the bf16-cast ``p`` numerics identical to the two-pass partials').
+    """
+    b, hq, d = q.shape
+    hkv = k_tail.shape[1]
+    k, v = _unpack_prefix(q, k_sp, v_sp, hkv)
+    s_len, t = k.shape[2], k_tail.shape[2]
+    valid_p = _len_valid(
+        s_len, prefix_len if prefix_len is not None else s_len, b)
+    valid_t = _len_valid(t, tail_len if tail_len is not None else t, b)
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+
+    def panel(kx, vx, valid):
+        """Unnormalized panel statistics (o, l, m) at the panel's own
+        max — empty panels return (0, 0, -inf)."""
+        s = jnp.einsum("bhgd,bhsd->bhgs", qg, kx,
+                       preferred_element_type=jnp.float32) * sm_scale
+        s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+        m = jnp.max(s, axis=-1)                          # [B,Hkv,G]
+        p = jnp.exp(s - jnp.where(jnp.isfinite(m), m, 0.0)[..., None])
+        p = jnp.where(valid[:, None, None, :], p, 0.0)
+        o = jnp.einsum("bhgs,bhsd->bhgd", p.astype(vx.dtype), vx,
+                       preferred_element_type=jnp.float32)
+        return o, jnp.sum(p, axis=-1), m
+
+    o1, l1, m1 = panel(k, v, valid_p)
+    o2, l2, m2 = panel(k_tail, v_tail, valid_t)
+    m = jnp.maximum(m1, m2)                              # joint max
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    # empty panels have m == -inf, so their weight is exactly exp(-inf)=0
+    w1 = jnp.exp(m1 - m_safe)
+    w2 = jnp.exp(m2 - m_safe)
+    l_safe = jnp.maximum(l1 * w1 + l2 * w2, 1e-30)
+    o = (o1 * w1[..., None] + o2 * w2[..., None]) / l_safe[..., None]
+    return o.reshape(b, hq, d).astype(q.dtype)
+
+
 def sparse_decode_attention_ref(
         q: jax.Array,
         k_sp: BlockSparseWeight, v_sp: BlockSparseWeight,
@@ -143,7 +219,13 @@ def sparse_decode_attention_ref(
         v_tail: Optional[jax.Array] = None,
         tail_len: Optional[jax.Array] = None,
         prefix_len: Optional[jax.Array] = None) -> jax.Array:
-    """Oracle for the sparse-KV flash-decode kernel (paper §6.2).
+    """Two-pass (partial + lse merge) oracle for the sparse-KV flash-decode
+    kernel (paper §6.2).
+
+    Mathematically identical to :func:`sparse_decode_attention_fused_ref`;
+    kept as the partial+merge reference because the context-parallel path
+    (``repro.distributed.cp_attention``) is pinned to these semantics —
+    per-shard partials must cross chips before the merge.
 
     q: [B, Hq, D].  k_sp/v_sp hold the *compressed frozen prefix*: their
     logical shape is [(B*Hkv*S), D] blocked row-major, i.e. they were packed
@@ -157,16 +239,13 @@ def sparse_decode_attention_ref(
     compressed prefix only partially fills the pool's fixed-capacity storage.
     """
     b, hq, d = q.shape
-    hkv = k_tail.shape[1] if k_tail is not None else hq
-    if k_sp.bitmap.ndim == 5:       # structured [B, Hkv, Sb, 1, ...]
-        k = unpack(k_sp)                              # [B, Hkv, S, D]
-        v = unpack(v_sp)
+    if k_tail is not None:
+        hkv = k_tail.shape[1]
+    elif k_sp.bitmap.ndim == 5:     # structured layout carries Hkv
+        hkv = k_sp.bitmap.shape[1]
     else:
-        kd = unpack(k_sp)                             # [(B Hkv S), D]
-        vd = unpack(v_sp)
-        s_len = kd.shape[0] // (b * hkv)
-        k = kd.reshape(b, hkv, s_len, d)
-        v = vd.reshape(b, hkv, s_len, d)
+        hkv = hq
+    k, v = _unpack_prefix(q, k_sp, v_sp, hkv)
     g = hq // hkv
     qg = q.reshape(b, hkv, g, d)
     valid_p = None

@@ -1,18 +1,33 @@
-"""Sparse-KV flash-decode Pallas kernel — paper §6 on TPU.
+"""Sparse-KV flash-decode Pallas kernels — paper §6 on TPU.
 
 The paper prunes the cached K/V values with unstructured magnitude pruning
 (30%/50% with <1% accuracy loss) and adapts its sparse kernel to the QK^T and
 RV batched matmuls.  Here the compressed **frozen prefix** of the KV cache
 (bitmap + packed values per 128-token block, packed once after prefill —
-paper §6.2's constant-size cache-in-model-state design) is consumed by a
-flash-decoding kernel:
+paper §6.2's constant-size cache-in-model-state design) plus the dense
+**dynamic tail** ring are consumed by flash-decoding kernels.
 
-Grid ``(B, Hkv, S_blocks)`` with the sequence dimension innermost/sequential.
-Each step decompresses one (bs, D) K block and one V block in VMEM, does the
-(G, bs) score panel for the GQA head group on the MXU, and maintains online
-softmax statistics in VMEM scratch.  Output is the prefix-partial attention
-plus its log-sum-exp so the (tiny, dense) dynamic tail can be merged outside
-the kernel.
+Two entry points share one online-softmax core:
+
+* :func:`sparse_decode_attention_fused_pallas` — the serving hot path.
+  Grid ``(B, Hkv, Sb + Tb)`` with the sequence axis innermost/sequential:
+  the first ``Sb`` steps decompress one (bs, D) compressed prefix block
+  each (skipping past each slot's valid-block count), the remaining ``Tb``
+  steps load dense (bs, D) panels straight from the ``[B, Hkv, T, D]``
+  tail ring under a per-slot ``tail_len`` validity mask held in SMEM.  The
+  same VMEM online-softmax scratch runs across both phases, so ONE
+  ``pallas_call`` produces the final attention output — no ``lse`` output,
+  no XLA-side tail attention, no lse merge, and no ``jnp.repeat`` GQA head
+  materialization anywhere on the per-token path.
+
+* :func:`sparse_decode_attention_pallas` — the prefix-*partial* entry:
+  returns ``(out, lse)`` over the compressed prefix only.  Kept for the
+  context-parallel decode path (``repro.distributed.cp_attention``), where
+  per-shard partials must cross chips before the merge, so fusing the tail
+  into the kernel is structurally impossible.
+
+Each sequence step does the (G, bs) score panel for the GQA head group on
+the MXU and maintains online softmax statistics in VMEM scratch.
 """
 from __future__ import annotations
 
@@ -26,6 +41,28 @@ import jax.experimental.pallas.tpu as pltpu
 from .common import CompilerParams, decompress_block
 
 NEG_INF = -1e30
+
+
+def _online_update(q, k_blk, v_blk, acc_ref, m_ref, l_ref, *, sm_scale,
+                   valid=None):
+    """One flash step: score a (bs, D) panel against the (G, D) query group
+    and fold it into the online-softmax scratch state."""
+    s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    if valid is not None:                                    # (1, bs) mask
+        s = jnp.where(valid, s, NEG_INF)
+    m_prev = m_ref[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))         # (G,)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])                          # (G, bs)
+    if valid is not None:
+        p = jnp.where(valid, p, 0.0)
+    l_new = l_ref[:, 0] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jnp.dot(p, v_blk,
+                              preferred_element_type=jnp.float32))
+    m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
 
 
 def _kernel(nb_ref, q_ref, kbm_ref, kval_ref, vbm_ref, vval_ref,
@@ -45,23 +82,11 @@ def _kernel(nb_ref, q_ref, kbm_ref, kval_ref, vbm_ref, vval_ref,
     def _block():
         k_blk = decompress_block(kbm_ref[0, 0, 0], kval_ref[0, 0, 0], bs, d,
                                  dtype=jnp.float32)              # (bs, D)
-        q = q_ref[0, 0].astype(jnp.float32)                      # (G, D)
-        s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * sm_scale
-
-        m_prev = m_ref[:, 0]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))         # (G,)
-        alpha = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new[:, None])                          # (G, bs)
-        l_new = l_ref[:, 0] * alpha + jnp.sum(p, axis=-1)
-
         v_blk = decompress_block(vbm_ref[0, 0, 0], vval_ref[0, 0, 0], bs, d,
                                  dtype=jnp.float32)              # (bs, D)
-        acc_ref[...] = (acc_ref[...] * alpha[:, None]
-                        + jnp.dot(p, v_blk,
-                                  preferred_element_type=jnp.float32))
-        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
-        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+        q = q_ref[0, 0].astype(jnp.float32)                      # (G, D)
+        _online_update(q, k_blk, v_blk, acc_ref, m_ref, l_ref,
+                       sm_scale=sm_scale)
 
     @pl.when(s_idx == pl.num_programs(2) - 1)
     def _done():
@@ -78,6 +103,9 @@ def sparse_decode_attention_pallas(
         bs: int, sm_scale: float, interpret: bool = True,
         n_blocks: jax.Array | None = None):
     """Prefix-partial attention over the compressed cache.
+
+    Kept for the context-parallel path (per-shard partials merge across
+    chips); single-chip decode uses the fused entry below.
 
     q:         [B, Hkv, G, D]
     k_bitmap:  uint32 [B, Hkv, Sb, bs*D//32]   (same for v_bitmap)
@@ -126,3 +154,124 @@ def sparse_decode_attention_pallas(
         name="sparse_decode_attention",
     )(nb2, q, k_bitmap, k_values, v_bitmap, v_values)
     return out, lse
+
+
+def _fused_kernel(nb_ref, tl_ref, q_ref, kbm_ref, kval_ref, vbm_ref,
+                  vval_ref, kt_ref, vt_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, bs, d, sm_scale, sb):
+    """Prefix + tail in one sequential sweep.
+
+    Steps ``[0, sb)`` walk the compressed prefix blocks (gated by the
+    per-slot valid-block count in SMEM); steps ``[sb, sb+tb)`` walk the
+    dense tail ring (gated per token by the per-slot ``tail_len`` in SMEM).
+    One online-softmax scratch state spans both phases, so the final step
+    writes the fully-normalized attention output — no lse ever leaves the
+    kernel.
+    """
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(jnp.logical_and(s_idx < sb, s_idx < nb_ref[0, 0]))
+    def _prefix_block():
+        k_blk = decompress_block(kbm_ref[0, 0, 0], kval_ref[0, 0, 0], bs, d,
+                                 dtype=jnp.float32)              # (bs, D)
+        v_blk = decompress_block(vbm_ref[0, 0, 0], vval_ref[0, 0, 0], bs, d,
+                                 dtype=jnp.float32)
+        q = q_ref[0, 0].astype(jnp.float32)                      # (G, D)
+        _online_update(q, k_blk, v_blk, acc_ref, m_ref, l_ref,
+                       sm_scale=sm_scale)
+
+    tail_base = (s_idx - sb) * bs
+
+    @pl.when(jnp.logical_and(s_idx >= sb, tail_base < tl_ref[0, 0]))
+    def _tail_block():
+        k_blk = kt_ref[0, 0].astype(jnp.float32)                 # (bs, D)
+        v_blk = vt_ref[0, 0].astype(jnp.float32)
+        q = q_ref[0, 0].astype(jnp.float32)
+        tok = tail_base + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        _online_update(q, k_blk, v_blk, acc_ref, m_ref, l_ref,
+                       sm_scale=sm_scale, valid=tok < tl_ref[0, 0])
+
+    @pl.when(s_idx == pl.num_programs(2) - 1)
+    def _done():
+        l_safe = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("bs", "sm_scale", "interpret"))
+def sparse_decode_attention_fused_pallas(
+        q: jax.Array,
+        k_bitmap: jax.Array, k_values: jax.Array,
+        v_bitmap: jax.Array, v_values: jax.Array,
+        k_tail: jax.Array, v_tail: jax.Array,
+        bs: int, sm_scale: float, interpret: bool = True,
+        n_blocks: jax.Array | None = None,
+        tail_len: jax.Array | None = None) -> jax.Array:
+    """Fused prefix+tail flash-decode: final attention in ONE pallas_call.
+
+    q:             [B, Hkv, G, D]
+    k_bitmap:      uint32 [B, Hkv, Sb, bs*D//32]   (same for v_bitmap)
+    k_values:      [B, Hkv, Sb, Ck]                (v_values: [.., Cv])
+    k_tail/v_tail: dense tail ring [B, Hkv, Tp, D] with ``Tp % bs == 0``
+                   (the dispatcher zero-pads the ring to a whole number of
+                   (bs,)-token panels; padding is masked by ``tail_len``).
+    n_blocks:      optional int32 [B] — per-slot valid prefix blocks;
+                   None means all ``Sb`` are valid.
+    tail_len:      optional int32 [B] — per-slot valid tail tokens; None
+                   means the whole ring is valid.
+    Returns out [B, Hkv, G, D] f32 — softmax-normalized over the union of
+    valid prefix and tail positions (all-empty slots return zeros).
+    """
+    b, hkv, g, d = q.shape
+    sb = k_bitmap.shape[2]
+    tp = k_tail.shape[2]
+    assert sb >= 1 and tp >= bs and tp % bs == 0, (sb, tp, bs)
+    tb = tp // bs
+    words = k_bitmap.shape[3]
+    ck, cv = k_values.shape[3], v_values.shape[3]
+    if n_blocks is None:
+        n_blocks = jnp.full((b,), sb, jnp.int32)
+    if tail_len is None:
+        tail_len = jnp.full((b,), tp, jnp.int32)
+    nb2 = n_blocks.astype(jnp.int32).reshape(b, 1)   # 2-D for SMEM
+    tl2 = tail_len.astype(jnp.int32).reshape(b, 1)
+
+    # index maps clamp into range on the other phase's steps (the fetched
+    # block is ignored there — the pl.when gates never fire)
+    pre = lambda bb, h, s: (bb, h, jnp.minimum(s, sb - 1), 0)
+    tail = lambda bb, h, s: (bb, h, jnp.maximum(s - sb, 0), 0)
+
+    out = pl.pallas_call(
+        partial(_fused_kernel, bs=bs, d=d, sm_scale=sm_scale, sb=sb),
+        grid=(b, hkv, sb + tb),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bb, h, s: (bb, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda bb, h, s: (bb, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, d), lambda bb, h, s: (bb, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, words), pre),
+            pl.BlockSpec((1, 1, 1, ck), pre),
+            pl.BlockSpec((1, 1, 1, words), pre),
+            pl.BlockSpec((1, 1, 1, cv), pre),
+            pl.BlockSpec((1, 1, bs, d), tail),
+            pl.BlockSpec((1, 1, bs, d), tail),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bb, h, s: (bb, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="sparse_decode_attention_fused",
+    )(nb2, tl2, q, k_bitmap, k_values, v_bitmap, v_values, k_tail, v_tail)
+    return out

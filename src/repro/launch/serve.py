@@ -145,6 +145,9 @@ def main(argv=None):
           f"max={max(ttfts)*1e3:.0f}ms; e2e p50={np.median(lats)*1e3:.0f}ms; "
           f"finish: { {o.finish_reason for o in out.values()} }")
     print("[serve] sample:", list(out[rids[0]].token_ids[:16]))
+    lps = [lp for o in out.values() for lp in o.logprobs if lp is not None]
+    print(f"[serve] mean chosen-token logprob: {np.mean(lps):.3f} "
+          f"({len(lps)} tokens)")
     return 0
 
 

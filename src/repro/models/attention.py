@@ -151,10 +151,13 @@ def attn_decode(p, x_t: jax.Array, cache, cfg, ctx,
         cache = append_token(cache, k_new, v_new)
         if (getattr(cfg, "cp_decode", False) and ctx is not None
                 and ctx.mesh is not None and cache.k_sp.bitmap.ndim == 5):
+            # context-parallel: the only surviving partial+merge consumer
             from repro.distributed.cp_attention import \
                 sparse_decode_attention_cp
             o = sparse_decode_attention_cp(q, cache, hkv, sm, ctx)
         else:
+            # fused prefix+tail flash-decode: one kernel yields the final
+            # attention output (no XLA-side tail merge)
             o = ops.sparse_decode_attention(
                 q, cache.k_sp, cache.v_sp, hkv, sm,
                 cache.k_tail, cache.v_tail, cache.tail_len)
@@ -194,6 +197,11 @@ def pooled_attn_decode(p, x_t: jax.Array, kv: Dict[str, jax.Array], cfg,
     "v_bitmap", "v_values", "k_tail"/"v_tail" [B,Hkv,T,D]};
     positions/prefix_blocks/tail_len int32 [B]; slot_mask bool [B] (inactive
     slots keep their cache bit-identical and produce ignorable outputs).
+
+    The attention itself is the FUSED prefix+tail flash-decode op: one
+    kernel walks each slot's valid prefix blocks and its tail ring under
+    one online softmax, so the per-token hot loop has no XLA-side tail
+    attention, lse merge, or GQA head materialization.
     """
     b, _ = x_t.shape
     hq, hkv, hd = cfg.padded_heads, cfg.n_kv, cfg.hd

@@ -145,13 +145,13 @@ class Engine:
         lanes = sampling.broadcast_lanes(params, b)
         live = jnp.ones((b,), bool)
         toks = []
-        tok, lanes = self._sample(logits, lanes, live)
+        tok, _, lanes = self._sample(logits, lanes, live)
         for i in range(params.max_new_tokens - 1):
             toks.append(tok)
             if self.kv_mode == "sparse":
                 cache = self._maybe_refreeze(cache)
             logits, cache = self._decode(self.params, cache, tok[:, None])
-            tok, lanes = self._sample(logits, lanes, live)
+            tok, _, lanes = self._sample(logits, lanes, live)
         toks.append(tok)
         return jnp.stack(toks, axis=1), cache
 
@@ -226,7 +226,11 @@ class ContinuousEngine:
     release / set_lane, plus one prefill per distinct chunk length);
     admissions, evictions, refreezes and *heterogeneous sampling params*
     never retrace — see :func:`retrace_count`.  Host<->device traffic per
-    tick is one token vector; slot lengths are mirrored host-side.
+    tick is one token vector plus one chosen-token logprob vector (surfaced
+    on :attr:`RequestOutput.logprobs`); slot lengths are mirrored
+    host-side.  Per layer, the decode tick's attention is ONE fused
+    prefix+tail flash-decode kernel — the XLA-side tail attention + lse
+    merge the two-pass design paid per token is gone.
     """
 
     def __init__(self, params, cfg, ctx=NULL_CTX, slots: int = 4,
@@ -252,12 +256,15 @@ class ContinuousEngine:
                                    self.pool.bs, chunk=prefill_chunk)
         bs_ = self.pool.bs
 
-        # sampling stays on device: only [slots]-sized int32 token vectors
-        # cross the host boundary each tick, never [slots, vocab] logits
+        # sampling stays on device: only [slots]-sized token + logprob
+        # vectors cross the host boundary each tick, never [slots, vocab]
+        # logits.  The decode attention inside forward_decode_pooled is the
+        # fused prefix+tail kernel — one pallas_call per layer, no
+        # post-kernel tail merge to run (or time) out here.
         def _decode(p, st, t, m):
             logits, st = lm.forward_decode_pooled(p, st, t, m, cfg, ctx, bs_)
-            tok, lanes = sampling.sample_step(logits, st["sample"], m)
-            return tok, {**st, "sample": lanes}
+            tok, logp, lanes = sampling.sample_step(logits, st["sample"], m)
+            return tok, logp, {**st, "sample": lanes}
 
         def _prefill(p, st, t, s, final):
             logits, st = lm.forward_prefill_chunk(p, st, t, s, cfg, ctx, bs_)
@@ -267,17 +274,23 @@ class ContinuousEngine:
             # the key advances only when the chunk is final (= a token is
             # actually sampled), keeping the request's RNG stream a pure
             # function of its sampled-token count
-            tok, lane = sampling.sample_step(
+            tok, logp, lane = sampling.sample_step(
                 logits, lane, jnp.reshape(final, (1,)))
             lanes = {**lanes, "rng": jax.lax.dynamic_update_slice_in_dim(
                 lanes["rng"], lane["rng"], s, axis=0)}
-            return tok, {**st, "sample": lanes}
+            return tok, logp, {**st, "sample": lanes}
 
         self._decode = jax.jit(_decode)
         self._prefill_chunk = jax.jit(_prefill)
         self._refreeze = jax.jit(self.pool.refreeze)
         self._release = jax.jit(self.pool.release)
-        self._set_lane = jax.jit(sampling.set_lane)
+        # a fresh function object, NOT sampling.set_lane itself: pjit's
+        # fastpath cache is keyed on the function, so jitting the shared
+        # module function would let other engines' pool geometries count
+        # against this engine's trace_counts()
+        self._set_lane = jax.jit(
+            lambda st, slot, t, k, p, key:
+                sampling.set_lane(st, slot, t, k, p, key))
         # host mirrors (avoid a device sync per tick)
         self._tail_len = np.zeros(slots, np.int64)
         self._last_tok: Dict[int, int] = {}           # slot -> last token
@@ -363,14 +376,15 @@ class ContinuousEngine:
             chunk = sch.prefill_chunk(req)
             final = req.prefill_done >= len(req.prompt)
             toks = jnp.asarray(np.asarray(chunk, np.int32)[None, :])
-            tok, self.state = self._prefill_chunk(
+            tok, logp, self.state = self._prefill_chunk(
                 self.params, self.state, toks, jnp.int32(req.slot),
                 jnp.asarray(final))
             # device-side tail_len after a chunk = chunk_len % bs, and all
             # chunks before the last are block-aligned
             self._tail_len[req.slot] = req.prefill_done % self.pool.bs
             if final:
-                self._emit(req.slot, int(np.asarray(tok)[0]), events)
+                self._emit(req.slot, int(np.asarray(tok)[0]),
+                           float(np.asarray(logp)[0]), events)
 
         # decode tick for every slot with a live request past prefill
         slots = sch.decoding_slots()
@@ -382,19 +396,19 @@ class ContinuousEngine:
         for s in slots:
             tokens[s, 0] = self._last_tok[s]
             mask[s] = True
-        tok, self.state = self._decode(
+        tok, logp, self.state = self._decode(
             self.params, self.state, jnp.asarray(tokens), jnp.asarray(mask))
-        picked = np.asarray(tok)
+        picked, logps = np.asarray(tok), np.asarray(logp)
         for s in slots:
             self._tail_len[s] += 1
-            self._emit(s, int(picked[s]), events)
+            self._emit(s, int(picked[s]), float(logps[s]), events)
         return events
 
-    def _emit(self, slot: int, tok: int,
+    def _emit(self, slot: int, tok: int, logprob: float,
               events: List[RequestOutput]) -> None:
         """Record a generated token; recycle the slot if that finished it."""
         req = self.scheduler.active[slot]
-        finished = self.scheduler.record_token(slot, tok) is not None
+        finished = self.scheduler.record_token(slot, tok, logprob) is not None
         out = req.output()
         events.append(out)
         cb = self._callbacks.get(req.rid)

@@ -19,6 +19,13 @@ or who it shares the batch with.
 ``temperature == 0`` lanes bypass the categorical entirely and reduce to
 exactly ``jnp.argmax(logits, -1).astype(int32)`` — bit-identical to the
 greedy-only engine this API replaces.
+
+Two per-tick cost notes: top-k/top-p masking is sort-free on the hot path
+(a ``lax.top_k`` bucket of :data:`TOPP_BUCKET` entries replaces the full
+``[slots, V]`` sort; an in-trace ``lax.cond`` keeps the exact full-sort
+branch for lanes with unbounded support), and the sampler also returns a
+``[slots]`` chosen-token logprob lane so ``RequestOutput.logprobs`` costs
+no extra device round trip.
 """
 from __future__ import annotations
 
@@ -109,12 +116,20 @@ class RequestOutput:
 
     Streaming yields one per emitted token (``finish_reason is None`` while
     running); ``ContinuousEngine.run`` returns the final one per request.
+
+    ``logprobs[i]`` is the chosen-token log-probability of ``token_ids[i]``
+    under the model's *unmodified* distribution (``log_softmax(logits)`` —
+    before temperature / top-k / top-p shaping), carried out of the jitted
+    sampler as one extra ``[slots]`` lane per tick.  Entries are ``None``
+    only when the producer recorded tokens without logprobs (host-only
+    scheduler tests).
     """
     request_id: int
     prompt_token_ids: Tuple[int, ...]
     token_ids: Tuple[int, ...]
     finish_reason: Optional[str]          # None | "stop" | "length"
     metrics: RequestMetrics
+    logprobs: Tuple[Optional[float], ...] = ()
 
     @property
     def finished(self) -> bool:
@@ -172,18 +187,20 @@ def set_lane(state: Dict[str, Any], slot: jax.Array, temperature: jax.Array,
 # the sampler
 # ---------------------------------------------------------------------------
 
-def _mask_logits(logits: jax.Array, temperature: jax.Array,
-                 top_k: jax.Array, top_p: jax.Array) -> jax.Array:
-    """Temperature -> top-k -> top-p, all vectorized over the lane axis.
+# Static bucket for the sort-free top-p path: lanes whose support is
+# bounded by ``top_k <= TOPP_BUCKET`` never touch a full [B, V] sort.
+TOPP_BUCKET = 128
 
-    Returns masked/scaled logits [B, V] ready for a categorical draw; at
-    least one token always survives.  top_k == 0 and top_p == 1 are exact
-    no-ops (modulo temperature scaling).
+
+def _mask_logits_sorted(scaled: jax.Array, top_k: jax.Array,
+                        top_p: jax.Array) -> jax.Array:
+    """Exact full-sort masker (the pre-bucketing reference semantics).
+
+    ``scaled`` [B, V] is already temperature-scaled.  Kept as the exact
+    fallback branch of :func:`_mask_logits` and as the oracle the bucketed
+    path is tested against (identical samples at equal seed).
     """
-    v = logits.shape[-1]
-    # temperature == 0 lanes take the argmax path in sample_step; the clamp
-    # only keeps this branch finite for them.
-    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    v = scaled.shape[-1]
     sorted_desc = -jnp.sort(-scaled, axis=-1)                    # [B, V]
 
     k = jnp.clip(jnp.where(top_k > 0, top_k, v), 1, v)
@@ -192,9 +209,13 @@ def _mask_logits(logits: jax.Array, temperature: jax.Array,
 
     # nucleus over the already top-k-masked distribution: keep the sorted
     # prefix whose mass *before* each token is < top_p (the first token is
-    # always kept), then translate back via a value cutoff.
+    # always kept), then translate back via a value cutoff.  The
+    # normalizer is the same O(V) logsumexp over ``kept`` the bucketed
+    # masker uses, so the two branches' per-position probabilities agree
+    # to the last ulp wherever the kept support coincides.
     sorted_kept = jnp.where(sorted_desc < kth, -jnp.inf, sorted_desc)
-    probs = jax.nn.softmax(sorted_kept, axis=-1)
+    denom = jax.scipy.special.logsumexp(kept, axis=-1, keepdims=True)
+    probs = jnp.exp(sorted_kept - denom)
     cum_before = jnp.cumsum(probs, axis=-1) - probs
     in_nucleus = cum_before < top_p[:, None]
     cutoff = jnp.min(jnp.where(in_nucleus, sorted_desc, jnp.inf),
@@ -202,9 +223,87 @@ def _mask_logits(logits: jax.Array, temperature: jax.Array,
     return jnp.where(kept < cutoff, -jnp.inf, kept)
 
 
+def _mask_logits_bucketed(scaled: jax.Array, top_k: jax.Array,
+                          top_p: jax.Array, kb: int) -> jax.Array:
+    """Two-pass threshold top-k/top-p without the full [B, V] sort.
+
+    Pass 1: ``lax.top_k`` pulls the (already sorted) ``kb``-entry bucket —
+    with every lane's ``top_k`` in [1, kb], the kept support lives entirely
+    inside it, so the k-th value threshold and the nucleus cutoff read off
+    the bucket.  Pass 2: the nucleus mass is normalized against the *exact*
+    kept distribution via an O(V) logsumexp (no sort), then translated back
+    to a value cutoff applied to the full row.  Lanes with ``top_k == 0``
+    reach this branch only when ``top_p == 1`` (no masking at all).
+    """
+    top_vals, _ = jax.lax.top_k(scaled, kb)                      # [B, kb]
+    k = jnp.clip(top_k, 1, kb)
+    kth = jnp.take_along_axis(top_vals, (k - 1)[:, None], axis=-1)
+    kth = jnp.where((top_k > 0)[:, None], kth, -jnp.inf)
+    kept = jnp.where(scaled < kth, -jnp.inf, scaled)
+
+    denom = jax.scipy.special.logsumexp(kept, axis=-1, keepdims=True)
+    bucket_kept = jnp.where(top_vals < kth, -jnp.inf, top_vals)
+    probs = jnp.exp(bucket_kept - denom)
+    cum_before = jnp.cumsum(probs, axis=-1) - probs
+    in_nucleus = cum_before < top_p[:, None]
+    cutoff = jnp.min(jnp.where(in_nucleus, top_vals, jnp.inf),
+                     axis=-1, keepdims=True)
+    cutoff = jnp.where((top_p >= 1.0)[:, None], -jnp.inf, cutoff)
+    return jnp.where(kept < cutoff, -jnp.inf, kept)
+
+
+def _mask_logits(logits: jax.Array, temperature: jax.Array,
+                 top_k: jax.Array, top_p: jax.Array,
+                 live: Optional[jax.Array] = None) -> jax.Array:
+    """Temperature -> top-k -> top-p, all vectorized over the lane axis.
+
+    Returns masked/scaled logits [B, V] ready for a categorical draw; at
+    least one token always survives.  top_k == 0 and top_p == 1 are exact
+    no-ops (modulo temperature scaling).
+
+    The hot path is sort-free: lanes bounded by ``top_k <= TOPP_BUCKET``
+    resolve both thresholds from a ``lax.top_k`` bucket; a single runtime
+    ``lax.cond`` falls back to the exact full-sort masker only when some
+    lane needs unbounded support (``top_k == 0`` with ``top_p < 1``, or
+    ``top_k > TOPP_BUCKET``).  Both branches live in one trace, so
+    heterogeneous lanes never retrace.
+
+    ``live`` (bool [B], optional) restricts that fallback decision to
+    lanes whose draw is actually consumed: released slots keep their stale
+    lane params until the next admission, and a parked exact-support lane
+    must not drag every live lane through the full sort.  Dead lanes still
+    get a (bucket-masked) draw — it is discarded by the caller.
+
+    Determinism scope: both branches score kept tokens with identical
+    values and share the same logsumexp normalizer, but the exact branch
+    accumulates the nucleus cumsum over the full [B, V] row while the
+    bucketed branch accumulates over the [B, kb] bucket — so a lane whose
+    scaled logit sits within a float ulp of its nucleus cutoff could in
+    principle mask differently depending on which branch the *batch*
+    takes (i.e. on whether some co-tenant needs unbounded support).  For
+    continuous logits this boundary set has measure zero; the seed-only
+    determinism contract holds per decode branch.
+    """
+    v = logits.shape[-1]
+    # temperature == 0 lanes take the argmax path in sample_step; the clamp
+    # only keeps this branch finite for them.
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    kb = min(v, TOPP_BUCKET)
+    if kb == v:          # tiny vocab: the bucket IS the full sort
+        return _mask_logits_sorted(scaled, top_k, top_p)
+    needs_exact = (top_k > kb) | ((top_k == 0) & (top_p < 1.0))
+    if live is not None:
+        needs_exact = needs_exact & live
+    return jax.lax.cond(
+        jnp.any(needs_exact),
+        lambda s: _mask_logits_sorted(s, top_k, top_p),
+        lambda s: _mask_logits_bucketed(s, top_k, top_p, kb),
+        scaled)
+
+
 def sample_step(logits: jax.Array, lanes: Dict[str, jax.Array],
                 advance: jax.Array
-                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+                ) -> Tuple[jax.Array, jax.Array, Dict[str, jax.Array]]:
     """Draw one token per lane; split each advancing lane's key on device.
 
     logits [B, V] (any float dtype); lanes as in :func:`init_lanes`;
@@ -212,8 +311,12 @@ def sample_step(logits: jax.Array, lanes: Dict[str, jax.Array],
     engine passes its live-slot mask, so parked slots keep their key and a
     request's token stream depends only on its own tick count).
 
-    Returns (tokens int32 [B], new lanes).  ``temperature == 0`` lanes are
-    exactly ``argmax(logits)``.
+    Returns (tokens int32 [B], logprobs f32 [B], new lanes).
+    ``temperature == 0`` lanes are exactly ``argmax(logits)``.  The
+    logprob lane is the chosen token's ``log_softmax(logits)`` under the
+    model's unmodified distribution (before temperature / top-k / top-p
+    shaping) — the serving engines surface it on
+    :attr:`RequestOutput.logprobs`.
     """
     logits = logits.astype(jnp.float32)
     temp = lanes["temperature"]
@@ -221,9 +324,12 @@ def sample_step(logits: jax.Array, lanes: Dict[str, jax.Array],
 
     split = jax.vmap(lambda k: jax.random.split(k, 2))(lanes["rng"])
     carry, sub = split[:, 0], split[:, 1]
-    masked = _mask_logits(logits, temp, lanes["top_k"], lanes["top_p"])
+    masked = _mask_logits(logits, temp, lanes["top_k"], lanes["top_p"],
+                          live=advance)
     sampled = jax.vmap(jax.random.categorical)(sub, masked).astype(jnp.int32)
 
     tok = jnp.where(temp > 0.0, sampled, greedy_tok)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    chosen_logp = jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
     new_rng = jnp.where(advance[:, None], carry, lanes["rng"])
-    return tok, {**lanes, "rng": new_rng}
+    return tok, chosen_logp, {**lanes, "rng": new_rng}

@@ -38,6 +38,7 @@ class Request:
     slot: int = -1
     prefill_done: int = 0            # prompt tokens already chunk-prefilled
     generated: List[int] = dataclasses.field(default_factory=list)
+    logprobs: List[Optional[float]] = dataclasses.field(default_factory=list)
     finish_reason: Optional[str] = None        # None | "stop" | "length"
     arrival_time: float = 0.0
     first_token_time: Optional[float] = None
@@ -60,7 +61,8 @@ class Request:
             token_ids=tuple(self.generated),
             finish_reason=self.finish_reason,
             metrics=RequestMetrics(self.arrival_time, self.first_token_time,
-                                   self.finished_time))
+                                   self.finished_time),
+            logprobs=tuple(self.logprobs))
 
 
 def _matches_stop(generated: List[int],
@@ -154,13 +156,19 @@ class Scheduler:
         return [s for s, r in self.active.items() if r.decoding]
 
     # -- completion ---------------------------------------------------------
-    def record_token(self, slot: int, token: int) -> Optional[str]:
+    def record_token(self, slot: int, token: int,
+                     logprob: Optional[float] = None) -> Optional[str]:
         """Append a generated token; returns the finish reason (``"stop"``
         for eos / stop sequences, ``"length"`` for max_new_tokens, None if
         still running).  A stop hit on the budget's last token wins over
-        "length".  Finishing releases the slot for re-admission."""
+        "length".  Finishing releases the slot for re-admission.
+
+        ``logprob`` is the token's chosen-token log-probability from the
+        device sampler (surfaced on ``RequestOutput.logprobs``); host-only
+        callers may omit it."""
         req = self.active[slot]
         req.generated.append(token)
+        req.logprobs.append(logprob)
         now = self.clock()
         if req.first_token_time is None:
             req.first_token_time = now

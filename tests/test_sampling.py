@@ -48,7 +48,7 @@ def _draws(logits, lanes, n):
     toks = []
     adv = jnp.ones((logits.shape[0],), bool)
     for _ in range(n):
-        tok, lanes = sampling.sample_step(logits, lanes, adv)
+        tok, _, lanes = sampling.sample_step(logits, lanes, adv)
         toks.append(np.asarray(tok))
     return np.stack(toks)                                  # [n, B]
 
@@ -56,8 +56,8 @@ def _draws(logits, lanes, n):
 def test_temperature0_is_exact_argmax():
     rng = np.random.default_rng(0)
     logits = jnp.asarray(rng.normal(size=(4, VOCAB)).astype(np.float32))
-    tok, _ = sampling.sample_step(logits, _lanes([0.0] * 4),
-                                  jnp.ones((4,), bool))
+    tok, _, _ = sampling.sample_step(logits, _lanes([0.0] * 4),
+                                     jnp.ones((4,), bool))
     np.testing.assert_array_equal(
         np.asarray(tok), np.asarray(jnp.argmax(logits, -1)))
     assert tok.dtype == jnp.int32
@@ -121,10 +121,95 @@ def test_masked_lanes_keep_their_key():
     logits = jnp.asarray(rng.normal(size=(2, VOCAB)).astype(np.float32))
     lanes = _lanes([1.0, 1.0], seeds=[3, 3])
     adv = jnp.asarray([True, False])
-    _, lanes2 = sampling.sample_step(logits, lanes, adv)
+    _, _, lanes2 = sampling.sample_step(logits, lanes, adv)
     assert (np.asarray(lanes2["rng"][0]) != np.asarray(lanes["rng"][0])).any()
     np.testing.assert_array_equal(np.asarray(lanes2["rng"][1]),
                                   np.asarray(lanes["rng"][1]))
+
+
+def test_bucketed_topp_matches_sorted_masker():
+    """The sort-free (lax.top_k bucket) masker must produce the IDENTICAL
+    mask — and therefore identical samples at equal seed — as the full-sort
+    reference for every lane whose support fits the bucket."""
+    rng = np.random.default_rng(7)
+    v = sampling.TOPP_BUCKET * 4                   # force the bucketed path
+    cases = [(1.0, 3, 0.9), (0.7, 8, 0.5), (1.3, 1, 1.0), (2.0, 64, 0.99),
+             (0.9, 5, 1.0), (1.0, 0, 1.0)]        # (temp, top_k, top_p)
+    logits = jnp.asarray(rng.normal(size=(len(cases), v)).astype(np.float32))
+    temp = jnp.asarray([c[0] for c in cases], jnp.float32)
+    top_k = jnp.asarray([c[1] for c in cases], jnp.int32)
+    top_p = jnp.asarray([c[2] for c in cases], jnp.float32)
+    scaled = logits / temp[:, None]
+    m_sort = sampling._mask_logits_sorted(scaled, top_k, top_p)
+    m_fast = sampling._mask_logits(logits, temp, top_k, top_p)
+    np.testing.assert_array_equal(np.asarray(m_fast), np.asarray(m_sort))
+
+    # identical samples at equal seed through sample_step on both maskers
+    lanes = _lanes([c[0] for c in cases], top_ks=[c[1] for c in cases],
+                   top_ps=[c[2] for c in cases], seeds=[11] * len(cases))
+    draws_fast = _draws(logits, lanes, 25)
+    orig = sampling._mask_logits
+    sampling._mask_logits = \
+        lambda lg, t, k, p, live=None: sampling._mask_logits_sorted(
+            lg / jnp.maximum(t, 1e-6)[:, None], k, p)
+    try:
+        draws_sorted = _draws(logits, lanes, 25)
+    finally:
+        sampling._mask_logits = orig
+    np.testing.assert_array_equal(draws_fast, draws_sorted)
+
+
+def test_bucketed_topp_exact_fallback():
+    """Lanes needing unbounded support (top_k == 0 with top_p < 1, or
+    top_k > TOPP_BUCKET) must take the exact full-sort branch."""
+    rng = np.random.default_rng(8)
+    v = sampling.TOPP_BUCKET * 2
+    logits = jnp.asarray(rng.normal(size=(2, v)).astype(np.float32))
+    for top_k, top_p in ((0, 0.7), (sampling.TOPP_BUCKET + 9, 0.8)):
+        tk = jnp.asarray([top_k, 3], jnp.int32)
+        tp = jnp.asarray([top_p, 0.9], jnp.float32)
+        temp = jnp.ones((2,), jnp.float32)
+        m_sort = sampling._mask_logits_sorted(logits, tk, tp)
+        m = sampling._mask_logits(logits, temp, tk, tp)
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(m_sort))
+
+
+def test_stale_dead_lane_does_not_force_exact_sort():
+    """A released slot keeps its lane params until the next admission; a
+    parked exact-support lane (top_k=0, top_p<1) must NOT drag live lanes
+    through the full-sort branch — the fallback decision is gated on
+    ``live``."""
+    rng = np.random.default_rng(10)
+    v = sampling.TOPP_BUCKET * 2
+    logits = jnp.asarray(rng.normal(size=(2, v)).astype(np.float32))
+    tk = jnp.asarray([5, 0], jnp.int32)            # lane 1: stale, exact
+    tp = jnp.asarray([0.9, 0.7], jnp.float32)
+    temp = jnp.ones((2,), jnp.float32)
+    live = jnp.asarray([True, False])
+    m = sampling._mask_logits(logits, temp, tk, tp, live=live)
+    m_bucket = sampling._mask_logits_bucketed(logits / temp[:, None],
+                                              tk, tp, sampling.TOPP_BUCKET)
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(m_bucket))
+    # ...but a LIVE exact-support lane still gets the exact branch
+    m2 = sampling._mask_logits(logits, temp, tk, tp,
+                               live=jnp.asarray([True, True]))
+    m2_sort = sampling._mask_logits_sorted(logits / temp[:, None], tk, tp)
+    np.testing.assert_array_equal(np.asarray(m2), np.asarray(m2_sort))
+
+
+def test_sample_step_returns_chosen_logprob():
+    """The logprob lane is log_softmax of the RAW logits at the chosen
+    token — for greedy and sampled lanes alike."""
+    rng = np.random.default_rng(9)
+    logits = jnp.asarray(rng.normal(size=(3, VOCAB)).astype(np.float32))
+    lanes = _lanes([0.0, 1.0, 2.5], top_ks=[0, 4, 0], seeds=[1, 2, 3])
+    tok, logp, _ = sampling.sample_step(logits, lanes,
+                                        jnp.ones((3,), bool))
+    want = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
+                               tok[:, None], axis=-1)[:, 0]
+    np.testing.assert_allclose(np.asarray(logp), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    assert (np.asarray(logp) <= 0).all()
 
 
 def test_params_validation():
@@ -353,3 +438,28 @@ def test_run_returns_request_outputs(engine_env):
     assert o.finished and len(o.token_ids) == 3
     assert o.prompt_token_ids == tuple(int(t) for t in np.asarray(toks[0]))
     assert o.metrics.e2e_latency >= o.metrics.ttft >= 0
+
+
+def test_request_output_logprobs_lane(engine_env):
+    """Every emitted token carries its chosen-token logprob out of the
+    jitted sampler: one per token, finite, <= 0, and deterministic for a
+    greedy request resubmitted through the (recycled) pool."""
+    cfg, params, toks, eng = engine_env
+    sp = SamplingParams(max_new_tokens=6)
+    rid = eng.submit(toks[0], sp)
+    o1 = eng.run()[rid]
+    assert len(o1.logprobs) == len(o1.token_ids) == 6
+    lp1 = np.asarray(o1.logprobs, np.float64)
+    assert np.isfinite(lp1).all() and (lp1 <= 0).all()
+
+    rid2 = eng.submit(toks[0], sp)                 # same prompt again
+    o2 = eng.run()[rid2]
+    assert o2.token_ids == o1.token_ids
+    np.testing.assert_allclose(np.asarray(o2.logprobs, np.float64), lp1)
+
+    # sampled lanes carry logprobs too
+    rid3 = eng.submit(toks[1], SamplingParams(temperature=0.8, seed=5,
+                                              max_new_tokens=4))
+    o3 = eng.run()[rid3]
+    assert len(o3.logprobs) == 4
+    assert all(lp is not None and lp <= 0 for lp in o3.logprobs)
