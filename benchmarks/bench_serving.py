@@ -14,11 +14,19 @@ Measures, at batch/slot counts 1/4/8 on ``qwen3-0.6b --reduced``:
   so switching every request from greedy to seeded sampling must add no
   traces and <5% tick time (reported as ``overhead``).
 
-  PYTHONPATH=src python -m benchmarks.bench_serving
+``--spec`` instead benchmarks speculative decoding: the same request wave
+through a spec-off engine and a draft–verify engine (``SpecConfig(k)``),
+on drafter-friendly (looping) and drafter-hostile (random) prompts.
+Reports tok/s both ways, the accepted-length histogram, and mean tokens
+committed per verify tick; written to ``BENCH_spec.json``.
+
+  PYTHONPATH=src python -m benchmarks.bench_serving [--spec] [--spec-k K]
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import json
 import time
 
 import jax
@@ -28,7 +36,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import lm
 from repro.serving import (Engine, ContinuousEngine, SamplingParams,
-                           retrace_count)
+                           SpecConfig, retrace_count)
 
 from .common import emit
 
@@ -96,5 +104,76 @@ def run():
              f"overhead={overhead * 100:+.1f}%")
 
 
+def run_spec(k: int = 4, slots: int = 4, steps: int = 64,
+             out_json: str = "BENCH_spec.json"):
+    """Spec-on vs spec-off throughput + accepted-length histogram.
+
+    Two prompt regimes: a short repeating token loop (the n-gram drafter's
+    best case — generation revisits its own history) and uniform random
+    tokens (its worst case — speculation must cost ~nothing and stay
+    token-identical)."""
+    cfg = get_config("qwen3-0.6b").reduced()
+    cfg = dataclasses.replace(cfg, kv_k_sparsity=0.3, kv_v_sparsity=0.5,
+                              kv_tail=KV_TAIL)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    loop = np.tile(rng.integers(0, cfg.vocab, (slots, 8)), (1, PROMPT // 8))
+    rand = rng.integers(0, cfg.vocab, (slots, PROMPT))
+    results = {"k": k, "slots": slots, "steps": steps, "regimes": {}}
+    for regime, prompts in (("loop", loop), ("random", rand)):
+        row = {}
+        for label, spec in (("off", None), ("on", SpecConfig(k=k))):
+            eng = ContinuousEngine(params, cfg, slots=slots,
+                                   max_tokens=PROMPT + steps + KV_TAIL,
+                                   spec=spec)
+            eng.generate_batch(jnp.asarray(prompts, jnp.int32),
+                               SamplingParams(max_new_tokens=3))  # compile
+            if spec is not None:
+                eng.spec_hist[:] = 0          # drop the warmup run's ticks
+            t0 = time.perf_counter()
+            rids = [eng.submit(p, SamplingParams(max_new_tokens=steps))
+                    for p in prompts]
+            out = eng.run()
+            dt = time.perf_counter() - t0
+            toks = {r: list(out[r].token_ids) for r in rids}
+            apt = [out[r].metrics.accepted_per_tick for r in rids]
+            row[label] = {
+                "tok_s": slots * steps / dt,
+                "wall_s": dt,
+                "tokens": toks,
+                "accepted_hist": (eng.spec_hist.tolist()
+                                  if spec is not None else None),
+                "accepted_per_tick": (float(np.mean(apt))
+                                      if spec is not None else 1.0),
+            }
+            emit(f"serving/spec_{label}/{regime}", dt * 1e6,
+                 f"tok_s={row[label]['tok_s']:.1f};"
+                 f"tokens_per_tick={row[label]['accepted_per_tick']:.2f}")
+        # token agreement (1.0 in exact arithmetic; bf16 near-ties between
+        # the [B,1] decode and [B,K+1] verify panels may drift)
+        match = np.mean([row["on"]["tokens"][r] == row["off"]["tokens"][r]
+                         for r in row["on"]["tokens"]])
+        for r in row.values():
+            del r["tokens"]
+        row["greedy_match"] = float(match)
+        row["speedup"] = row["on"]["tok_s"] / row["off"]["tok_s"]
+        emit(f"serving/spec_speedup/{regime}", 0.0,
+             f"x{row['speedup']:.2f};hist={row['on']['accepted_hist']}")
+        results["regimes"][regime] = row
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_json}")
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative-decoding benchmark (BENCH_spec.json)")
+    ap.add_argument("--spec-k", type=int, default=4)
+    args = ap.parse_args()
+    if args.spec:
+        if args.spec_k <= 0:
+            ap.error("--spec requires --spec-k >= 1")
+        run_spec(k=args.spec_k)
+    else:
+        run()

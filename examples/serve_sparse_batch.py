@@ -27,7 +27,7 @@ from repro.data import DataConfig, host_batch
 from repro.distributed import NULL_CTX
 from repro.distributed.convert_plan import convert_concrete
 from repro.models import lm
-from repro.serving import ContinuousEngine, SamplingParams
+from repro.serving import ContinuousEngine, SamplingParams, SpecConfig
 
 
 def main():
@@ -41,6 +41,9 @@ def main():
     ap.add_argument("--int8", action="store_true")
     ap.add_argument("--dense", action="store_true",
                     help="dense weights + dense-capacity KV pool")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: verify up to K n-gram "
+                         "draft tokens per slot per tick (0 = off)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -67,7 +70,8 @@ def main():
     eng = ContinuousEngine(
         params, cfg, slots=args.slots,
         max_tokens=args.prompt_len + args.steps + cfg.kv_tail,
-        prefill_chunk=args.prefill_chunk or None)
+        prefill_chunk=args.prefill_chunk or None,
+        spec=SpecConfig(k=args.spec_k) if args.spec_k else None)
     print(f"[pool] {args.slots} slots x {eng.pool.capacity_tokens} tokens, "
           f"block {eng.pool.bs}, caps k={eng.pool.cap_k} v={eng.pool.cap_v}")
 
@@ -101,6 +105,12 @@ def main():
     print(f"[stream] {args.requests} requests -> {total} tokens in "
           f"{dt:.2f}s ({total/dt:.1f} tok/s) on {args.slots} slots")
     print(f"[jit] traces: {eng.trace_counts()} (decode compiled once)")
+    if args.spec_k:
+        apt = [o.metrics.accepted_per_tick for o in done.values()
+               if o.metrics.accepted_per_tick is not None]
+        mean = f"{sum(apt) / len(apt):.2f}" if apt else "n/a (no decode ticks)"
+        print(f"[spec] accepted-draft histogram {eng.spec_hist.tolist()}; "
+              f"mean tokens committed/tick {mean}")
     print("[sample]", list(done[rids[0]].token_ids[:16]))
 
 

@@ -192,6 +192,33 @@ def freeze_chunk_blocks(k: jax.Array, v: jax.Array,
     return k_bm, k_vals, v_bm, v_vals
 
 
+def append_tail_panel(tail: jax.Array, new: jax.Array, tail_len: jax.Array,
+                      n_valid: jax.Array) -> jax.Array:
+    """Masked multi-token append into the dense tail ring.
+
+    ``tail [B, Hkv, T, D]``; ``new [B, Hkv, m, D]`` — up to ``m`` fresh
+    K/V tokens per slot, written at each slot's own ``tail_len`` offset;
+    ``n_valid int32 [B]`` (or scalar) — how many of the ``m`` panel tokens
+    slot ``b`` actually writes (0 = pure passthrough).  Writes that would
+    land past the ring end are dropped (the caller's rollback/refreeze
+    bookkeeping guarantees the *kept* tokens always fit; only never-kept
+    panel padding can overflow).  One batched scatter at static shapes —
+    invalid panel tokens route to an out-of-bounds row and fall to
+    ``mode="drop"``, so the ring is written in a single pass and the
+    speculative verify step jits once per panel width.
+    """
+    b, _, t, _ = tail.shape
+    m = new.shape[2]
+    tail_len = jnp.broadcast_to(jnp.asarray(tail_len, jnp.int32), (b,))
+    n_valid = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32), (b,))
+    j = jnp.arange(m)
+    off = tail_len[:, None] + j[None, :]                       # [B, m]
+    ok = (j[None, :] < n_valid[:, None]) & (off < t)
+    idx = jnp.where(ok, off, t)                                # t => dropped
+    return jax.vmap(lambda tl, nw, ix: tl.at[:, ix].set(
+        nw.astype(tl.dtype), mode="drop"))(tail, new, idx)
+
+
 def pooled_view(bitmap: jax.Array, values: jax.Array, bs: int, d: int
                 ) -> BlockSparseWeight:
     """Pooled block arrays ``[B, Hkv, Sb, X]`` -> the structured

@@ -139,25 +139,38 @@ def sparse_decode_attention(q: jax.Array,
                             ) -> jax.Array:
     """Decode attention over a compressed frozen prefix + dense tail.
 
-    q: [B, Hq, D]; k_sp/v_sp packed from the [B*Hkv*S, D] cache view with
-    block (bs, D); k_tail/v_tail: [B, Hkv, T, D].
+    q: ``[B, Hq, D]`` (one decode tick) or ``[B, Q, Hq, D]`` (a
+    speculative-verify *query panel* — requires a tail); k_sp/v_sp packed
+    from the [B*Hkv*S, D] cache view with block (bs, D); k_tail/v_tail:
+    [B, Hkv, T, D].
 
     ``tail_len``/``prefix_len`` may be scalar (uniform batch) or per-slot
     ``[B]`` int32 (pooled continuous-batching cache).  ``prefix_len`` must
     be a whole number of (bs,)-token blocks; on the Pallas path it becomes a
-    per-slot valid-block count the kernel skips past.
+    per-slot valid-block count the kernel skips past.  For a query panel,
+    ``tail_len`` counts the tail tokens visible to panel query 0 (its own
+    appended K/V included) and query ``j`` sees ``tail_len + j`` — the
+    intra-window causal mask of the draft–verify step.
 
     When a tail is passed, ONE fused ``pallas_call`` (or, on the XLA
     backend, one grouped-GQA softmax over the concatenated sequence)
     produces the final output: there is no XLA-side tail attention, no lse
     merge, and no ``jnp.repeat`` head materialization on the per-token hot
-    path.  The two-pass partial+merge semantics survive only in
-    ``repro.distributed.cp_attention``, where per-shard partials must cross
-    chips before the merge.
+    path — the K+1-query verify panel rides the exact same kernel with a
+    wider query block.  The two-pass partial+merge semantics survive only
+    in ``repro.distributed.cp_attention``, where per-shard partials must
+    cross chips before the merge.
     """
     interp = _pallas()
     has_tail = k_tail is not None and k_tail.shape[2] > 0
+    panel = q.ndim == 4
+    if panel:
+        assert has_tail, "query panels append into (and need) a dense tail"
     if interp is None:
+        if panel:
+            return ref.sparse_decode_attention_panel_ref(
+                q, k_sp, v_sp, sm_scale, k_tail, v_tail, tail_len,
+                prefix_len)
         if has_tail:
             return ref.sparse_decode_attention_fused_ref(
                 q, k_sp, v_sp, sm_scale, k_tail, v_tail, tail_len,
@@ -165,7 +178,11 @@ def sparse_decode_attention(q: jax.Array,
         return ref.sparse_decode_attention_ref(
             q, k_sp, v_sp, sm_scale, None, None, None, prefix_len)
 
-    b, hq, d = q.shape
+    if panel:
+        b, qn, hq, d = q.shape
+    else:
+        b, hq, d = q.shape
+        qn = 1
     g = hq // hkv
     bs = k_sp.block[0]
     assert k_sp.block[1] == d
@@ -174,7 +191,12 @@ def sparse_decode_attention(q: jax.Array,
         sb = k_sp.bitmap.shape[2]
     else:
         sb = k_sp.bitmap.shape[0] // (b * hkv)
-    qg = q.reshape(b, hkv, g, d)
+    if panel:
+        # query-major rows within each GQA group: row // g = panel index
+        qg = (q.reshape(b, qn, hkv, g, d).transpose(0, 2, 1, 3, 4)
+              .reshape(b, hkv, qn * g, d))
+    else:
+        qg = q.reshape(b, hkv, g, d)
     kbm = k_sp.bitmap.reshape(b, hkv, sb, words)
     kvv = k_sp.values.reshape(b, hkv, sb, k_sp.capacity)
     vbm = v_sp.bitmap.reshape(b, hkv, sb, words)
@@ -196,7 +218,10 @@ def sparse_decode_attention(q: jax.Array,
         o = sparse_decode_attention_fused_pallas(
             qg, kbm, kvv, vbm, vvv, k_tail, v_tail, bs=bs,
             sm_scale=sm_scale, interpret=interp, n_blocks=n_blocks,
-            tail_len=tl)
+            tail_len=tl, group=g)
+        if panel:
+            return (o.reshape(b, hkv, qn, g, d).transpose(0, 2, 1, 3, 4)
+                    .reshape(b, qn, hq, d).astype(q.dtype))
     else:
         o, _ = sparse_decode_attention_pallas(
             qg, kbm, kvv, vbm, vvv, bs=bs, sm_scale=sm_scale,

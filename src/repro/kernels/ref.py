@@ -211,6 +211,66 @@ def sparse_decode_attention_fused_ref(
     return o.reshape(b, hq, d).astype(q.dtype)
 
 
+def sparse_decode_attention_panel_ref(
+        q: jax.Array,
+        k_sp: BlockSparseWeight, v_sp: BlockSparseWeight,
+        sm_scale: float,
+        k_tail: jax.Array, v_tail: jax.Array,
+        tail_len: Optional[jax.Array] = None,
+        prefix_len: Optional[jax.Array] = None) -> jax.Array:
+    """Query-panel oracle for the fused kernel's speculative verify step.
+
+    Same concat-free two-panel softmax as
+    :func:`sparse_decode_attention_fused_ref`, generalized from one query
+    to a ``[B, Q, Hq, D]`` panel: every panel query sees the full valid
+    prefix, while tail visibility is *intra-window causal* — panel query
+    ``j`` sees ``tail_len + j`` tail tokens (``tail_len`` counts the
+    tokens visible to query 0, its own appended K/V included; each later
+    query additionally sees the K/V its panel predecessors appended).
+    ``Q == 1`` reduces exactly to the fused single-query semantics.
+
+    Returns out [B, Q, Hq, D]; slots with nothing valid return zeros.
+    """
+    b, qn, hq, d = q.shape
+    hkv = k_tail.shape[1]
+    k, v = _unpack_prefix(q[:, 0], k_sp, v_sp, hkv)
+    s_len, t = k.shape[2], k_tail.shape[2]
+    valid_p = _len_valid(
+        s_len, prefix_len if prefix_len is not None else s_len, b)
+    tl = jnp.asarray(tail_len if tail_len is not None else t)
+    if tl.ndim == 0:
+        tl = jnp.broadcast_to(tl, (b,))
+    # [B, Q, T]: query j sees tail tokens < tl + j
+    valid_t = (jnp.arange(t)[None, None, :]
+               < tl[:, None, None] + jnp.arange(qn)[None, :, None])
+    g = hq // hkv
+    qg = q.reshape(b, qn, hkv, g, d).transpose(0, 2, 1, 3, 4)
+
+    def panel(kx, vx, valid):
+        """valid [B, Qv, S] with Qv in {1, Q} (broadcast over heads)."""
+        s = jnp.einsum("bhqgd,bhsd->bhqgs", qg, kx,
+                       preferred_element_type=jnp.float32) * sm_scale
+        vm = valid[:, None, :, None, :]
+        s = jnp.where(vm, s, -jnp.inf)
+        m = jnp.max(s, axis=-1)                          # [B,Hkv,Q,G]
+        p = jnp.exp(s - jnp.where(jnp.isfinite(m), m, 0.0)[..., None])
+        p = jnp.where(vm, p, 0.0)
+        o = jnp.einsum("bhqgs,bhsd->bhqgd", p.astype(vx.dtype), vx,
+                       preferred_element_type=jnp.float32)
+        return o, jnp.sum(p, axis=-1), m
+
+    o1, l1, m1 = panel(k, v, valid_p[:, None, :])
+    o2, l2, m2 = panel(k_tail, v_tail, valid_t)
+    m = jnp.maximum(m1, m2)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    w1 = jnp.exp(m1 - m_safe)
+    w2 = jnp.exp(m2 - m_safe)
+    l_safe = jnp.maximum(l1 * w1 + l2 * w2, 1e-30)
+    o = (o1 * w1[..., None] + o2 * w2[..., None]) / l_safe[..., None]
+    return (o.transpose(0, 2, 1, 3, 4)
+            .reshape(b, qn, hq, d).astype(q.dtype))
+
+
 def sparse_decode_attention_ref(
         q: jax.Array,
         k_sp: BlockSparseWeight, v_sp: BlockSparseWeight,

@@ -20,6 +20,15 @@ Two entry points share one online-softmax core:
   no XLA-side tail attention, no lse merge, and no ``jnp.repeat`` GQA head
   materialization anywhere on the per-token path.
 
+  The query operand is a *panel*: ``[B, Hkv, Q*G, D]`` rows ordered
+  query-major within the GQA group (``row // G`` is the query's panel
+  index).  ``Q == 1`` is the plain decode tick; ``Q == K+1`` is the
+  speculative-decoding verify step, where panel query ``j`` additionally
+  sees the ``j`` tail tokens its panel predecessors appended — the
+  intra-window causal mask is ``token < tail_len + j``, applied per row
+  against the same SMEM ``tail_len`` scalar.  The compressed prefix is
+  fully visible to every panel query, so the prefix phase is untouched.
+
 * :func:`sparse_decode_attention_pallas` — the prefix-*partial* entry:
   returns ``(out, lse)`` over the compressed prefix only.  Kept for the
   context-parallel decode path (``repro.distributed.cp_attention``), where
@@ -158,7 +167,7 @@ def sparse_decode_attention_pallas(
 
 def _fused_kernel(nb_ref, tl_ref, q_ref, kbm_ref, kval_ref, vbm_ref,
                   vval_ref, kt_ref, vt_ref, o_ref, acc_ref, m_ref, l_ref,
-                  *, bs, d, sm_scale, sb):
+                  *, bs, d, sm_scale, sb, g):
     """Prefix + tail in one sequential sweep.
 
     Steps ``[0, sb)`` walk the compressed prefix blocks (gated by the
@@ -167,6 +176,12 @@ def _fused_kernel(nb_ref, tl_ref, q_ref, kbm_ref, kval_ref, vbm_ref,
     One online-softmax scratch state spans both phases, so the final step
     writes the fully-normalized attention output — no lse ever leaves the
     kernel.
+
+    The query block is ``(Q*g, D)`` rows ordered query-major within the
+    GQA group; tail validity is per row — panel query ``row // g`` sees
+    ``tail_len + row // g`` tail tokens (the extra ones are the K/V its
+    panel predecessors appended).  ``Q == 1`` reduces to the plain
+    single-query mask ``token < tail_len``.
     """
     s_idx = pl.program_id(2)
 
@@ -182,20 +197,25 @@ def _fused_kernel(nb_ref, tl_ref, q_ref, kbm_ref, kval_ref, vbm_ref,
                                  dtype=jnp.float32)              # (bs, D)
         v_blk = decompress_block(vbm_ref[0, 0, 0], vval_ref[0, 0, 0], bs, d,
                                  dtype=jnp.float32)
-        q = q_ref[0, 0].astype(jnp.float32)                      # (G, D)
+        q = q_ref[0, 0].astype(jnp.float32)                      # (Q*g, D)
         _online_update(q, k_blk, v_blk, acc_ref, m_ref, l_ref,
                        sm_scale=sm_scale)
 
     tail_base = (s_idx - sb) * bs
+    qg = q_ref.shape[2]
+    # per-row visibility limit: query j (= row // g) sees tail_len + j
+    row_q = jax.lax.broadcasted_iota(jnp.int32, (qg, 1), 0) // g
 
-    @pl.when(jnp.logical_and(s_idx >= sb, tail_base < tl_ref[0, 0]))
+    @pl.when(jnp.logical_and(s_idx >= sb,
+                             tail_base < tl_ref[0, 0] + (qg // g - 1)))
     def _tail_block():
         k_blk = kt_ref[0, 0].astype(jnp.float32)                 # (bs, D)
         v_blk = vt_ref[0, 0].astype(jnp.float32)
         q = q_ref[0, 0].astype(jnp.float32)
         tok = tail_base + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
         _online_update(q, k_blk, v_blk, acc_ref, m_ref, l_ref,
-                       sm_scale=sm_scale, valid=tok < tl_ref[0, 0])
+                       sm_scale=sm_scale,
+                       valid=tok < tl_ref[0, 0] + row_q)
 
     @pl.when(s_idx == pl.num_programs(2) - 1)
     def _done():
@@ -203,7 +223,7 @@ def _fused_kernel(nb_ref, tl_ref, q_ref, kbm_ref, kval_ref, vbm_ref,
         o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
 
 
-@partial(jax.jit, static_argnames=("bs", "sm_scale", "interpret"))
+@partial(jax.jit, static_argnames=("bs", "sm_scale", "interpret", "group"))
 def sparse_decode_attention_fused_pallas(
         q: jax.Array,
         k_bitmap: jax.Array, k_values: jax.Array,
@@ -211,10 +231,15 @@ def sparse_decode_attention_fused_pallas(
         k_tail: jax.Array, v_tail: jax.Array,
         bs: int, sm_scale: float, interpret: bool = True,
         n_blocks: jax.Array | None = None,
-        tail_len: jax.Array | None = None) -> jax.Array:
+        tail_len: jax.Array | None = None,
+        group: int | None = None) -> jax.Array:
     """Fused prefix+tail flash-decode: final attention in ONE pallas_call.
 
-    q:             [B, Hkv, G, D]
+    q:             [B, Hkv, Q*G, D] query panel, rows ordered query-major
+                   within the GQA group (``row // G`` = panel index).
+                   ``group=G`` declares the group size; None means the
+                   whole row axis is one query (``Q == 1`` — the plain
+                   decode tick).
     k_bitmap:      uint32 [B, Hkv, Sb, bs*D//32]   (same for v_bitmap)
     k_values:      [B, Hkv, Sb, Ck]                (v_values: [.., Cv])
     k_tail/v_tail: dense tail ring [B, Hkv, Tp, D] with ``Tp % bs == 0``
@@ -222,12 +247,16 @@ def sparse_decode_attention_fused_pallas(
                    (bs,)-token panels; padding is masked by ``tail_len``).
     n_blocks:      optional int32 [B] — per-slot valid prefix blocks;
                    None means all ``Sb`` are valid.
-    tail_len:      optional int32 [B] — per-slot valid tail tokens; None
-                   means the whole ring is valid.
-    Returns out [B, Hkv, G, D] f32 — softmax-normalized over the union of
-    valid prefix and tail positions (all-empty slots return zeros).
+    tail_len:      optional int32 [B] — tail tokens visible to panel query
+                   0; query ``j`` sees ``tail_len + j`` (intra-window
+                   causal — the verify step appends one K/V per panel
+                   query).  None means the whole ring is valid to query 0.
+    Returns out [B, Hkv, Q*G, D] f32 — softmax-normalized over the union
+    of valid prefix and tail positions (all-empty slots return zeros).
     """
-    b, hkv, g, d = q.shape
+    b, hkv, qg, d = q.shape
+    g = group or qg
+    assert qg % g == 0, (qg, g)
     sb = k_bitmap.shape[2]
     tp = k_tail.shape[2]
     assert sb >= 1 and tp >= bs and tp % bs == 0, (sb, tp, bs)
@@ -247,14 +276,14 @@ def sparse_decode_attention_fused_pallas(
     tail = lambda bb, h, s: (bb, h, jnp.maximum(s - sb, 0), 0)
 
     out = pl.pallas_call(
-        partial(_fused_kernel, bs=bs, d=d, sm_scale=sm_scale, sb=sb),
+        partial(_fused_kernel, bs=bs, d=d, sm_scale=sm_scale, sb=sb, g=g),
         grid=(b, hkv, sb + tb),
         in_specs=[
             pl.BlockSpec((1, 1), lambda bb, h, s: (bb, 0),
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((1, 1), lambda bb, h, s: (bb, 0),
                          memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, 1, g, d), lambda bb, h, s: (bb, h, 0, 0)),
+            pl.BlockSpec((1, 1, qg, d), lambda bb, h, s: (bb, h, 0, 0)),
             pl.BlockSpec((1, 1, 1, words), pre),
             pl.BlockSpec((1, 1, 1, ck), pre),
             pl.BlockSpec((1, 1, 1, words), pre),
@@ -262,12 +291,12 @@ def sparse_decode_attention_fused_pallas(
             pl.BlockSpec((1, 1, bs, d), tail),
             pl.BlockSpec((1, 1, bs, d), tail),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, d), lambda bb, h, s: (bb, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+        out_specs=pl.BlockSpec((1, 1, qg, d), lambda bb, h, s: (bb, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, qg, d), jnp.float32),
         scratch_shapes=[
-            pltpu.VMEM((g, d), jnp.float32),
-            pltpu.VMEM((g, 128), jnp.float32),
-            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((qg, d), jnp.float32),
+            pltpu.VMEM((qg, 128), jnp.float32),
+            pltpu.VMEM((qg, 128), jnp.float32),
         ],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),

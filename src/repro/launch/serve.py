@@ -28,7 +28,8 @@ from repro.data import DataConfig, host_batch
 from repro.distributed import ShardCtx, NULL_CTX, default_rules
 from repro.distributed.convert_plan import convert_concrete
 from repro.models import lm
-from repro.serving import Engine, ContinuousEngine, SamplingParams
+from repro.serving import (Engine, ContinuousEngine, SamplingParams,
+                           SpecConfig)
 
 
 def main(argv=None):
@@ -52,6 +53,11 @@ def main(argv=None):
                     help="stream mode: cache-pool slots (default: batch)")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="stream mode: prompt tokens prefilled per tick")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="stream mode: speculative decoding — verify up "
+                         "to K n-gram draft tokens per slot per tick "
+                         "(0 = off; greedy output is token-identical "
+                         "either way)")
     # sampling (0 temperature = greedy; each request gets its own seed)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
@@ -122,7 +128,8 @@ def main(argv=None):
     eng = ContinuousEngine(
         params, cfg, slots=slots,
         max_tokens=args.prompt_len + args.steps + cfg.kv_tail,
-        prefill_chunk=args.prefill_chunk or None)
+        prefill_chunk=args.prefill_chunk or None,
+        spec=SpecConfig(k=args.spec_k) if args.spec_k else None)
     rng = np.random.default_rng(0)
     t0 = time.time()
     rids = []
@@ -148,6 +155,13 @@ def main(argv=None):
     lps = [lp for o in out.values() for lp in o.logprobs if lp is not None]
     print(f"[serve] mean chosen-token logprob: {np.mean(lps):.3f} "
           f"({len(lps)} tokens)")
+    if args.spec_k:
+        apt = [o.metrics.accepted_per_tick for o in out.values()
+               if o.metrics.accepted_per_tick is not None]
+        mean = f"{np.mean(apt):.2f}" if apt else "n/a (no decode ticks)"
+        print(f"[serve] spec: accepted-draft histogram "
+              f"{eng.spec_hist.tolist()} (index = drafts accepted/tick); "
+              f"mean tokens/tick {mean}")
     return 0
 
 

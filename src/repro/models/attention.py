@@ -15,7 +15,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ops
 from repro.core.sparse_format import unpack
-from repro.core.sparse_kv import SparseKVCache, append_token, pooled_view
+from repro.core.sparse_kv import (SparseKVCache, append_tail_panel,
+                                  append_token, pooled_view)
 from .module import ParamSpec
 from .layers import rms_norm, rope_angles, apply_rope
 from .flash import blocked_attention, full_attention
@@ -227,6 +228,48 @@ def pooled_attn_decode(p, x_t: jax.Array, kv: Dict[str, jax.Array], cfg,
                                     k_tail, v_tail, t_att,
                                     prefix_len=prefix_blocks * bs)
     out = ops.linear(o.reshape(b, hq * hd).astype(x_t.dtype), p["wo"])
+    return out, {**kv, "k_tail": k_tail, "v_tail": v_tail}
+
+
+def pooled_attn_verify(p, x: jax.Array, kv: Dict[str, jax.Array], cfg,
+                       ctx, positions: jax.Array, prefix_blocks: jax.Array,
+                       tail_len: jax.Array, slot_mask: jax.Array, bs: int
+                       ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Speculative-verify attention for one layer of the pooled cache.
+
+    The multi-query sibling of :func:`pooled_attn_decode`: ``x [B, Qn, d]``
+    is each slot's verify panel (last committed token + up to K drafts),
+    ``positions [B, Qn]`` its absolute positions.  All ``Qn`` fresh K/V
+    land in the slot's dense tail at ``tail_len..tail_len+Qn-1`` (the
+    engine rolls the rejected suffix back by decrementing lengths), and the
+    panel is scored by the SAME fused prefix+tail kernel as the one-token
+    tick, just with a ``Qn*G``-row query block: panel query ``j`` sees the
+    full frozen prefix, the pre-existing tail, and panel tokens ``<= j`` —
+    intra-window causal.  Inactive slots write nothing and pass their
+    cache through bit-identical.
+    """
+    b, qn, _ = x.shape
+    hq, hkv, hd = cfg.padded_heads, cfg.n_kv, cfg.hd
+    q = _project_q(p, x, cfg)                                 # [B,Qn,Hq,hd]
+    k_new, v_new = _project_kv(p, x, cfg)                     # [B,Qn,Hkv,hd]
+    cos, sin = rope_angles(positions, hd, cfg.rope_theta)     # [B,Qn,hd//2]
+    q = apply_rope(q, cos, sin)
+    k_new = apply_rope(k_new, cos, sin)
+    sm = 1.0 / hd ** 0.5
+
+    n_valid = jnp.where(slot_mask, qn, 0)
+    k_tail = append_tail_panel(kv["k_tail"], k_new.transpose(0, 2, 1, 3),
+                               tail_len, n_valid)
+    v_tail = append_tail_panel(kv["v_tail"], v_new.transpose(0, 2, 1, 3),
+                               tail_len, n_valid)
+    # panel query 0 sees its own token; each later query j sees j more
+    t_att = tail_len + slot_mask.astype(jnp.int32)
+    k_sp = pooled_view(kv["k_bitmap"], kv["k_values"], bs, hd)
+    v_sp = pooled_view(kv["v_bitmap"], kv["v_values"], bs, hd)
+    o = ops.sparse_decode_attention(q, k_sp, v_sp, hkv, sm,
+                                    k_tail, v_tail, t_att,
+                                    prefix_len=prefix_blocks * bs)
+    out = ops.linear(o.reshape(b, qn, hq * hd).astype(x.dtype), p["wo"])
     return out, {**kv, "k_tail": k_tail, "v_tail": v_tail}
 
 

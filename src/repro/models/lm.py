@@ -29,7 +29,7 @@ from .layers import (rms_norm, norm_spec, embed_specs, embed_apply,
                      unembed_apply, mlp_specs, mlp_apply)
 from .attention import (attn_specs, attn_apply, attn_decode, DenseKVCache,
                         cross_attn_decode, pooled_attn_decode,
-                        pooled_attn_prefill_chunk)
+                        pooled_attn_prefill_chunk, pooled_attn_verify)
 from .moe import moe_specs, moe_apply
 from .ssm import (mamba_specs, mamba_apply, mamba_decode, mamba_init_state,
                   rwkv_specs, rwkv_time_mix, rwkv_channel_mix,
@@ -439,6 +439,64 @@ def forward_decode_pooled(params, state, tokens: jax.Array,
     live = slot_mask.astype(jnp.int32)
     new_state = {**state, "layers": new_layers,
                  "pos": positions + live, "tail_len": tail_len + live}
+    return logits, new_state
+
+
+def forward_verify_pooled(params, state, tokens: jax.Array,
+                          slot_mask: jax.Array, cfg, ctx, bs: int
+                          ) -> Tuple[jax.Array, Any]:
+    """Speculative-verify forward: score a ``[B, Qn]`` token panel per slot
+    in ONE pass over the pooled serving cache.
+
+    ``tokens[:, 0]`` is each slot's last committed token, ``tokens[:, 1:]``
+    its (padded) draft window; panel position ``j`` decodes at absolute
+    position ``pos + j`` with intra-window causal attention, so
+    ``logits[:, j]`` is exactly what ``Qn - j`` sequential decode ticks
+    would have produced for that continuation.  All ``Qn`` fresh K/V are
+    appended and ``pos``/``tail_len`` advance by ``Qn`` per live slot —
+    the engine rolls back the rejected suffix (a pure masked length
+    decrement) after acceptance.  Masked slots are bit-identical
+    passthrough, and every shape is static: one trace per
+    (pool geometry, Qn), whatever the accept lengths turn out to be.
+
+    Returns (logits [B, Qn, V] f32, new state); unknown ``state`` keys
+    (e.g. the sampler lanes) pass through untouched.
+    """
+    qn = tokens.shape[1]
+    x = embed_apply(params["embed"], tokens, cfg)            # [B, Qn, d]
+    x = ctx.constrain(x, ("batch", "seq", "embed"))
+    kinds = _attn_kinds(cfg)
+    positions = state["pos"][:, None] + jnp.arange(qn)[None, :]
+    prefix_blocks = state["prefix_blocks"]
+    tail_len = state["tail_len"]
+
+    def body(xc, xs):
+        pp, cc = xs
+        new_cc = {}
+        for j, kind in enumerate(kinds):
+            pj, cj = pp[f"l{j}"], cc[f"l{j}"]
+            h = rms_norm(xc, pj["ln1"])
+            h, new_kv = pooled_attn_verify(
+                pj["mixer"], h, cj["kv"], cfg, ctx, positions,
+                prefix_blocks, tail_len, slot_mask, bs)
+            xc = xc + h
+            h2 = rms_norm(xc, pj["ln2"])
+            if kind[1] == "moe":
+                h2 = moe_apply(pj["ffn"], h2, cfg, ctx)
+            else:
+                h2 = mlp_apply(pj["ffn"], h2, ctx)
+            xc = xc + h2
+            new_cc[f"l{j}"] = {"kv": new_kv}
+        return xc, new_cc
+
+    x, new_layers = lax.scan(body, x, (params["blocks"], state["layers"]))
+    x = rms_norm(x, params["final_norm"])
+    logits = unembed_apply(params["embed"], x, cfg)
+    logits = ctx.constrain(logits, ("batch", None, "vocab"))
+    grow = qn * slot_mask.astype(jnp.int32)
+    new_state = {**state, "layers": new_layers,
+                 "pos": positions[:, 0] + grow,
+                 "tail_len": tail_len + grow}
     return logits, new_state
 
 

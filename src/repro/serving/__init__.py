@@ -2,3 +2,4 @@ from .engine import Engine, ContinuousEngine, retrace_count
 from .cache_pool import CachePool
 from .sampling import RequestMetrics, RequestOutput, SamplingParams
 from .scheduler import Scheduler, Request
+from .spec import Drafter, NGramDrafter, SpecConfig

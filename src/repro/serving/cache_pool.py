@@ -37,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sparse_format import _ceil_to, LANE
-from repro.core.sparse_kv import freeze_chunk_blocks
+from repro.core.sparse_kv import append_tail_panel, freeze_chunk_blocks
 from repro.models import lm
 
 
@@ -173,6 +173,56 @@ class CachePool:
         return {**state, "layers": new_layers,
                 "prefix_blocks": pb + grow,
                 "tail_len": jnp.where(full, 0, state["tail_len"])}
+
+    def append_many(self, state: Dict[str, Any],
+                    panels: Dict[str, Any], n: jax.Array) -> Dict[str, Any]:
+        """Append up to ``m`` fresh K/V tokens per slot into every layer's
+        dense tail ring at the slot's own ``tail_len`` offset.
+
+        ``panels``: ``{layer: {"k": [P, B, Hkv, m, D], "v": ...}}``;
+        ``n`` int32 scalar or ``[B]`` — valid panel tokens per slot
+        (``<= m``; 0 = passthrough).  Advances ``pos``/``tail_len`` by
+        ``n``.  Pool-level twin of the verify step's in-layer append:
+        the engine's verify forward writes each layer inside its scan
+        (``models.attention.pooled_attn_verify``) through the SAME
+        :func:`~repro.core.sparse_kv.append_tail_panel` core this method
+        uses — change the write semantics there, not here.  This entry
+        appends across all layers at once for direct pool callers and the
+        rollback/refreeze property tests.  Pure masked writes at static
+        shapes — jits once per panel width.
+        """
+        n = jnp.broadcast_to(jnp.asarray(n, jnp.int32), (self.slots,))
+        tl = state["tail_len"]
+        new_layers = {}
+        for name, leaf in state["layers"].items():
+            kv, src = leaf["kv"], panels[name]
+            write = jax.vmap(append_tail_panel, in_axes=(0, 0, None, None))
+            new_layers[name] = {"kv": {
+                **kv,
+                "k_tail": write(kv["k_tail"], src["k"], tl, n),
+                "v_tail": write(kv["v_tail"], src["v"], tl, n),
+            }}
+        return {**state, "layers": new_layers,
+                "pos": state["pos"] + n, "tail_len": tl + n}
+
+    def rollback(self, state: Dict[str, Any], n: jax.Array
+                 ) -> Dict[str, Any]:
+        """Un-append the last ``n`` tokens per slot: a pure masked length
+        decrement (``pos``/``tail_len``), no storage touched — validity is
+        length-gated everywhere, so decremented entries are dead.
+
+        ``n`` int32 scalar or ``[B]``, clamped to ``tail_len`` — a
+        rollback can only surrender tail tokens; it never crosses the
+        frozen-prefix boundary (refrozen tokens are committed by
+        construction: the engine rolls back *within* the tick that
+        appended, before any refreeze can fold the tail).  This is what
+        makes draft–verify speculation free on this cache: rejected
+        drafts cost one subtraction, not a retrace or a re-pack.
+        """
+        n = jnp.broadcast_to(jnp.asarray(n, jnp.int32), (self.slots,))
+        n = jnp.clip(n, 0, state["tail_len"])
+        return {**state, "pos": state["pos"] - n,
+                "tail_len": state["tail_len"] - n}
 
     def release(self, state: Dict[str, Any], slot: jax.Array
                 ) -> Dict[str, Any]:

@@ -41,6 +41,7 @@ from . import sampling
 from .cache_pool import CachePool
 from .sampling import RequestOutput, SamplingParams
 from .scheduler import Scheduler
+from .spec import SpecConfig
 
 
 def retrace_count(jitted) -> int:
@@ -231,11 +232,24 @@ class ContinuousEngine:
     host-side.  Per layer, the decode tick's attention is ONE fused
     prefix+tail flash-decode kernel — the XLA-side tail attention + lse
     merge the two-pass design paid per token is gone.
+
+    With ``spec=SpecConfig(k>0)`` the decode tick becomes a **draft–verify
+    step**: a model-free n-gram drafter proposes up to ``k`` continuation
+    tokens per slot from the request's own history, and one jitted verify
+    forward scores all ``k+1`` positions against the pooled cache (a query
+    panel through the same fused kernel), accepts per lane (greedy: exact
+    match — token-identical to this engine with spec off; sampled:
+    rejection sampling — distribution unchanged) and rolls rejected drafts
+    back by a pure length decrement.  The verify step compiles once per
+    (pool geometry, k); accept lengths 0..k never retrace.
+    ``spec_hist[a]`` counts ticks that committed ``a`` accepted drafts.
     """
 
     def __init__(self, params, cfg, ctx=NULL_CTX, slots: int = 4,
                  max_tokens: int = 0, bs: int = 0,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 spec: Optional[SpecConfig] = None,
+                 capacity_slack: float = 1.25):
         self.params = params
         self.cfg = cfg
         self.ctx = ctx
@@ -246,7 +260,8 @@ class ContinuousEngine:
             limit = min(128, prefill_chunk or 128, cfg.kv_tail)
             bs = next(d for d in range(limit, 0, -1)
                       if cfg.kv_tail % d == 0)
-        self.pool = CachePool.build(cfg, slots, max_tokens, bs=bs)
+        self.pool = CachePool.build(cfg, slots, max_tokens, bs=bs,
+                                    capacity_slack=capacity_slack)
         # pool storage + per-slot sampling lanes travel as one state pytree
         # through every jitted transition (the pool ops pass unknown keys
         # through untouched)
@@ -291,6 +306,32 @@ class ContinuousEngine:
         self._set_lane = jax.jit(
             lambda st, slot, t, k, p, key:
                 sampling.set_lane(st, slot, t, k, p, key))
+
+        # speculative decoding: one jitted draft–verify step scores all
+        # K+1 panel positions in a single forward over the pooled cache,
+        # accepts per lane on device, and rolls the rejected suffix back
+        # by a pure length decrement — zero retraces across accept lengths
+        # 0..K.  When disabled the non-spec path above is preserved
+        # bit-for-bit (the verify step is never built, never traced).
+        self._spec = spec if spec is not None and spec.active else None
+        self._verify = None
+        if self._spec is not None:
+            self.drafter = self._spec.build_drafter()
+            qn = self._spec.k + 1
+            self.spec_hist = np.zeros(qn, np.int64)   # committed-1 per tick
+
+            def _verify(p, st, toks, m, dl):
+                logits, st = lm.forward_verify_pooled(p, st, toks, m, cfg,
+                                                      ctx, bs_)
+                tok, logp, nc, lanes = sampling.accept_step(
+                    logits, toks, dl, st["sample"], m)
+                # appended qn per live slot; keep 1 + accepted = nc
+                roll = qn * m.astype(jnp.int32) - nc
+                st = self.pool.rollback({**st, "sample": lanes}, roll)
+                return tok, logp, nc, st
+
+            self._verify = jax.jit(_verify)
+
         # host mirrors (avoid a device sync per tick)
         self._tail_len = np.zeros(slots, np.int64)
         self._last_tok: Dict[int, int] = {}           # slot -> last token
@@ -304,7 +345,9 @@ class ContinuousEngine:
         :class:`SamplingParams`.  Returns the request id.
 
         ``on_token`` is called with a :class:`RequestOutput` snapshot after
-        every token this request emits (the last one has ``finished``).
+        every token window this request commits — one token per tick on
+        the non-speculative path, up to ``spec.k + 1`` tokens per verify
+        tick under speculation (the last snapshot has ``finished``).
         """
         rid = self.scheduler.submit([int(t) for t in np.asarray(prompt)],
                                     params)
@@ -322,9 +365,10 @@ class ContinuousEngine:
 
     def stream(self) -> Iterator[RequestOutput]:
         """Tick until the queue drains, yielding a :class:`RequestOutput`
-        snapshot per emitted token (interleaved across live requests, in
-        emission order).  Submitting more work mid-iteration extends the
-        stream."""
+        snapshot per committed token window (interleaved across live
+        requests, in emission order) — per token without speculation, per
+        accepted window with it.  Submitting more work mid-iteration
+        extends the stream."""
         while not self.scheduler.done():
             yield from self.step()
 
@@ -340,11 +384,14 @@ class ContinuousEngine:
         return jnp.asarray([out[r].token_ids for r in rids], jnp.int32)
 
     def trace_counts(self) -> Dict[str, int]:
-        return {"decode": retrace_count(self._decode),
-                "prefill_chunk": retrace_count(self._prefill_chunk),
-                "refreeze": retrace_count(self._refreeze),
-                "release": retrace_count(self._release),
-                "set_lane": retrace_count(self._set_lane)}
+        counts = {"decode": retrace_count(self._decode),
+                  "prefill_chunk": retrace_count(self._prefill_chunk),
+                  "refreeze": retrace_count(self._refreeze),
+                  "release": retrace_count(self._release),
+                  "set_lane": retrace_count(self._set_lane)}
+        if self._verify is not None:
+            counts["verify"] = retrace_count(self._verify)
+        return counts
 
     # -- one tick -----------------------------------------------------------
     def step(self) -> List[RequestOutput]:
@@ -383,13 +430,16 @@ class ContinuousEngine:
             # chunks before the last are block-aligned
             self._tail_len[req.slot] = req.prefill_done % self.pool.bs
             if final:
-                self._emit(req.slot, int(np.asarray(tok)[0]),
-                           float(np.asarray(logp)[0]), events)
+                self._emit(req.slot, [int(np.asarray(tok)[0])],
+                           [float(np.asarray(logp)[0])], events,
+                           prefill=True)
 
         # decode tick for every slot with a live request past prefill
         slots = sch.decoding_slots()
         if not slots:
             return events
+        if self._spec is not None:
+            return self._spec_tick(slots, events)
         b = self.pool.slots
         tokens = np.zeros((b, 1), np.int32)
         mask = np.zeros((b,), bool)
@@ -401,14 +451,58 @@ class ContinuousEngine:
         picked, logps = np.asarray(tok), np.asarray(logp)
         for s in slots:
             self._tail_len[s] += 1
-            self._emit(s, int(picked[s]), float(logps[s]), events)
+            self._emit(s, [int(picked[s])], [float(logps[s])], events)
         return events
 
-    def _emit(self, slot: int, tok: int, logprob: float,
-              events: List[RequestOutput]) -> None:
-        """Record a generated token; recycle the slot if that finished it."""
+    def _spec_tick(self, slots: List[int],
+                   events: List[RequestOutput]) -> List[RequestOutput]:
+        """One draft–verify decode tick over every decoding slot.
+
+        Per live slot the host drafter proposes up to K continuations of
+        the request's own history; the panel is clamped to the slot's tail
+        headroom (a nearly-full tail simply speculates less — the regular
+        refreeze machinery keeps working unchanged).  One jitted verify
+        scores the whole [slots, K+1] panel, accepts per lane, and rolls
+        back rejections; the host then commits each slot's window with
+        stop scanning inside it.
+        """
+        sch = self.scheduler
+        b, k = self.pool.slots, self._spec.k
+        tokens = np.zeros((b, k + 1), np.int32)
+        mask = np.zeros((b,), bool)
+        dlen = np.zeros((b,), np.int32)
+        for s in slots:
+            req = sch.active[s]
+            tokens[s, 0] = self._last_tok[s]
+            mask[s] = True
+            room = self.pool.tail - 1 - int(self._tail_len[s])
+            if room > 0:
+                drafts = self.drafter.propose(
+                    req.prompt + req.generated, min(k, room))
+                dlen[s] = len(drafts)
+                tokens[s, 1:1 + len(drafts)] = drafts
+        tok, logp, ncommit, self.state = self._verify(
+            self.params, self.state, jnp.asarray(tokens),
+            jnp.asarray(mask), jnp.asarray(dlen))
+        picked, logps = np.asarray(tok), np.asarray(logp)
+        ncs = np.asarray(ncommit)
+        for s in slots:
+            nc = int(ncs[s])
+            self._tail_len[s] += nc          # t0 + accepted stay appended
+            self.spec_hist[nc - 1] += 1      # nc - 1 = accepted drafts
+            self._emit(s, [int(t) for t in picked[s, :nc]],
+                       [float(l) for l in logps[s, :nc]], events)
+        return events
+
+    def _emit(self, slot: int, toks: List[int], logprobs: List[float],
+              events: List[RequestOutput], prefill: bool = False) -> None:
+        """Commit one tick's token window for a slot; recycle the slot if
+        that finished the request.  One RequestOutput snapshot (and one
+        ``on_token`` callback) is emitted per window — per token on the
+        non-speculative path, per accepted window under speculation."""
         req = self.scheduler.active[slot]
-        finished = self.scheduler.record_token(slot, tok, logprob) is not None
+        finished = self.scheduler.record_tokens(
+            slot, toks, logprobs, decode_tick=not prefill) is not None
         out = req.output()
         events.append(out)
         cb = self._callbacks.get(req.rid)
@@ -420,4 +514,4 @@ class ContinuousEngine:
             self._tail_len[slot] = 0
             self._last_tok.pop(slot, None)
         else:
-            self._last_tok[slot] = tok
+            self._last_tok[slot] = req.generated[-1]

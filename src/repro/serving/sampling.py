@@ -91,10 +91,20 @@ class SamplingParams:
 
 @dataclasses.dataclass(frozen=True)
 class RequestMetrics:
-    """Wall-clock timing of one request (``time.monotonic`` seconds)."""
+    """Wall-clock timing + decode accounting of one request
+    (``time.monotonic`` seconds).
+
+    ``decode_ticks`` counts engine decode steps, ``num_generated`` the
+    tokens actually committed — under speculative decoding one verify tick
+    commits a whole accepted window, so throughput must be derived from
+    tokens committed, never from ticks (the old one-token-per-tick
+    assumption undercounts spec runs by the acceptance factor).
+    """
     arrival_time: float
     first_token_time: Optional[float]
     finished_time: Optional[float]
+    decode_ticks: int = 0
+    num_generated: int = 0
 
     @property
     def ttft(self) -> Optional[float]:
@@ -108,6 +118,27 @@ class RequestMetrics:
         if self.finished_time is None:
             return None
         return self.finished_time - self.arrival_time
+
+    @property
+    def accepted_per_tick(self) -> Optional[float]:
+        """Mean tokens committed per decode tick (the first token comes
+        from prefill, not a decode tick).  1.0 on the non-speculative
+        path; up to K+1 under draft–verify speculation."""
+        if self.decode_ticks <= 0:
+            return None
+        return (self.num_generated - 1) / self.decode_ticks
+
+    @property
+    def decode_tok_s(self) -> Optional[float]:
+        """True decode throughput: tokens *committed* after the first over
+        the decode wall-clock window."""
+        if (self.finished_time is None or self.first_token_time is None
+                or self.num_generated <= 1):
+            return None
+        dt = self.finished_time - self.first_token_time
+        if dt <= 0:
+            return None
+        return (self.num_generated - 1) / dt
 
 
 @dataclasses.dataclass(frozen=True)
@@ -333,3 +364,89 @@ def sample_step(logits: jax.Array, lanes: Dict[str, jax.Array],
     chosen_logp = jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
     new_rng = jnp.where(advance[:, None], carry, lanes["rng"])
     return tok, chosen_logp, {**lanes, "rng": new_rng}
+
+
+# ---------------------------------------------------------------------------
+# speculative acceptance (the verify half of draft–verify decoding)
+# ---------------------------------------------------------------------------
+
+def accept_step(logits: jax.Array, tokens: jax.Array, draft_len: jax.Array,
+                lanes: Dict[str, jax.Array], live: jax.Array
+                ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                           Dict[str, jax.Array]]:
+    """Per-lane acceptance over a verified draft window.
+
+    logits [B, Qn, V] — the verify forward's panel logits (``logits[:, j]``
+    conditions on the panel prefix through position ``j``); tokens
+    [B, Qn] — the input panel (last committed token + padded drafts);
+    draft_len int32 [B] — valid drafts per slot (0..Qn-1); lanes as in
+    :func:`init_lanes`; live bool [B].
+
+    Greedy lanes accept a draft iff it equals the argmax of the logits it
+    was drafted to follow — the committed stream is *provably* the token
+    stream the non-speculative engine would emit (each committed position
+    is the argmax conditioned on the identical accepted prefix).  Sampled
+    lanes run standard rejection sampling against the lane's own
+    masked/temperature-scaled distribution: the drafter is deterministic
+    (a point mass at the draft), so draft ``d`` is accepted with
+    probability ``p(d)`` and a rejection re-samples from ``p`` with ``d``
+    excluded (the renormalized residual) — the output *distribution* is
+    exactly the non-speculative sampler's, token by token.
+
+    Returns ``(out_tok int32 [B, Qn], out_logp f32 [B, Qn], n_commit
+    int32 [B], new lanes)``: slot ``b`` commits ``out_tok[b, :n_commit[b]]``
+    (``n_commit = accepted + 1`` — the window always ends with the
+    correction/bonus token, whose K/V is *not* yet appended; masked slots
+    commit 0).  ``out_logp`` is the chosen-token log-probability under the
+    model's unmodified distribution, like :func:`sample_step`'s.  Every
+    accept length 0..Qn-1 flows through the same masked selects — zero
+    retraces.
+    """
+    b, qn, v = logits.shape
+    logits = logits.astype(jnp.float32)
+    temp = lanes["temperature"]
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # [B, Qn]
+
+    # one split chain per tick: carry + Qn categorical keys + Qn-1 uniforms
+    split = jax.vmap(lambda k: jax.random.split(k, 2 * qn))(lanes["rng"])
+    carry, k_cat, k_u = split[:, 0], split[:, 1:1 + qn], split[:, 1 + qn:]
+
+    masked = jax.vmap(
+        lambda lg: _mask_logits(lg, temp, lanes["top_k"], lanes["top_p"],
+                                live=live),
+        in_axes=1, out_axes=1)(logits)                           # [B, Qn, V]
+    probs = jax.nn.softmax(masked, axis=-1)
+
+    # draft d_{j+1} is judged by position j's distribution
+    draft_next = tokens[:, 1:]                                   # [B, Qn-1]
+    p_draft = jnp.take_along_axis(probs[:, :-1], draft_next[..., None],
+                                  axis=-1)[..., 0]               # [B, Qn-1]
+    u = jax.vmap(jax.vmap(jax.random.uniform))(k_u)              # [B, Qn-1]
+    greedy_acc = greedy_tok[:, :-1] == draft_next
+    samp_acc = u < p_draft
+    acc = jnp.where((temp > 0.0)[:, None], samp_acc, greedy_acc)
+    acc &= jnp.arange(qn - 1)[None, :] < draft_len[:, None]
+    accepted = jnp.cumprod(acc.astype(jnp.int32), axis=1).sum(axis=1)  # [B]
+
+    # correction (rejection: residual excludes the failed draft) / bonus
+    # (all drafts accepted: plain draw) candidate at every position — only
+    # the one at position ``accepted`` is ever committed.  One categorical
+    # serves both cases: positions with a valid draft (j < draft_len)
+    # exclude it (the renormalized residual), later positions draw from
+    # the lane's distribution unmodified.
+    dpad = jnp.concatenate(
+        [draft_next, jnp.full((b, 1), -1, draft_next.dtype)], axis=1)
+    jidx = jnp.arange(qn)[None, :]
+    excl = ((jnp.arange(v)[None, None, :] == dpad[..., None])
+            & (jidx < draft_len[:, None])[..., None])
+    cand = jax.vmap(jax.vmap(jax.random.categorical))(
+        k_cat, jnp.where(excl, -jnp.inf, masked)).astype(jnp.int32)
+    corr = jnp.where((temp > 0.0)[:, None], cand, greedy_tok)
+
+    out_tok = jnp.where(jidx < accepted[:, None],
+                        dpad.astype(jnp.int32), corr)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    out_logp = jnp.take_along_axis(logp, out_tok[..., None], axis=-1)[..., 0]
+    n_commit = jnp.where(live, accepted + 1, 0).astype(jnp.int32)
+    new_rng = jnp.where(live[:, None], carry, lanes["rng"])
+    return out_tok, out_logp, n_commit, {**lanes, "rng": new_rng}

@@ -43,6 +43,7 @@ class Request:
     arrival_time: float = 0.0
     first_token_time: Optional[float] = None
     finished_time: Optional[float] = None
+    decode_ticks: int = 0            # engine decode steps consumed
 
     @property
     def finished(self) -> bool:
@@ -61,7 +62,9 @@ class Request:
             token_ids=tuple(self.generated),
             finish_reason=self.finish_reason,
             metrics=RequestMetrics(self.arrival_time, self.first_token_time,
-                                   self.finished_time),
+                                   self.finished_time,
+                                   decode_ticks=self.decode_ticks,
+                                   num_generated=len(self.generated)),
             logprobs=tuple(self.logprobs))
 
 
@@ -158,27 +161,49 @@ class Scheduler:
     # -- completion ---------------------------------------------------------
     def record_token(self, slot: int, token: int,
                      logprob: Optional[float] = None) -> Optional[str]:
-        """Append a generated token; returns the finish reason (``"stop"``
-        for eos / stop sequences, ``"length"`` for max_new_tokens, None if
-        still running).  A stop hit on the budget's last token wins over
-        "length".  Finishing releases the slot for re-admission.
+        """Single-token convenience wrapper over :meth:`record_tokens`."""
+        return self.record_tokens(
+            slot, [token], None if logprob is None else [logprob])
 
-        ``logprob`` is the token's chosen-token log-probability from the
-        device sampler (surfaced on ``RequestOutput.logprobs``); host-only
-        callers may omit it."""
+    def record_tokens(self, slot: int, tokens: Sequence[int],
+                      logprobs: Optional[Sequence[Optional[float]]] = None,
+                      decode_tick: bool = True) -> Optional[str]:
+        """Commit the window of tokens one engine tick produced for a slot
+        (one token on the plain path; up to K+1 under speculation).
+
+        The stop scan runs *inside* the window: each token is appended and
+        checked in order, and the first eos / stop-sequence / budget hit
+        truncates the commit — tokens past it are discarded, exactly as if
+        the non-speculative engine had stopped there (speculatively
+        verified tokens crossing a stop must never leak into the output).
+        A stop hit on the budget's last token wins over "length".
+
+        Returns the finish reason (``"stop"`` | ``"length"`` | None);
+        finishing releases the slot for re-admission.  ``decode_tick=False``
+        (prefill's first token) leaves the tick counter untouched so
+        ``accepted_per_tick`` measures decode work only.  ``logprobs`` are
+        the device sampler's chosen-token log-probabilities (surfaced on
+        ``RequestOutput.logprobs``); host-only callers may omit them.
+        """
         req = self.active[slot]
-        req.generated.append(token)
-        req.logprobs.append(logprob)
         now = self.clock()
         if req.first_token_time is None:
             req.first_token_time = now
+        if decode_tick:
+            req.decode_ticks += 1
         p = req.params
         reason = None
-        if ((p.eos_id is not None and token == p.eos_id)
-                or _matches_stop(req.generated, p.stop_ids)):
-            reason = "stop"
-        elif len(req.generated) >= p.max_new_tokens:
-            reason = "length"
+        for i, token in enumerate(tokens):
+            token = int(token)
+            req.generated.append(token)
+            req.logprobs.append(None if logprobs is None else logprobs[i])
+            if ((p.eos_id is not None and token == p.eos_id)
+                    or _matches_stop(req.generated, p.stop_ids)):
+                reason = "stop"
+            elif len(req.generated) >= p.max_new_tokens:
+                reason = "length"
+            if reason is not None:
+                break                      # truncate: drop the window's rest
         if reason is not None:
             req.finish_reason = reason
             req.finished_time = now

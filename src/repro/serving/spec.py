@@ -1,0 +1,108 @@
+"""Speculative decoding for the continuous-batching engine (draft–verify).
+
+Token generation on this stack is memory-bound: every decode tick streams
+the full weight set plus each slot's cache to emit ONE token per slot.
+Speculation amortizes that stream — a cheap *drafter* proposes up to ``K``
+continuation tokens per slot, and a single **verify** forward scores all
+``K+1`` positions at once (a query panel through the same fused
+prefix+tail flash-decode kernel).  Accepted drafts commit as a window;
+rejected ones are un-appended by a pure length rollback on the pooled
+cache.  Per-lane acceptance keeps outputs honest: greedy lanes are
+provably token-identical to the non-speculative engine, sampled lanes
+keep their exact output distribution via rejection sampling
+(:func:`repro.serving.sampling.accept_step`).
+
+The drafter here is **model-free**: n-gram prompt lookup over each
+request's own token history (prompt + generated).  No extra weights, no
+extra memory traffic — it wins exactly where LLM serving is repetitive
+(code, extraction, templated text, self-repeating generations) and
+degrades to plain decoding (zero proposals, one committed token per tick)
+everywhere else.  A learned drafter can slot in behind the same
+:class:`Drafter` protocol without touching the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Protocol, Sequence, runtime_checkable
+
+
+@runtime_checkable
+class Drafter(Protocol):
+    """Anything that proposes draft continuations from a token history."""
+
+    def propose(self, history: Sequence[int], k: int) -> List[int]:
+        """Up to ``k`` draft tokens continuing ``history`` (may be empty —
+        the engine pads short/absent proposals with invalid lanes)."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding knobs for ``ContinuousEngine``.
+
+    k: max draft tokens verified per slot per tick (the verify panel is
+      ``k + 1`` wide).  ``k == 0`` disables speculation outright.
+    enabled: master switch — ``False`` preserves the non-speculative
+      engine bit-for-bit (the verify step is never even built).
+    max_ngram/min_ngram: suffix n-gram lengths the default prompt-lookup
+      drafter tries, longest first.
+    drafter: optional :class:`Drafter` override; ``None`` builds an
+      :class:`NGramDrafter` from the n-gram bounds.
+    """
+
+    k: int = 4
+    enabled: bool = True
+    max_ngram: int = 3
+    min_ngram: int = 1
+    drafter: Optional[Drafter] = None
+
+    def __post_init__(self):
+        if self.k < 0:
+            raise ValueError(f"k must be >= 0: {self.k}")
+        if not 1 <= self.min_ngram <= self.max_ngram:
+            raise ValueError(
+                f"need 1 <= min_ngram <= max_ngram: "
+                f"{self.min_ngram}, {self.max_ngram}")
+
+    @property
+    def active(self) -> bool:
+        return self.enabled and self.k > 0
+
+    def build_drafter(self) -> Drafter:
+        if self.drafter is not None:
+            return self.drafter
+        return NGramDrafter(max_ngram=self.max_ngram,
+                            min_ngram=self.min_ngram)
+
+
+class NGramDrafter:
+    """Prompt-lookup drafter: continue the most recent earlier occurrence
+    of the history's longest matching suffix n-gram.
+
+    Tries suffix lengths ``max_ngram`` down to ``min_ngram``; for the
+    first length whose suffix recurs earlier in the history, proposes the
+    ``k`` tokens that followed the most recent match.  Pure host-side
+    Python over ints — O(len(history)) per proposal, no device work, no
+    model state.  Returns ``[]`` when nothing matches (the slot simply
+    decodes non-speculatively that tick).
+    """
+
+    def __init__(self, max_ngram: int = 3, min_ngram: int = 1):
+        assert 1 <= min_ngram <= max_ngram, (min_ngram, max_ngram)
+        self.max_ngram = max_ngram
+        self.min_ngram = min_ngram
+
+    def propose(self, history: Sequence[int], k: int) -> List[int]:
+        hist = list(history)
+        if k <= 0 or len(hist) < self.min_ngram + 1:
+            return []
+        for n in range(min(self.max_ngram, len(hist) - 1),
+                       self.min_ngram - 1, -1):
+            suffix = hist[-n:]
+            # most recent occurrence strictly before the suffix itself
+            for start in range(len(hist) - n - 1, -1, -1):
+                if hist[start:start + n] == suffix:
+                    cont = hist[start + n:start + n + k]
+                    if cont:
+                        return [int(t) for t in cont]
+        return []

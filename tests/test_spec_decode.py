@@ -1,0 +1,518 @@
+"""Speculative decoding: draft–verify multi-token ticks on the pooled
+serving engine.
+
+The acceptance bar for the subsystem:
+
+* the fused kernel's query-panel extension (interpret mode) matches the
+  concat-free panel oracle AND a per-query sweep of the single-query
+  fused oracle (query ``j`` == one decode tick at ``tail_len + j``)
+  across the pooled edge grid, with poisoned out-of-range storage;
+* ``CachePool.rollback`` is the exact inverse of ``append_many`` on the
+  observable (length-gated) state, never crosses the frozen-prefix
+  boundary, and composes with refreeze (property tests, hypothesis-gated
+  like tests/test_sparse_format.py);
+* with ``SpecConfig(k>0)``, greedy ``ContinuousEngine`` outputs are
+  token-identical to the spec-disabled engine across a staggered
+  mixed-prompt wave — including slots that never get a draft hit — with
+  ZERO retraces of the verify/decode steps across accept lengths 0..K
+  (asserted via ``trace_counts()``);
+* acceptance semantics: greedy lanes accept by exact match; sampled lanes
+  leave the output distribution unchanged (rejection sampling against the
+  lane's masked distribution); stop sequences crossed mid-window truncate
+  the commit.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container ships without hypothesis
+    class _St:
+        def integers(self, *a, **k): return None
+        def lists(self, *a, **k): return None
+    st = _St()
+
+    def settings(**_kw):
+        return lambda fn: fn
+
+    def given(**_kw):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def wrapper():
+                pass
+            wrapper.__name__ = fn.__name__
+            return wrapper
+        return deco
+
+from repro.configs import get_config
+from repro.core.sparse_kv import freeze_chunk_blocks, pooled_view
+from repro.kernels import ops, ref
+from repro.models import lm
+from repro.serving import (CachePool, ContinuousEngine, NGramDrafter,
+                           SamplingParams, Scheduler, SpecConfig)
+from repro.serving import sampling
+
+
+def _rand(shape, seed):
+    return jnp.asarray(np.random.default_rng(seed).normal(
+        size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# kernel: query-panel extension of the fused prefix+tail flash decode
+# ---------------------------------------------------------------------------
+
+def _pooled_case(b=4, hkv=2, g=2, d=32, sb=4, bs=16, t=16, qn=3,
+                 ks=0.3, vs=0.5, seed=0):
+    k = _rand((b, hkv, sb * bs, d), seed)
+    v = _rand((b, hkv, sb * bs, d), seed + 1)
+    cap = bs * d
+    k_bm, k_vl, v_bm, v_vl = freeze_chunk_blocks(k, v, ks, vs, bs, cap, cap)
+    k_sp = pooled_view(k_bm, k_vl, bs, d)
+    v_sp = pooled_view(v_bm, v_vl, bs, d)
+    k_tail = _rand((b, hkv, t, d), seed + 2)
+    v_tail = _rand((b, hkv, t, d), seed + 3)
+    q = _rand((b, qn, hkv * g, d), seed + 4)
+    return q, k_sp, v_sp, k_tail, v_tail
+
+
+PANEL_GRID = [
+    # (prefix_blocks per slot, tail_len visible to panel query 0)  b=4
+    pytest.param([4, 4, 4, 4], [1, 1, 1, 1], id="fresh_tail"),
+    pytest.param([4, 4, 4, 4], [14, 14, 14, 14], id="near_full_tail"),
+    pytest.param([0, 0, 0, 0], [1, 5, 9, 13], id="empty_prefix"),
+    pytest.param([0, 4, 2, 1], [1, 3, 14, 7], id="mixed_lengths"),
+]
+
+
+@pytest.mark.parametrize("prefix_blocks,tail_len", PANEL_GRID)
+@pytest.mark.parametrize("qn", [1, 3])
+def test_panel_kernel_matches_per_query_oracle(prefix_blocks, tail_len, qn):
+    """The [B, Q, Hq, D] panel through the fused kernel == the panel ref
+    == Q independent single-query fused calls at tail_len + j (the verify
+    step's intra-window causal semantics).  Out-of-range tail entries are
+    poisoned so masking leaks break parity loudly."""
+    bs, d, hkv, g, t = 16, 32, 2, 2, 16
+    q, k_sp, v_sp, k_tail, v_tail = _pooled_case(bs=bs, d=d, hkv=hkv, g=g,
+                                                 t=t, qn=qn)
+    tl = jnp.asarray(tail_len, jnp.int32)
+    pl_ = jnp.asarray(prefix_blocks, jnp.int32) * bs
+    # poison beyond the LAST panel query's visibility (earlier queries'
+    # masks are then checked against the per-query oracle)
+    dead = jnp.arange(t)[None, None, :, None] >= \
+        (tl + qn - 1)[:, None, None, None]
+    k_tail = jnp.where(dead, 50.0, k_tail)
+    v_tail = jnp.where(dead, 50.0, v_tail)
+    sm = 1.0 / d ** 0.5
+
+    with ops.backend("interpret"):
+        o_kernel = ops.sparse_decode_attention(
+            q, k_sp, v_sp, hkv, sm, k_tail, v_tail, tl, prefix_len=pl_)
+    o_ref = ref.sparse_decode_attention_panel_ref(
+        q, k_sp, v_sp, sm, k_tail, v_tail, tl, pl_)
+    np.testing.assert_allclose(np.asarray(o_kernel), np.asarray(o_ref),
+                               rtol=1e-4, atol=1e-4)
+    for j in range(qn):
+        o_j = ref.sparse_decode_attention_fused_ref(
+            q[:, j], k_sp, v_sp, sm, k_tail, v_tail, tl + j, pl_)
+        np.testing.assert_allclose(np.asarray(o_kernel[:, j]),
+                                   np.asarray(o_j), rtol=1e-4, atol=1e-4)
+
+
+def test_panel_single_query_reduces_to_fused():
+    """A [B, 1, Hq, D] panel must equal the plain 3-D fused dispatch."""
+    bs, d, hkv = 16, 32, 2
+    q, k_sp, v_sp, k_tail, v_tail = _pooled_case(bs=bs, d=d, hkv=hkv, qn=1)
+    tl = jnp.asarray([0, 1, 9, 16], jnp.int32)
+    sm = 1.0 / d ** 0.5
+    with ops.backend("interpret"):
+        o_panel = ops.sparse_decode_attention(
+            q, k_sp, v_sp, hkv, sm, k_tail, v_tail, tl)
+        o_single = ops.sparse_decode_attention(
+            q[:, 0], k_sp, v_sp, hkv, sm, k_tail, v_tail, tl)
+    np.testing.assert_allclose(np.asarray(o_panel[:, 0]),
+                               np.asarray(o_single), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# acceptance (sampling.accept_step)
+# ---------------------------------------------------------------------------
+
+def _lanes(temps, seed=0):
+    b = len(temps)
+    lanes = sampling.init_lanes(b)
+    lanes["temperature"] = jnp.asarray(temps, jnp.float32)
+    lanes["rng"] = jnp.stack([jax.random.PRNGKey(seed + i)
+                              for i in range(b)])
+    return lanes
+
+
+def test_accept_step_greedy_exact_match():
+    """Greedy lanes accept drafts exactly while they match argmax, commit
+    the correction after the first miss, and ignore padding lanes."""
+    v, qn = 11, 4
+    # logits: position j's argmax is j+1 -> the "model" continues 1,2,3,4
+    logits = np.full((3, qn, v), -10.0, np.float32)
+    for j in range(qn):
+        logits[:, j, j + 1] = 10.0
+    panel = np.zeros((3, qn), np.int32)
+    panel[0] = [0, 1, 2, 99]       # 2 good drafts, third wrong
+    panel[1] = [0, 1, 2, 3]        # all 3 drafts right
+    panel[2] = [0, 9, 9, 9]        # draft lanes invalid (draft_len 0)
+    dlen = jnp.asarray([3, 3, 0], jnp.int32)
+    tok, logp, nc, _ = sampling.accept_step(
+        jnp.asarray(logits), jnp.asarray(panel), dlen,
+        _lanes([0.0, 0.0, 0.0]), jnp.ones((3,), bool))
+    tok, nc = np.asarray(tok), np.asarray(nc)
+    assert nc.tolist() == [3, 4, 1]
+    assert tok[0, :3].tolist() == [1, 2, 3]    # 2 accepted + correction
+    assert tok[1].tolist() == [1, 2, 3, 4]     # 3 accepted + bonus
+    assert tok[2, 0] == 1                      # no drafts: plain argmax
+    # logprobs are the unmodified log-softmax of the committed tokens
+    lp = jax.nn.log_softmax(jnp.asarray(logits[0, 0]))[1]
+    np.testing.assert_allclose(np.asarray(logp)[0, 0], float(lp), rtol=1e-6)
+
+
+def test_accept_step_masked_slot_commits_nothing():
+    logits = jnp.asarray(np.random.default_rng(0).normal(
+        size=(2, 3, 7)).astype(np.float32))
+    panel = jnp.zeros((2, 3), jnp.int32)
+    lanes = _lanes([0.0, 0.7])
+    live = jnp.asarray([True, False])
+    _, _, nc, out_lanes = sampling.accept_step(
+        logits, panel, jnp.asarray([2, 2], jnp.int32), lanes, live)
+    assert np.asarray(nc).tolist()[1] == 0
+    # dead lane's RNG key must not advance
+    np.testing.assert_array_equal(np.asarray(out_lanes["rng"])[1],
+                                  np.asarray(lanes["rng"])[1])
+
+
+def test_accept_step_rejection_preserves_distribution():
+    """Sampled lanes: accepted-or-resampled output of a point-mass drafter
+    must match the target categorical distribution (the standard
+    speculative-sampling identity), and a rejection never re-emits the
+    rejected draft when its probability is 0.  One batched call: every
+    lane is an independent seeded trial."""
+    v, n = 4, 600
+    probs = np.asarray([0.5, 0.3, 0.2, 0.0], np.float32)
+    logits = np.log(np.maximum(probs, 1e-9))
+    draft = 3                                   # p(draft) = 0: always reject
+    lg = jnp.broadcast_to(jnp.asarray(logits), (n, 2, v))
+    panel = jnp.broadcast_to(jnp.asarray([0, draft], jnp.int32), (n, 2))
+    tok, _, nc, _ = sampling.accept_step(
+        lg, panel, jnp.full((n,), 1, jnp.int32), _lanes([1.0] * n),
+        jnp.ones((n,), bool))
+    assert np.asarray(nc).tolist() == [1] * n   # always rejected
+    first = np.asarray(tok)[:, 0]
+    counts = np.bincount(first, minlength=v)
+    assert counts[draft] == 0                   # residual excludes draft
+    np.testing.assert_allclose(counts[:3] / n, probs[:3] / probs[:3].sum(),
+                               atol=0.07)
+
+
+def test_accept_step_certain_draft_always_accepted():
+    """A draft with probability ~1 under the lane's distribution must be
+    accepted (rejection sampling accepts with prob p(d))."""
+    v, qn = 5, 3
+    logits = np.full((1, qn, v), -30.0, np.float32)
+    logits[:, :, 2] = 30.0                      # point mass at token 2
+    panel = jnp.asarray([[2, 2, 2]], jnp.int32)
+    tok, _, nc, _ = sampling.accept_step(
+        jnp.asarray(logits), panel, jnp.asarray([2], jnp.int32),
+        _lanes([0.9]), jnp.ones((1,), bool))
+    assert int(np.asarray(nc)[0]) == 3          # 2 accepts + bonus
+    assert np.asarray(tok)[0].tolist() == [2, 2, 2]
+
+
+# ---------------------------------------------------------------------------
+# CachePool: append_many / rollback / refreeze interaction
+# ---------------------------------------------------------------------------
+
+def _pool_setup(slots=2, kv_tail=16, bs=16):
+    cfg = get_config("qwen3-0.6b").reduced()
+    cfg = dataclasses.replace(cfg, kv_k_sparsity=0.0, kv_v_sparsity=0.0,
+                              kv_tail=kv_tail)
+    pool = CachePool.build(cfg, slots=slots, max_tokens=64, bs=bs)
+    return cfg, pool
+
+
+def _panels(pool, cfg, m, seed=0):
+    rng = np.random.default_rng(seed)
+    p = lm.period_len(cfg)
+    n_periods = cfg.n_layers // p
+    shape = (n_periods, pool.slots, cfg.n_kv, m, cfg.hd)
+    return {f"l{j}": {"k": jnp.asarray(rng.normal(size=shape),
+                                       cfg.cdtype),
+                      "v": jnp.asarray(rng.normal(size=shape),
+                                       cfg.cdtype)}
+            for j in range(p)}
+
+
+def _visible(state, pool):
+    """The observable (length-gated) pool state: lengths + valid tail
+    region + full prefix storage."""
+    vis = {"pos": np.asarray(state["pos"]),
+           "prefix_blocks": np.asarray(state["prefix_blocks"]),
+           "tail_len": np.asarray(state["tail_len"])}
+    tl = vis["tail_len"]
+    for name, leaf in state["layers"].items():
+        kv = leaf["kv"]
+        live = (np.arange(pool.tail)[None, None, None, :, None]
+                < tl[None, :, None, None, None])
+        for key in ("k_tail", "v_tail"):
+            vis[f"{name}/{key}"] = np.where(live, np.asarray(kv[key]), 0)
+        for key in ("k_bitmap", "k_values", "v_bitmap", "v_values"):
+            vis[f"{name}/{key}"] = np.asarray(kv[key])
+    return vis
+
+
+def _assert_state_equal(a, b):
+    assert a.keys() == b.keys()
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+def test_rollback_is_exact_inverse_of_append():
+    cfg, pool = _pool_setup()
+    state = pool.init_state()
+    state["tail_len"] = jnp.asarray([3, 7], jnp.int32)
+    state["pos"] = jnp.asarray([3, 7], jnp.int32)
+    before = _visible(state, pool)
+    n = jnp.asarray([4, 2], jnp.int32)
+    appended = pool.append_many(state, _panels(pool, cfg, 4, seed=1), n)
+    assert np.asarray(appended["tail_len"]).tolist() == [7, 9]
+    assert np.asarray(appended["pos"]).tolist() == [7, 9]
+    back = pool.rollback(appended, n)
+    _assert_state_equal(_visible(back, pool), before)
+
+
+def test_rollback_clamps_at_frozen_prefix_boundary():
+    """Rolling back more than the tail holds must stop at the boundary —
+    the frozen prefix (and pos accounting for it) is untouchable."""
+    cfg, pool = _pool_setup()
+    state = pool.init_state()
+    state["prefix_blocks"] = jnp.asarray([1, 0], jnp.int32)
+    state["tail_len"] = jnp.asarray([2, 5], jnp.int32)
+    state["pos"] = jnp.asarray([18, 5], jnp.int32)   # 16 frozen + 2 tail
+    out = jax.jit(pool.rollback)(state, jnp.asarray([100, 3], jnp.int32))
+    assert np.asarray(out["tail_len"]).tolist() == [0, 2]
+    assert np.asarray(out["pos"]).tolist() == [16, 2]
+    assert np.asarray(out["prefix_blocks"]).tolist() == [1, 0]
+
+
+def test_refreeze_after_partial_rollback_roundtrips():
+    """append to full -> partial rollback -> re-append -> refreeze must
+    fold exactly the surviving tail (bitmap and values consistent), as if
+    the rolled-back tokens never existed."""
+    cfg, pool = _pool_setup()
+    t = pool.tail
+    panels = _panels(pool, cfg, t, seed=2)
+    repl = _panels(pool, cfg, t, seed=3)
+
+    # path A: fill the tail, roll 5 back, re-append 5 replacement tokens
+    st = pool.append_many(pool.init_state(), panels, t)
+    st = pool.rollback(st, 5)
+    tail5 = {name: {"k": p["k"][:, :, :, :5], "v": p["v"][:, :, :, :5]}
+             for name, p in repl.items()}
+    st = pool.append_many(st, tail5, 5)
+    out_a = jax.jit(pool.refreeze)(st)
+
+    # path B: the same surviving tokens appended directly
+    direct = {name: {
+        "k": jnp.concatenate([panels[name]["k"][:, :, :, :t - 5],
+                              repl[name]["k"][:, :, :, :5]], axis=3),
+        "v": jnp.concatenate([panels[name]["v"][:, :, :, :t - 5],
+                              repl[name]["v"][:, :, :, :5]], axis=3)}
+        for name in panels}
+    out_b = jax.jit(pool.refreeze)(pool.append_many(pool.init_state(),
+                                                    direct, t))
+    _assert_state_equal(_visible(out_a, pool), _visible(out_b, pool))
+    assert np.asarray(out_a["tail_len"]).tolist() == [0, 0]
+    assert np.asarray(out_a["prefix_blocks"]).tolist() == [1, 1]
+
+
+@settings(max_examples=20, deadline=None)
+@given(tl0=st.integers(min_value=0, max_value=10),
+       m=st.integers(min_value=1, max_value=6),
+       n=st.integers(min_value=0, max_value=6),
+       roll=st.integers(min_value=0, max_value=20))
+def test_append_rollback_property(tl0, m, n, roll):
+    """For any starting fill, append width, valid count n <= m and
+    rollback <= n: rollback(append(n), n) is the identity on observable
+    state, and rollback never drives lengths below the pre-append fill
+    (frozen-prefix boundary)."""
+    n = min(n, m)
+    cfg, pool = _pool_setup()
+    state = pool.init_state()
+    state["tail_len"] = jnp.asarray([tl0, 0], jnp.int32)
+    state["pos"] = jnp.asarray([tl0, 0], jnp.int32)
+    before = _visible(state, pool)
+    appended = pool.append_many(state, _panels(pool, cfg, m, seed=tl0 + m),
+                                jnp.asarray([n, 0], jnp.int32))
+    assert np.asarray(appended["tail_len"])[0] == tl0 + n
+    if roll <= n:
+        back = pool.rollback(appended, jnp.asarray([roll, 0], jnp.int32))
+        assert np.asarray(back["tail_len"])[0] == tl0 + n - roll
+        if roll == n:
+            _assert_state_equal(_visible(back, pool), before)
+    # unconditional: a huge rollback clamps at zero fill, never negative
+    huge = pool.rollback(appended, 1000)
+    assert np.asarray(huge["tail_len"]).min() >= 0
+    assert np.asarray(huge["pos"]).min() >= 0
+
+
+# ---------------------------------------------------------------------------
+# scheduler: multi-token commits with in-window stop scanning
+# ---------------------------------------------------------------------------
+
+def test_record_tokens_stop_inside_window_truncates():
+    sch = Scheduler(slots=1, capacity_tokens=128, bs=16)
+    rid = sch.submit([1, 2], SamplingParams(max_new_tokens=32, eos_id=42))
+    req = sch.admit()
+    assert sch.record_tokens(req.slot, [7, 8], [-0.1, -0.2]) is None
+    # eos mid-window: the commit truncates AT the stop token
+    assert sch.record_tokens(req.slot, [9, 42, 77, 78]) == "stop"
+    assert sch.finished[rid].generated == [7, 8, 9, 42]
+    assert sch.finished[rid].logprobs == [-0.1, -0.2, None, None]
+
+
+def test_record_tokens_stop_sequence_crossing_window_boundary():
+    """A stop sequence whose tokens span two commits must still fire."""
+    sch = Scheduler(slots=1, capacity_tokens=128, bs=16)
+    rid = sch.submit([1], SamplingParams(max_new_tokens=32,
+                                         stop_ids=((5, 6),)))
+    req = sch.admit()
+    assert sch.record_tokens(req.slot, [4, 5]) is None
+    assert sch.record_tokens(req.slot, [6, 9]) == "stop"
+    assert sch.finished[rid].generated == [4, 5, 6]
+
+
+def test_record_tokens_length_mid_window_and_metrics():
+    sch = Scheduler(slots=1, capacity_tokens=128, bs=16)
+    rid = sch.submit([1], SamplingParams(max_new_tokens=4))
+    req = sch.admit()
+    sch.record_tokens(req.slot, [10], decode_tick=False)   # prefill token
+    assert sch.record_tokens(req.slot, [11, 12, 13, 99]) == "length"
+    out = sch.finished[rid].output()
+    assert out.token_ids == (10, 11, 12, 13)               # budget trims
+    assert out.metrics.decode_ticks == 1
+    assert out.metrics.num_generated == 4
+    assert out.metrics.accepted_per_tick == 3.0            # 3 decode tokens
+
+
+# ---------------------------------------------------------------------------
+# drafter
+# ---------------------------------------------------------------------------
+
+def test_ngram_drafter_prompt_lookup():
+    d = NGramDrafter(max_ngram=3, min_ngram=1)
+    # longest suffix [2, 3] recurs -> continue from the most recent match
+    assert d.propose([1, 2, 3, 9, 2, 3, 4, 2, 3], 3) == [4, 2, 3]
+    assert d.propose([1, 2, 3], 4) == []         # no earlier recurrence
+    assert d.propose([], 4) == []
+    assert d.propose([7, 7], 2) == [7]           # 1-gram, truncated by end
+    assert d.propose([1, 2], 0) == []
+
+
+# ---------------------------------------------------------------------------
+# engine: greedy token identity + zero retraces (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def _setup(seed=0, b=2, s=16, kv_tail=16):
+    cfg = get_config("qwen3-0.6b").reduced()
+    cfg = dataclasses.replace(cfg, kv_k_sparsity=0.0, kv_v_sparsity=0.0,
+                              kv_tail=kv_tail, compute_dtype="float32",
+                              param_dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(seed))
+    toks = jnp.asarray(np.random.default_rng(seed).integers(
+        0, cfg.vocab, (b, s)), jnp.int32)
+    return cfg, params, toks
+
+
+def _staggered_wave(eng, toks, loopy):
+    """3 requests through 2 slots: admissions + evictions, unaligned
+    prompts, one strongly loopy prompt (draft hits) and random ones
+    (slots that may never get a draft hit)."""
+    rids = [eng.submit(loopy, SamplingParams(max_new_tokens=18))]
+    rids += [eng.submit(toks[i % 2][:9 + 4 * i],
+                        SamplingParams(max_new_tokens=16 - 2 * i))
+             for i in range(2)]
+    res = eng.run()
+    return [res[r].token_ids for r in rids], res
+
+
+def test_spec_greedy_token_identity_and_zero_retraces():
+    """SpecConfig(k=3): greedy outputs token-identical to the spec-off
+    engine across a lockstep wave AND a staggered mixed-prompt wave, with
+    the verify step compiled exactly once across accept lengths 0..K."""
+    cfg, params, toks = _setup()
+    sp = SamplingParams(max_new_tokens=24)       # > kv_tail: refreezes
+    loopy = [3, 4, 5] * 5                        # n-gram paradise
+
+    base = ContinuousEngine(params, cfg, slots=2, max_tokens=96, bs=16)
+    out_base = base.generate_batch(toks, sp)
+    wave_base, _ = _staggered_wave(base, toks, loopy)
+
+    eng = ContinuousEngine(params, cfg, slots=2, max_tokens=96, bs=16,
+                           spec=SpecConfig(k=3))
+    out_spec = eng.generate_batch(toks, sp)
+    warm = eng.trace_counts()
+    assert warm["verify"] == 1 and warm["decode"] == 0
+    wave_spec, res = _staggered_wave(eng, toks, loopy)
+    after = eng.trace_counts()
+    drop = lambda c: {k: v for k, v in c.items() if k != "prefill_chunk"}
+    assert drop(after) == drop(warm) and after["verify"] == 1, \
+        f"verify retraced: {warm} -> {after}"
+
+    np.testing.assert_array_equal(np.asarray(out_spec), np.asarray(out_base))
+    assert wave_spec == wave_base
+    # accept lengths 0..K all exercised: padded lanes (no hit) and full
+    # accepts both occur on this wave
+    assert eng.spec_hist[0] > 0 and eng.spec_hist[1:].sum() > 0
+    apt = [o.metrics.accepted_per_tick for o in res.values()]
+    assert all(a is not None and a >= 1.0 for a in apt)
+
+
+def test_spec_interpret_mode_parity():
+    """The verify panel through the actual Pallas kernel (interpret mode)
+    stays token-identical to the spec-off engine on the same backend —
+    the CI spec-parity bar."""
+    cfg, params, toks = _setup(s=12, kv_tail=16)
+    sp = SamplingParams(max_new_tokens=10)
+    with ops.backend("interpret"):
+        base = ContinuousEngine(params, cfg, slots=2, max_tokens=64, bs=16)
+        out_base = base.generate_batch(toks, sp)
+        eng = ContinuousEngine(params, cfg, slots=2, max_tokens=64, bs=16,
+                               spec=SpecConfig(k=2))
+        out_spec = eng.generate_batch(toks, sp)
+        assert eng.trace_counts()["verify"] == 1
+    np.testing.assert_array_equal(np.asarray(out_spec), np.asarray(out_base))
+
+
+def test_spec_sampled_lanes_run_and_respect_budget():
+    """Sampled lanes under speculation: the engine must run retrace-free
+    with mixed greedy+sampled lanes and honor stop/length inside accepted
+    windows (distribution-level checks live in the accept_step tests)."""
+    cfg, params, toks = _setup()
+    eng = ContinuousEngine(params, cfg, slots=2, max_tokens=96, bs=16,
+                           spec=SpecConfig(k=3))
+    loopy = [2, 9] * 6
+    r1 = eng.submit(loopy, SamplingParams(temperature=0.8, top_k=8,
+                                          seed=7, max_new_tokens=11))
+    r2 = eng.submit(toks[0], SamplingParams(max_new_tokens=9,
+                                            stop_ids=((3, 4),)))
+    res = eng.run()
+    assert len(res[r1].token_ids) == 11 or res[r1].finish_reason == "stop"
+    assert res[r2].finish_reason in ("stop", "length")
+    assert len(res[r2].token_ids) <= 9
+    assert eng.trace_counts()["verify"] == 1
+    # seeded sampled stream is reproducible tick-for-tick
+    eng2 = ContinuousEngine(params, cfg, slots=2, max_tokens=96, bs=16,
+                            spec=SpecConfig(k=3))
+    r1b = eng2.submit(loopy, SamplingParams(temperature=0.8, top_k=8,
+                                            seed=7, max_new_tokens=11))
+    assert res[r1].token_ids == eng2.run()[r1b].token_ids
