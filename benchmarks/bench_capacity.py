@@ -20,9 +20,15 @@ static policy costs at the paper's 30% K / 50% V setting:
   that baseline before first divergence, plus the baseline's own
   agreement vs the legacy ``Engine`` (expected < 1 at nonzero sparsity:
   legacy prunes refreezes over the whole prefix+tail, the pool per
-  chunk/fold — a policy difference, not a capacity effect).
+  chunk/fold — a policy difference, not a capacity effect);
+* **perplexity delta** — the model is first *trained* (``bench_kv``'s
+  ``train_loop``, ``--train-steps``) so teacher-forced next-token CE is
+  meaningful: the held-out continuation is scored through the pooled
+  cache in ONE pass per slack (``lm.forward_panel_pooled`` — prefill the
+  prompt, then a ``[B, STEPS]`` panel), and the drop policy's cost lands
+  as ``ppl_ratio_vs_dropfree = exp(ce(slack) - ce(drop-free))``.
 
-  PYTHONPATH=src python -m benchmarks.bench_capacity
+  PYTHONPATH=src python -m benchmarks.bench_capacity [--train-steps N]
 """
 from __future__ import annotations
 
@@ -35,6 +41,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.pruning import prune_kv
+from repro.data import DataConfig, host_batch
 from repro.models import lm
 from repro.distributed import NULL_CTX
 from repro.serving import CachePool, ContinuousEngine, Engine, SamplingParams
@@ -44,6 +51,45 @@ from .common import emit
 SLACKS = (1.0, 1.1, 1.25, 1.5)
 NO_DROP_SLACK = 1e9          # cap clamps to the full block size: drop-free
 PROMPT, STEPS, REQS, KV_TAIL, BS = 32, 24, 2, 32, 16
+
+
+def _panel_fns(cfg):
+    """One pair of jitted closures for every ``panel_ce`` call: distinct
+    slacks with equal packed capacities then share a trace instead of
+    recompiling the full forward per slack."""
+    prefill = jax.jit(lambda p, st, t, s: lm.forward_prefill_chunk(
+        p, st, t, s, cfg, NULL_CTX, BS))
+    panel = jax.jit(lambda p, st, t, m: lm.forward_panel_pooled(
+        p, st, t, m, cfg, NULL_CTX, BS))
+    return prefill, panel
+
+
+def panel_ce(params, cfg, slack: float, prompts, cont, max_tokens: int,
+             fns) -> float:
+    """Teacher-forced next-token CE of ``cont`` through the pooled cache
+    at one ``capacity_slack``.
+
+    Prompts prefill one slot each (chunk path: whole blocks freeze at the
+    pool's static capacity — the policy under test), then the WHOLE
+    continuation is scored as one ``[B, STEPS]`` panel through the
+    unified serving forward: panel logits ``j`` predict ``cont[:, j+1]``
+    and the prefill's last-token logits predict ``cont[:, 0]``, so one
+    forward yields every CE term — no per-token decode loop.
+    """
+    b, q = cont.shape
+    pool = CachePool.build(cfg, b, max_tokens, bs=BS, capacity_slack=slack)
+    state = pool.init_state()
+    prefill, panel = fns
+    first = []
+    for i in range(b):
+        lg, state = prefill(params, state, prompts[i:i + 1], jnp.int32(i))
+        first.append(lg[0])
+    panel_logits, _ = panel(params, state, cont, jnp.ones((b,), bool))
+    logits = jnp.concatenate([jnp.stack(first)[:, None],
+                              panel_logits[:, :-1]], axis=1)     # [B, Q, V]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ce = -jnp.take_along_axis(logp, cont[..., None], axis=-1).mean()
+    return float(ce)
 
 
 def drop_rate(k, sparsity, cap, bs):
@@ -57,13 +103,31 @@ def drop_rate(k, sparsity, cap, bs):
     return float(np.clip(nnz - cap, 0, None).sum() / max(kept, 1))
 
 
-def run(out_json: str = "BENCH_capacity.json"):
+def run(out_json: str = "BENCH_capacity.json", train_steps: int = 24):
     cfg = get_config("qwen3-0.6b").reduced()
     cfg = dataclasses.replace(cfg, kv_k_sparsity=0.3, kv_v_sparsity=0.5,
                               kv_tail=KV_TAIL)
-    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    if train_steps:
+        # a trained model gives teacher-forced CE real structure — logprob
+        # drift becomes a perplexity delta instead of random-init noise
+        from repro.launch.train import train_loop
+        from repro.optim import OptConfig
+        dc = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8)
+        params, _, losses = train_loop(
+            cfg, train_steps, dc, log_every=1000,
+            optc=OptConfig(peak_lr=2e-3, warmup_steps=4,
+                           decay_steps=train_steps))
+        print(f"[capacity] trained {train_steps} steps: "
+              f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    else:
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
     toks = jnp.asarray(np.random.default_rng(0).integers(
         0, cfg.vocab, (REQS, PROMPT)), jnp.int32)
+    # in-distribution held-out eval split for the teacher-forced CE
+    ev = jnp.asarray(host_batch(DataConfig(
+        vocab=cfg.vocab, seq_len=PROMPT + STEPS, global_batch=REQS),
+        999)["tokens"])
+    ev_prompt, ev_cont = ev[:, :PROMPT], ev[:, PROMPT:]
     sp = SamplingParams(max_new_tokens=STEPS)
     max_tokens = PROMPT + STEPS + KV_TAIL
 
@@ -108,8 +172,14 @@ def run(out_json: str = "BENCH_capacity.json"):
     legacy_match = prefix_match(base_toks,
                                 [list(r) for r in np.asarray(leg_toks)])
 
+    panel_fns = _panel_fns(cfg)
+    base_ce = panel_ce(params, cfg, NO_DROP_SLACK, ev_prompt, ev_cont,
+                       max_tokens, panel_fns)
     results = {"sparsity": [cfg.kv_k_sparsity, cfg.kv_v_sparsity],
+               "train_steps": train_steps,
                "baseline_vs_legacy_prefix_match": legacy_match,
+               "dropfree_ce": base_ce,
+               "dropfree_ppl": float(np.exp(base_ce)),
                "slacks": {}}
     for slack in SLACKS:
         pool = CachePool.build(cfg, REQS, max_tokens, bs=BS,
@@ -119,6 +189,8 @@ def run(out_json: str = "BENCH_capacity.json"):
         s_toks, s_lps = logprob_wave(eng)
         drift = float(np.mean(np.abs(s_lps - base_lps)))
         agree = prefix_match(s_toks, base_toks)
+        ce = panel_ce(params, cfg, slack, ev_prompt, ev_cont, max_tokens,
+                      panel_fns)
         row = {
             "cap_k": pool.cap_k, "cap_v": pool.cap_v,
             "drop_rate_k": drop_rate(k_pref, cfg.kv_k_sparsity,
@@ -127,16 +199,28 @@ def run(out_json: str = "BENCH_capacity.json"):
                                      pool.cap_v, BS),
             "logprob_drift": drift,
             "prefix_match_vs_dropfree": agree,
+            "ce": ce,
+            "ppl": float(np.exp(ce)),
+            "ppl_ratio_vs_dropfree": float(np.exp(ce - base_ce)),
         }
         results["slacks"][str(slack)] = row
         emit(f"capacity/slack={slack}", drift * 1e6,
              f"cap_k={row['cap_k']};drop_k={row['drop_rate_k']:.4f};"
              f"drop_v={row['drop_rate_v']:.4f};"
-             f"logprob_drift={drift:.5f};match={agree:.2f}")
+             f"logprob_drift={drift:.5f};match={agree:.2f};"
+             f"ppl_ratio={row['ppl_ratio_vs_dropfree']:.4f}")
     with open(out_json, "w") as f:
         json.dump(results, f, indent=2)
-    print(f"wrote {out_json} (baseline-vs-legacy match {legacy_match:.2f})")
+    print(f"wrote {out_json} (baseline-vs-legacy match {legacy_match:.2f}; "
+          f"drop-free ppl {results['dropfree_ppl']:.2f})")
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--train-steps", type=int, default=24,
+                    help="train_loop steps before the sweep (0 = "
+                         "random-init params, CE/ppl still reported but "
+                         "not meaningful)")
+    args = ap.parse_args()
+    run(train_steps=args.train_steps)

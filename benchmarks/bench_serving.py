@@ -15,12 +15,21 @@ Measures, at batch/slot counts 1/4/8 on ``qwen3-0.6b --reduced``:
   traces and <5% tick time (reported as ``overhead``).
 
 ``--spec`` instead benchmarks speculative decoding: the same request wave
-through a spec-off engine and a draft–verify engine (``SpecConfig(k)``),
-on drafter-friendly (looping) and drafter-hostile (random) prompts.
-Reports tok/s both ways, the accepted-length histogram, and mean tokens
-committed per verify tick; written to ``BENCH_spec.json``.
+through a spec-off engine, a draft–verify engine (``SpecConfig(k)``), and
+an adaptive-K engine (``SpecConfig(k, adaptive=True)``), on
+drafter-friendly (looping) and drafter-hostile (random) prompts.  Reports
+tok/s each way, the accepted-length histogram, the adaptive proposal
+histogram, and mean tokens committed per verify tick; written to
+``BENCH_spec.json``.
 
-  PYTHONPATH=src python -m benchmarks.bench_serving [--spec] [--spec-k K]
+``--mesh`` instead sweeps the mesh-sharded pooled engine over (dp, tp)
+shapes on the available devices (force a host-device count with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``): tok/s per mesh,
+decode trace counts (must stay 1), and greedy-token agreement with the
+1-device engine; written to ``BENCH_mesh.json``.
+
+  PYTHONPATH=src python -m benchmarks.bench_serving \
+      [--spec] [--spec-k K] [--mesh]
 """
 from __future__ import annotations
 
@@ -120,9 +129,11 @@ def run_spec(k: int = 4, slots: int = 4, steps: int = 64,
     loop = np.tile(rng.integers(0, cfg.vocab, (slots, 8)), (1, PROMPT // 8))
     rand = rng.integers(0, cfg.vocab, (slots, PROMPT))
     results = {"k": k, "slots": slots, "steps": steps, "regimes": {}}
+    grid = (("off", None), ("on", SpecConfig(k=k)),
+            ("adaptive", SpecConfig(k=k, adaptive=True)))
     for regime, prompts in (("loop", loop), ("random", rand)):
         row = {}
-        for label, spec in (("off", None), ("on", SpecConfig(k=k))):
+        for label, spec in grid:
             eng = ContinuousEngine(params, cfg, slots=slots,
                                    max_tokens=PROMPT + steps + KV_TAIL,
                                    spec=spec)
@@ -130,6 +141,9 @@ def run_spec(k: int = 4, slots: int = 4, steps: int = 64,
                                SamplingParams(max_new_tokens=3))  # compile
             if spec is not None:
                 eng.spec_hist[:] = 0          # drop the warmup run's ticks
+                if eng.adaptive_hist is not None:
+                    eng.adaptive_hist[:] = 0
+                    eng._adaptive._rate.clear()
             t0 = time.perf_counter()
             rids = [eng.submit(p, SamplingParams(max_new_tokens=steps))
                     for p in prompts]
@@ -143,6 +157,9 @@ def run_spec(k: int = 4, slots: int = 4, steps: int = 64,
                 "tokens": toks,
                 "accepted_hist": (eng.spec_hist.tolist()
                                   if spec is not None else None),
+                "adaptive_hist": (eng.adaptive_hist.tolist()
+                                  if eng.adaptive_hist is not None
+                                  else None),
                 "accepted_per_tick": (float(np.mean(apt))
                                       if spec is not None else 1.0),
             }
@@ -153,13 +170,83 @@ def run_spec(k: int = 4, slots: int = 4, steps: int = 64,
         # the [B,1] decode and [B,K+1] verify panels may drift)
         match = np.mean([row["on"]["tokens"][r] == row["off"]["tokens"][r]
                          for r in row["on"]["tokens"]])
+        adapt_match = np.mean(
+            [row["adaptive"]["tokens"][r] == row["off"]["tokens"][r]
+             for r in row["adaptive"]["tokens"]])
         for r in row.values():
             del r["tokens"]
         row["greedy_match"] = float(match)
+        row["greedy_match_adaptive"] = float(adapt_match)
         row["speedup"] = row["on"]["tok_s"] / row["off"]["tok_s"]
         emit(f"serving/spec_speedup/{regime}", 0.0,
-             f"x{row['speedup']:.2f};hist={row['on']['accepted_hist']}")
+             f"x{row['speedup']:.2f};hist={row['on']['accepted_hist']};"
+             f"adaptive_hist={row['adaptive']['adaptive_hist']}")
         results["regimes"][regime] = row
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_json}")
+
+
+def run_mesh(slots: int = 8, steps: int = 48,
+             out_json: str = "BENCH_mesh.json"):
+    """Mesh-sharded serving sweep: the same request wave through
+    ``ContinuousEngine(mesh=...)`` at every (dp, tp) shape the available
+    devices support (plus the unsharded engine as the reference).
+
+    On a forced host-device platform the numbers measure *overhead* (one
+    physical CPU pretending to be N devices — partition/collective cost
+    with no extra FLOPs), so the bar is greedy-token agreement and flat
+    decode traces, with tok/s reported for shape-relative comparison.
+    dp-only meshes are exactly token-identical; tp > 1 at bf16 can flip
+    near-tie argmaxes (the attention out-projection's contraction is
+    sharded over heads, so partial-sum order differs) — the f32 parity
+    suite (tests/test_serving_sharded.py) is exact on both.
+    """
+    from repro.launch.mesh import make_mesh
+
+    cfg = get_config("qwen3-0.6b").reduced()
+    cfg = dataclasses.replace(cfg, kv_k_sparsity=0.3, kv_v_sparsity=0.5,
+                              kv_tail=KV_TAIL)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (slots, PROMPT)),
+                       jnp.int32)
+    sp = SamplingParams(max_new_tokens=steps)
+    n_dev = len(jax.devices())
+    shapes = [(1, 1)] + [(dp, tp)
+                         for dp in (2, 4, 8) for tp in (1, 2)
+                         if dp * tp <= n_dev and slots % dp == 0]
+
+    results = {"slots": slots, "steps": steps, "devices": n_dev,
+               "meshes": {}}
+    base_eng = ContinuousEngine(params, cfg, slots=slots,
+                                max_tokens=PROMPT + steps + KV_TAIL)
+    base_eng.generate_batch(toks, SamplingParams(max_new_tokens=3))
+    t0 = time.perf_counter()
+    base_toks = np.asarray(base_eng.generate_batch(toks, sp))
+    base_dt = time.perf_counter() - t0
+    results["unsharded_tok_s"] = slots * steps / base_dt
+    emit("serving/mesh=none", base_dt * 1e6,
+         f"tok_s={results['unsharded_tok_s']:.1f}")
+    for dp, tp in shapes:
+        mesh = make_mesh((dp, tp), ("data", "model"))
+        eng = ContinuousEngine(params, cfg, slots=slots,
+                               max_tokens=PROMPT + steps + KV_TAIL,
+                               mesh=mesh)
+        eng.generate_batch(toks, SamplingParams(max_new_tokens=3))
+        t0 = time.perf_counter()
+        out = np.asarray(eng.generate_batch(toks, sp))
+        dt = time.perf_counter() - t0
+        row = {
+            "tok_s": slots * steps / dt,
+            "wall_s": dt,
+            "greedy_match": float(np.mean(out == base_toks)),
+            "decode_traces": eng.trace_counts()["decode"],
+        }
+        results["meshes"][f"{dp}x{tp}"] = row
+        emit(f"serving/mesh={dp}x{tp}", dt * 1e6,
+             f"tok_s={row['tok_s']:.1f};match={row['greedy_match']:.3f};"
+             f"decode_traces={row['decode_traces']}")
     with open(out_json, "w") as f:
         json.dump(results, f, indent=2)
     print(f"wrote {out_json}")
@@ -170,10 +257,18 @@ if __name__ == "__main__":
     ap.add_argument("--spec", action="store_true",
                     help="speculative-decoding benchmark (BENCH_spec.json)")
     ap.add_argument("--spec-k", type=int, default=4)
+    ap.add_argument("--mesh", action="store_true",
+                    help="mesh-sharded serving sweep (BENCH_mesh.json); "
+                         "force devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8")
     args = ap.parse_args()
+    if args.spec and args.mesh:
+        ap.error("--spec and --mesh are separate modes")
     if args.spec:
         if args.spec_k <= 0:
             ap.error("--spec requires --spec-k >= 1")
         run_spec(k=args.spec_k)
+    elif args.mesh:
+        run_mesh()
     else:
         run()

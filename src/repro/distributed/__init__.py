@@ -1,3 +1,4 @@
 """Distribution: logical-axis sharding rules, shard contexts, collectives."""
 from .sharding import (ShardCtx, NULL_CTX, default_rules, tree_param_specs,
                        to_named, mesh_axis_size)
+from . import serving_sharding

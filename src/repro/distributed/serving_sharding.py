@@ -1,0 +1,118 @@
+"""Mesh shardings for the pooled serving state (ShardCtx-driven).
+
+The continuous-batching engine's entire device state is a pytree of
+``[slots]``-leading vectors (lengths, sampling lanes) and pooled cache
+leaves ``[P, slots, Hkv, ...]``.  Serving on a multi-chip mesh is therefore
+a *placement* problem, not a kernel problem: shard **slots over the data
+axes** (each chip owns a subset of concurrent requests) and **KV heads
+over the model axis** (each chip owns a subset of each request's cache),
+and every jitted engine step — decode/verify panels, chunked prefill,
+in-place refreeze, rollback, release, lane writes — runs unchanged, because
+all of them are already masked writes at static shapes with no cross-slot
+reductions.
+
+This module emits the :class:`~jax.sharding.NamedSharding` trees the engine
+passes to ``jax.jit`` as ``in_shardings``/``out_shardings``.  Placement is
+derived from logical-axis names (the same ``ShardCtx.spec`` machinery the
+training stack uses), so every leaf degrades to replication when its dim
+does not divide the mesh axis — any (pool geometry x mesh) combination
+lowers, and a 1-device mesh is exactly the unsharded engine
+(token-identical, zero extra retraces).
+
+Weights are *replicated* by the engine (serving decode is memory-bound on
+the cache, not the weights): ``ContinuousEngine(mesh=...)`` device_puts
+its params onto a fully-replicated placement and pins them that way in
+every step's ``in_shardings`` — pre-sharded weights would be gathered.
+Tensor-parallel weight placement for serving (reusing
+:func:`repro.distributed.tree_param_specs` and threading the committed
+shardings through the step jits) is a ROADMAP follow-up.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from .sharding import ShardCtx, default_rules
+
+
+def serving_ctx(mesh: Optional[Mesh], cfg=None) -> ShardCtx:
+    """ShardCtx for serving: the default logical-axis rules (slots/batch
+    over data, kv_heads/heads/vocab over model) on ``mesh``.  ``mesh=None``
+    is the single-device no-op context."""
+    if mesh is None:
+        return ShardCtx()
+    multi_pod = "pod" in mesh.axis_names
+    rules = default_rules(multi_pod, cfg)
+    # serving activations are [slots, ...]; constrain their batch dim the
+    # same way the state's slot dim is sharded
+    rules["batch"] = rules["slots"]
+    return ShardCtx(mesh, rules)
+
+
+def leaf_sharding(ctx: ShardCtx, axes: Sequence[Optional[str]],
+                  leaf) -> NamedSharding:
+    """NamedSharding for one leaf from its logical axes (divisibility-safe:
+    any axis that does not divide falls back to replication)."""
+    return NamedSharding(ctx.mesh, ctx.spec(axes, leaf.shape))
+
+
+def tree_shardings(ctx: ShardCtx, axes_tree: Any, tree: Any) -> Any:
+    """Map an axes pytree + a matching state pytree to NamedShardings.
+
+    ``axes_tree`` carries one logical-axes tuple per leaf (the owners
+    describe their own layout: ``CachePool.state_axes`` for the pool,
+    ``sampling.lane_axes`` for the lanes); leaves are matched positionally
+    by pytree structure.
+    """
+    return jax.tree_util.tree_map(
+        lambda axes, leaf: leaf_sharding(ctx, axes, leaf),
+        axes_tree, tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+
+
+def state_shardings(ctx: ShardCtx, state: Any, axes_tree: Any) -> Any:
+    """Shardings for the engine's full device state (pool + lanes).
+
+    ``state`` may be concrete arrays or ShapeDtypeStructs — only shapes
+    are read.  Slots land on the data axes, KV heads on the model axis,
+    everything else replicated; leaves whose dims don't divide replicate.
+    """
+    return tree_shardings(ctx, axes_tree, state)
+
+
+def token_sharding(ctx: ShardCtx, slots: int) -> NamedSharding:
+    """Sharding for per-tick ``[slots, Q]`` token panels (any static Q)."""
+    return NamedSharding(ctx.mesh, ctx.spec(("slots", None), (slots, 1)))
+
+
+def vec_sharding(ctx: ShardCtx, slots: int) -> NamedSharding:
+    """Sharding for ``[slots]`` per-tick vectors (masks, draft lengths,
+    sampled tokens, chosen-token logprobs)."""
+    return NamedSharding(ctx.mesh, ctx.spec(("slots",), (slots,)))
+
+
+def replicated(ctx: ShardCtx) -> NamedSharding:
+    """Fully-replicated placement (scalars, small host-fed operands)."""
+    return NamedSharding(ctx.mesh, PartitionSpec())
+
+
+def shard_state(ctx: ShardCtx, state: Any, axes_tree: Any) -> Any:
+    """Commit a concrete state pytree onto its serving shardings (used once
+    at engine construction; every jitted step's ``out_shardings`` keeps it
+    there afterwards)."""
+    return jax.device_put(state, state_shardings(ctx, state, axes_tree))
+
+
+def describe(ctx: ShardCtx, state: Any, axes_tree: Any) -> Dict[str, str]:
+    """Human-readable placement summary (launcher/bench logging)."""
+    shardings = state_shardings(ctx, state, axes_tree)
+    flat, _ = jax.tree_util.tree_flatten_with_path(shardings)
+    out = {}
+    for path, s in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = str(s.spec)
+    return out

@@ -3,6 +3,8 @@
 Logical axes used by param specs and activation constraints:
 
   batch     -> (pod, data)      activations' batch dim
+  slots     -> (pod, data)      serving cache-pool slot dim (the pooled
+               state's batch axis — see distributed/serving_sharding.py)
   seq       -> model (iff cfg.seq_shard; Megatron sequence sharding of the
                residual stream between attention/MLP blocks)
   ctx       -> data             KV-cache / recurrent-state sequence dim for
@@ -114,6 +116,10 @@ def default_rules(multi_pod: bool, cfg=None) -> Dict[str, Any]:
     dp = ("pod", "data") if multi_pod else ("data",)
     rules: Dict[str, Any] = {
         "batch": dp,
+        # serving: cache-pool slots are the batch dim of the pooled state —
+        # slots over the data axes, kv heads (below) over the model axis
+        # gives multi-chip continuous batching (distributed/serving_sharding)
+        "slots": dp,
         "ctx": dp + ("model",),   # KV/cache blocks spread over ALL chips
         "heads": "model",
         "kv_heads": "model",

@@ -139,10 +139,12 @@ def sparse_decode_attention(q: jax.Array,
                             ) -> jax.Array:
     """Decode attention over a compressed frozen prefix + dense tail.
 
-    q: ``[B, Hq, D]`` (one decode tick) or ``[B, Q, Hq, D]`` (a
-    speculative-verify *query panel* — requires a tail); k_sp/v_sp packed
-    from the [B*Hkv*S, D] cache view with block (bs, D); k_tail/v_tail:
-    [B, Hkv, T, D].
+    q: ``[B, Hq, D]`` (one decode tick) or ``[B, Q, Hq, D]`` (a *query
+    panel* — the unified serving forward; ``Q > 1`` requires a tail).  A
+    ``Q == 1`` panel is squeezed onto the single-query dispatch — decode
+    through the panel forward is bit-identical to the 3-D entry.  k_sp/
+    v_sp packed from the [B*Hkv*S, D] cache view with block (bs, D);
+    k_tail/v_tail: [B, Hkv, T, D].
 
     ``tail_len``/``prefix_len`` may be scalar (uniform batch) or per-slot
     ``[B]`` int32 (pooled continuous-batching cache).  ``prefix_len`` must
@@ -163,6 +165,13 @@ def sparse_decode_attention(q: jax.Array,
     """
     interp = _pallas()
     has_tail = k_tail is not None and k_tail.shape[2] > 0
+    if q.ndim == 4 and q.shape[1] == 1:
+        # a 1-wide panel IS a decode tick: squeeze onto the single-query
+        # dispatch so the unified panel forward at Q==1 stays bit-identical
+        # to the pre-unification decode path on every backend.
+        o = sparse_decode_attention(q[:, 0], k_sp, v_sp, hkv, sm_scale,
+                                    k_tail, v_tail, tail_len, prefix_len)
+        return o[:, None]
     panel = q.ndim == 4
     if panel:
         assert has_tail, "query panels append into (and need) a dense tail"

@@ -11,8 +11,17 @@ either
 * ``--one-shot`` — the legacy static-batch ``Engine`` (prefill the whole
   batch, decode lockstep), kept as the baseline.
 
+``--mesh DP,TP`` serves the stream on a device mesh: the pooled state
+shards slots over the data axis and KV heads over the model axis
+(``repro.distributed.serving_sharding``) with token-identical greedy
+output; ``--spec-k K`` adds draft–verify speculation (``--spec-adaptive``
+for per-slot adaptive draft windows).
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --requests 8 --slots 4 --prompt-len 64 --steps 16 --sparsity 0.5
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+      --requests 8 --slots 8 --mesh 4,2
 """
 from __future__ import annotations
 
@@ -58,12 +67,23 @@ def main(argv=None):
                          "to K n-gram draft tokens per slot per tick "
                          "(0 = off; greedy output is token-identical "
                          "either way)")
+    ap.add_argument("--spec-adaptive", action="store_true",
+                    help="with --spec-k: per-slot adaptive draft windows "
+                         "(each slot's acceptance rate scales its K)")
+    ap.add_argument("--mesh", default="",
+                    help="stream mode: serve the pooled engine on a "
+                         "DPxTP device mesh, e.g. --mesh 4,2 — slots "
+                         "shard over the data axis, KV heads over the "
+                         "model axis; greedy output is token-identical "
+                         "to the unsharded engine")
     # sampling (0 temperature = greedy; each request gets its own seed)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.spec_adaptive and not args.spec_k:
+        ap.error("--spec-adaptive requires --spec-k >= 1")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -125,11 +145,36 @@ def main(argv=None):
         # a bit-exact round trip at full per-block capacity
         cfg = dataclasses.replace(cfg, kv_k_sparsity=0.0, kv_v_sparsity=0.0)
     slots = args.slots or args.batch
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_mesh
+        try:
+            dp, tp = (int(x) for x in args.mesh.split(","))
+        except ValueError:
+            raise SystemExit(
+                f"[serve] --mesh wants DP,TP (e.g. --mesh 4,2), got "
+                f"{args.mesh!r}")
+        if dp * tp > len(jax.devices()):
+            raise SystemExit(
+                f"[serve] --mesh {args.mesh} needs {dp * tp} devices, have "
+                f"{len(jax.devices())} (hint: "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={dp*tp})")
+        mesh = make_mesh((dp, tp), ("data", "model"))
+        print(f"[serve] mesh {dp}x{tp} (data x model): {slots} slots over "
+              f"data, {cfg.n_kv} KV heads over model")
     eng = ContinuousEngine(
         params, cfg, slots=slots,
         max_tokens=args.prompt_len + args.steps + cfg.kv_tail,
         prefill_chunk=args.prefill_chunk or None,
-        spec=SpecConfig(k=args.spec_k) if args.spec_k else None)
+        spec=SpecConfig(k=args.spec_k, adaptive=args.spec_adaptive)
+        if args.spec_k else None,
+        mesh=mesh)
+    if mesh is not None:
+        from repro.distributed import serving_sharding
+        place = serving_sharding.describe(eng.ctx, eng.state, eng.state_axes)
+        kv_key = next(k for k in place if k.endswith("k_values"))
+        print(f"[serve] placement: pos={place['pos']} "
+              f"kv={ {kv_key: place[kv_key]} }")
     rng = np.random.default_rng(0)
     t0 = time.time()
     rids = []
@@ -162,6 +207,10 @@ def main(argv=None):
         print(f"[serve] spec: accepted-draft histogram "
               f"{eng.spec_hist.tolist()} (index = drafts accepted/tick); "
               f"mean tokens/tick {mean}")
+        if eng.adaptive_hist is not None:
+            print(f"[serve] spec: adaptive proposal histogram "
+                  f"{eng.adaptive_hist.tolist()} "
+                  f"(index = drafts proposed/tick)")
     return 0
 
 

@@ -182,70 +182,31 @@ def attn_decode(p, x_t: jax.Array, cache, cfg, ctx,
     return out, cache
 
 
-def pooled_attn_decode(p, x_t: jax.Array, kv: Dict[str, jax.Array], cfg,
-                       ctx, positions: jax.Array, prefix_blocks: jax.Array,
-                       tail_len: jax.Array, slot_mask: jax.Array, bs: int
-                       ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """One decode step against one layer of the pooled serving cache.
+def pooled_attn_panel(p, x: jax.Array, kv: Dict[str, jax.Array], cfg,
+                      ctx, positions: jax.Array, prefix_blocks: jax.Array,
+                      tail_len: jax.Array, slot_mask: jax.Array, bs: int
+                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """THE pooled serving attention: one ``[B, Qn]`` query panel per layer.
 
-    Unlike :func:`attn_decode` (one scalar position for the whole batch),
-    every slot here carries its own position, prefix length, and tail fill —
-    the per-slot variable-length semantics continuous batching needs.  All
-    shapes are static: the pooled prefix storage is fixed-capacity and
-    masked by ``prefix_blocks * bs``, so this traces exactly once.
+    One function serves every per-token serving step — plain decode is the
+    ``Qn == 1`` panel, speculative verify the ``Qn == K+1`` panel; the old
+    ``pooled_attn_decode`` / ``pooled_attn_verify`` pair collapsed into
+    this single body.  ``x [B, Qn, d]`` is each slot's panel (last
+    committed token + up to ``Qn-1`` drafts), ``positions [B, Qn]`` its
+    absolute positions; every slot carries its own position, prefix length
+    and tail fill (``prefix_blocks``/``tail_len`` int32 ``[B]``) — the
+    per-slot variable-length semantics continuous batching needs.  All
+    shapes are static, so each panel width traces exactly once.
 
-    x_t [B, d]; kv: {"k_bitmap" [B,Hkv,Sb,W], "k_values" [B,Hkv,Sb,Ck],
-    "v_bitmap", "v_values", "k_tail"/"v_tail" [B,Hkv,T,D]};
-    positions/prefix_blocks/tail_len int32 [B]; slot_mask bool [B] (inactive
-    slots keep their cache bit-identical and produce ignorable outputs).
-
-    The attention itself is the FUSED prefix+tail flash-decode op: one
-    kernel walks each slot's valid prefix blocks and its tail ring under
-    one online softmax, so the per-token hot loop has no XLA-side tail
-    attention, lse merge, or GQA head materialization.
-    """
-    b, _ = x_t.shape
-    hq, hkv, hd = cfg.padded_heads, cfg.n_kv, cfg.hd
-    q = _project_q(p, x_t, cfg)                               # [B,Hq,hd]
-    k_new, v_new = _project_kv(p, x_t, cfg)                   # [B,Hkv,hd]
-    cos, sin = rope_angles(positions, hd, cfg.rope_theta)     # [B, hd//2]
-    q = apply_rope(q[:, None], cos[:, None], sin[:, None])[:, 0]
-    k_new = apply_rope(k_new[:, None], cos[:, None], sin[:, None])[:, 0]
-    sm = 1.0 / hd ** 0.5
-
-    def append(tail, new):
-        upd = jax.vmap(lambda tl, nw, i: jax.lax.dynamic_update_slice_in_dim(
-            tl, nw[:, None].astype(tl.dtype), i, axis=1))(
-                tail, new, tail_len)
-        return jnp.where(slot_mask[:, None, None, None], upd, tail)
-
-    k_tail = append(kv["k_tail"], k_new)
-    v_tail = append(kv["v_tail"], v_new)
-    t_att = tail_len + slot_mask.astype(jnp.int32)
-    k_sp = pooled_view(kv["k_bitmap"], kv["k_values"], bs, hd)
-    v_sp = pooled_view(kv["v_bitmap"], kv["v_values"], bs, hd)
-    o = ops.sparse_decode_attention(q, k_sp, v_sp, hkv, sm,
-                                    k_tail, v_tail, t_att,
-                                    prefix_len=prefix_blocks * bs)
-    out = ops.linear(o.reshape(b, hq * hd).astype(x_t.dtype), p["wo"])
-    return out, {**kv, "k_tail": k_tail, "v_tail": v_tail}
-
-
-def pooled_attn_verify(p, x: jax.Array, kv: Dict[str, jax.Array], cfg,
-                       ctx, positions: jax.Array, prefix_blocks: jax.Array,
-                       tail_len: jax.Array, slot_mask: jax.Array, bs: int
-                       ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """Speculative-verify attention for one layer of the pooled cache.
-
-    The multi-query sibling of :func:`pooled_attn_decode`: ``x [B, Qn, d]``
-    is each slot's verify panel (last committed token + up to K drafts),
-    ``positions [B, Qn]`` its absolute positions.  All ``Qn`` fresh K/V
-    land in the slot's dense tail at ``tail_len..tail_len+Qn-1`` (the
-    engine rolls the rejected suffix back by decrementing lengths), and the
-    panel is scored by the SAME fused prefix+tail kernel as the one-token
-    tick, just with a ``Qn*G``-row query block: panel query ``j`` sees the
-    full frozen prefix, the pre-existing tail, and panel tokens ``<= j`` —
-    intra-window causal.  Inactive slots write nothing and pass their
+    All ``Qn`` fresh K/V land in the slot's dense tail at
+    ``tail_len..tail_len+Qn-1`` (a rollback is a pure length decrement),
+    and the panel is scored by the fused prefix+tail flash-decode kernel
+    with a ``Qn*G``-row query block: panel query ``j`` sees the full
+    frozen prefix, the pre-existing tail, and panel tokens ``<= j`` —
+    intra-window causal.  At ``Qn == 1`` the ops layer squeezes the panel
+    onto the exact single-query dispatch, so a decode tick is
+    bit-identical to the pre-unification ``pooled_attn_decode`` path.
+    Inactive slots (``slot_mask`` False) write nothing and pass their
     cache through bit-identical.
     """
     b, qn, _ = x.shape

@@ -28,8 +28,8 @@ from .module import ParamSpec
 from .layers import (rms_norm, norm_spec, embed_specs, embed_apply,
                      unembed_apply, mlp_specs, mlp_apply)
 from .attention import (attn_specs, attn_apply, attn_decode, DenseKVCache,
-                        cross_attn_decode, pooled_attn_decode,
-                        pooled_attn_prefill_chunk, pooled_attn_verify)
+                        cross_attn_decode, pooled_attn_panel,
+                        pooled_attn_prefill_chunk)
 from .moe import moe_specs, moe_apply
 from .ssm import (mamba_specs, mamba_apply, mamba_decode, mamba_init_state,
                   rwkv_specs, rwkv_time_mix, rwkv_channel_mix,
@@ -388,74 +388,60 @@ def _attn_kinds(cfg) -> List[Tuple[str, str]]:
     return kinds
 
 
-def forward_decode_pooled(params, state, tokens: jax.Array,
-                          slot_mask: jax.Array, cfg, ctx, bs: int
-                          ) -> Tuple[jax.Array, Any]:
-    """One decode tick over every slot of the pooled serving cache.
+def _pooled_ffn(pj, kind, h2, cfg, ctx):
+    """The shared MLP/MoE half of a pooled panel block, flattened to rows.
 
-    tokens [B, 1]; slot_mask bool [B] (False slots are pure passthrough —
-    their cache, lengths and positions come back bit-identical, so a
-    mid-prefill or empty slot can ride along in the same compiled step).
-    Every array in ``state`` keeps its shape, so this jits exactly once per
-    pool geometry — refreezes and admissions never retrace it.
+    The flatten is a bit-exactness requirement, not a style choice: XLA
+    fuses the SwiGLU epilogue differently at ``[B, 1, d]`` than at
+    ``[B, d]`` (the silu·up product rounds through different fusions), so
+    running the ``Q == 1`` panel at its natural rank would perturb bf16
+    decode logits vs the pre-unification decode step.  Row-flattening
+    makes the panel width invisible to the FFN — ``Q == 1`` compiles the
+    exact 2-D program the old ``forward_decode_pooled`` ran.
 
-    Returns (logits [B, V] f32, new state): token *selection* is not this
-    function's job — the serving engine feeds the logits to the per-slot
-    sampler (``repro.serving.sampling.sample_step``) inside the same jitted
-    step.  Keys of ``state`` this function does not own (e.g. the engine's
-    ``"sample"`` lanes) pass through untouched.
+    Deliberately NO sharding constraint on the silu·up hidden (``ctx`` is
+    the MoE router's API argument only): pinning the ffn dim to the model
+    axis would partial-sum + all-reduce the ``w_down`` contraction, and
+    that reassociation breaks the sharded-vs-unsharded token-identity bar
+    mesh serving asserts.  The rows stay data-sharded through the
+    residual stream; with serving weights replicated, duplicating the FFN
+    across the tensor axis is the explicit cost of exact parity (the
+    TP-weights ROADMAP follow-up owns removing it).
     """
-    x_t = embed_apply(params["embed"], tokens[:, 0], cfg)
-    x_t = ctx.constrain(x_t, ("batch", "embed"))
-    kinds = _attn_kinds(cfg)
-    positions = state["pos"]
-    prefix_blocks = state["prefix_blocks"]
-    tail_len = state["tail_len"]
-
-    def body(xc, xs):
-        pp, cc = xs
-        new_cc = {}
-        for j, kind in enumerate(kinds):
-            pj, cj = pp[f"l{j}"], cc[f"l{j}"]
-            h = rms_norm(xc, pj["ln1"])
-            h, new_kv = pooled_attn_decode(
-                pj["mixer"], h, cj["kv"], cfg, ctx, positions,
-                prefix_blocks, tail_len, slot_mask, bs)
-            xc = xc + h
-            h2 = rms_norm(xc, pj["ln2"])
-            if kind[1] == "moe":
-                h2 = moe_apply(pj["ffn"], h2[:, None, :], cfg, ctx)[:, 0]
-            else:
-                h2 = mlp_apply(pj["ffn"], h2)
-            xc = xc + h2
-            new_cc[f"l{j}"] = {"kv": new_kv}
-        return xc, new_cc
-
-    x_t, new_layers = lax.scan(body, x_t,
-                               (params["blocks"], state["layers"]))
-    x_t = rms_norm(x_t, params["final_norm"])
-    logits = unembed_apply(params["embed"], x_t, cfg)
-    logits = ctx.constrain(logits, ("batch", "vocab"))
-    live = slot_mask.astype(jnp.int32)
-    new_state = {**state, "layers": new_layers,
-                 "pos": positions + live, "tail_len": tail_len + live}
-    return logits, new_state
+    lead = h2.shape[:-1]
+    rows = h2.reshape(-1, h2.shape[-1])
+    if kind[1] == "moe":
+        out = moe_apply(pj["ffn"], rows[:, None, :], cfg, ctx)[:, 0]
+    else:
+        out = mlp_apply(pj["ffn"], rows)
+    return out.reshape(*lead, out.shape[-1])
 
 
-def forward_verify_pooled(params, state, tokens: jax.Array,
-                          slot_mask: jax.Array, cfg, ctx, bs: int
-                          ) -> Tuple[jax.Array, Any]:
-    """Speculative-verify forward: score a ``[B, Qn]`` token panel per slot
-    in ONE pass over the pooled serving cache.
+def forward_panel_pooled(params, state, tokens: jax.Array,
+                         slot_mask: jax.Array, cfg, ctx, bs: int
+                         ) -> Tuple[jax.Array, Any]:
+    """THE per-token serving forward: score a ``[B, Qn]`` token panel per
+    slot in ONE pass over the pooled serving cache.
 
-    ``tokens[:, 0]`` is each slot's last committed token, ``tokens[:, 1:]``
-    its (padded) draft window; panel position ``j`` decodes at absolute
-    position ``pos + j`` with intra-window causal attention, so
-    ``logits[:, j]`` is exactly what ``Qn - j`` sequential decode ticks
-    would have produced for that continuation.  All ``Qn`` fresh K/V are
-    appended and ``pos``/``tail_len`` advance by ``Qn`` per live slot —
-    the engine rolls back the rejected suffix (a pure masked length
-    decrement) after acceptance.  Masked slots are bit-identical
+    One function, three serving roles — the old ``forward_decode_pooled``
+    and ``forward_verify_pooled`` scan bodies collapsed into this single
+    panel path with a static ``Qn``:
+
+    * ``Qn == 1`` — a plain decode tick (``tokens [B, 1]`` is each slot's
+      last committed token); the ops layer squeezes the panel onto the
+      exact single-query fused dispatch, so greedy decode stays
+      bit-identical to the pre-unification engine;
+    * ``Qn == K+1`` — a speculative verify step (``tokens[:, 1:]`` the
+      padded draft window);
+    * spec-off engines simply never build a ``Qn > 1`` trace.
+
+    Panel position ``j`` decodes at absolute position ``pos + j`` with
+    intra-window causal attention, so ``logits[:, j]`` is exactly what
+    ``j`` sequential decode ticks past ``tokens[:, 0]`` would have
+    produced for that continuation.  All ``Qn`` fresh K/V are appended
+    and ``pos``/``tail_len`` advance by ``Qn`` per live slot — a caller
+    that keeps fewer (speculative rejection) rolls the suffix back by a
+    pure masked length decrement.  Masked slots are bit-identical
     passthrough, and every shape is static: one trace per
     (pool geometry, Qn), whatever the accept lengths turn out to be.
 
@@ -476,16 +462,12 @@ def forward_verify_pooled(params, state, tokens: jax.Array,
         for j, kind in enumerate(kinds):
             pj, cj = pp[f"l{j}"], cc[f"l{j}"]
             h = rms_norm(xc, pj["ln1"])
-            h, new_kv = pooled_attn_verify(
+            h, new_kv = pooled_attn_panel(
                 pj["mixer"], h, cj["kv"], cfg, ctx, positions,
                 prefix_blocks, tail_len, slot_mask, bs)
             xc = xc + h
-            h2 = rms_norm(xc, pj["ln2"])
-            if kind[1] == "moe":
-                h2 = moe_apply(pj["ffn"], h2, cfg, ctx)
-            else:
-                h2 = mlp_apply(pj["ffn"], h2, ctx)
-            xc = xc + h2
+            xc = xc + _pooled_ffn(pj, kind, rms_norm(xc, pj["ln2"]),
+                                  cfg, ctx)
             new_cc[f"l{j}"] = {"kv": new_kv}
         return xc, new_cc
 

@@ -1,5 +1,6 @@
-from .engine import Engine, ContinuousEngine, retrace_count
+from .engine import (Engine, ContinuousEngine, retrace_count,
+                     stable_trace_counts)
 from .cache_pool import CachePool
 from .sampling import RequestMetrics, RequestOutput, SamplingParams
 from .scheduler import Scheduler, Request
-from .spec import Drafter, NGramDrafter, SpecConfig
+from .spec import AdaptiveDraft, Drafter, NGramDrafter, SpecConfig

@@ -128,6 +128,30 @@ class CachePool:
             "layers": {f"l{j}": {"kv": kv_leaf()} for j in range(p)},
         }
 
+    def state_axes(self) -> Dict[str, Any]:
+        """Logical-axes pytree matching :meth:`init_state` leaf for leaf —
+        the pool's own description of how its storage may shard
+        (``distributed/serving_sharding`` turns it into NamedShardings).
+
+        Slot occupancy vectors are ``[slots]`` -> the slot axis; every
+        layer leaf is ``[P, slots, Hkv, ...]`` -> slots over the data
+        axes, KV heads over the model axis, block/ring/packed dims
+        unsharded (block storage is per-(slot, head) and refreeze's
+        scatter is per-slot — no cross-shard writes ever happen).
+        """
+        p = lm.period_len(self.cfg)
+
+        def kv_axes():
+            row = (None, "slots", "kv_heads", None, None)
+            return {k: row for k in ("k_bitmap", "k_values", "v_bitmap",
+                                     "v_values", "k_tail", "v_tail")}
+        return {
+            "pos": ("slots",),
+            "prefix_blocks": ("slots",),
+            "tail_len": ("slots",),
+            "layers": {f"l{j}": {"kv": kv_axes()} for j in range(p)},
+        }
+
     # -- transitions (pure; the engine jits each exactly once) --------------
     def refreeze(self, state: Dict[str, Any]) -> Dict[str, Any]:
         """Fold every full tail into its slot's next free prefix blocks.
@@ -184,7 +208,7 @@ class CachePool:
         (``<= m``; 0 = passthrough).  Advances ``pos``/``tail_len`` by
         ``n``.  Pool-level twin of the verify step's in-layer append:
         the engine's verify forward writes each layer inside its scan
-        (``models.attention.pooled_attn_verify``) through the SAME
+        (``models.attention.pooled_attn_panel``) through the SAME
         :func:`~repro.core.sparse_kv.append_tail_panel` core this method
         uses — change the write semantics there, not here.  This entry
         appends across all layers at once for direct pool callers and the

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sparse_kv import SparseKVCache, freeze_prefix
-from repro.distributed import NULL_CTX
+from repro.distributed import NULL_CTX, serving_sharding
 from repro.models import lm
 from repro.models.attention import DenseKVCache
 
@@ -41,7 +41,7 @@ from . import sampling
 from .cache_pool import CachePool
 from .sampling import RequestOutput, SamplingParams
 from .scheduler import Scheduler
-from .spec import SpecConfig
+from .spec import AdaptiveDraft, SpecConfig
 
 
 def retrace_count(jitted) -> int:
@@ -51,6 +51,20 @@ def retrace_count(jitted) -> int:
     (one trace per shape family); tests assert it directly.
     """
     return int(jitted._cache_size())
+
+
+def stable_trace_counts(counts: Dict[str, int],
+                        ignore: tuple = ("prefill_chunk",)) -> Dict[str, int]:
+    """The subset of :meth:`ContinuousEngine.trace_counts` that must stay
+    FLAT after warmup.
+
+    ``prefill_chunk`` legitimately accumulates one trace per distinct
+    chunk length (a new prompt length is a new shape family, not a
+    retrace), so zero-retrace assertions compare the rest.  One shared
+    utility — the engine benchmarks and the serving/spec/sharding test
+    suites all filter through here instead of re-implementing the drop.
+    """
+    return {k: v for k, v in counts.items() if k not in ignore}
 
 
 class Engine:
@@ -223,6 +237,21 @@ class ContinuousEngine:
        each slot's token under its own lane, splitting the ``[slots, 2]``
        RNG lane in place.
 
+    Decode, speculative verify and spec-off ticks are all the SAME
+    canonical **panel forward** (:func:`repro.models.lm.forward_panel_pooled`
+    at static width ``Q``): decode is the ``Q == 1`` panel (squeezed onto
+    the single-query fused dispatch for bit-identical greedy output),
+    verify the ``Q == K+1`` panel — one scan body, one per-layer fused
+    attention kernel, one shape family per panel width.
+
+    With ``mesh=`` the WHOLE serving state is mesh-sharded — slots over
+    the data axes, KV heads over the model axis
+    (``repro.distributed.serving_sharding``) — and every jitted step is
+    pinned with ``in_shardings``/``out_shardings`` so state never moves
+    between ticks.  The scheduler is untouched (slot placement is a device
+    concern, not a request concern); non-dividing dims fall back to
+    replication, and a 1-device mesh is exactly the unsharded engine.
+
     All device work reuses five compiled functions (decode / refreeze /
     release / set_lane, plus one prefill per distinct chunk length);
     admissions, evictions, refreezes and *heterogeneous sampling params*
@@ -249,10 +278,21 @@ class ContinuousEngine:
                  max_tokens: int = 0, bs: int = 0,
                  prefill_chunk: Optional[int] = None,
                  spec: Optional[SpecConfig] = None,
-                 capacity_slack: float = 1.25):
-        self.params = params
+                 capacity_slack: float = 1.25,
+                 mesh=None):
+        if mesh is not None:
+            # mesh-sharded serving: slots over the data axes, KV heads over
+            # the model axis.  The ctx also constrains activations inside
+            # the forwards so the residual stream follows the state.
+            if ctx is not NULL_CTX:
+                raise ValueError(
+                    "pass either ctx= or mesh=, not both: mesh= derives "
+                    "its own serving ShardCtx (slots over data, KV heads "
+                    "over model)")
+            ctx = serving_sharding.serving_ctx(mesh, cfg)
         self.cfg = cfg
         self.ctx = ctx
+        self.mesh = mesh
         max_tokens = max_tokens or 4 * cfg.kv_tail
         if not bs:
             # largest tail divisor <= min(128, prefill_chunk): chunks stay
@@ -271,14 +311,45 @@ class ContinuousEngine:
                                    self.pool.bs, chunk=prefill_chunk)
         bs_ = self.pool.bs
 
+        # mesh placement: every jitted step below is pinned with explicit
+        # in_shardings/out_shardings so (a) the state NEVER leaves its
+        # placement between ticks and (b) host-fed operands (token panels,
+        # masks, lane params) land directly on their shards.  Weights are
+        # replicated (serving decode streams the cache, not the weights);
+        # all placements degrade to replication when a dim doesn't divide
+        # its mesh axis, so a 1-device mesh IS the unsharded engine.
+        self.state_axes = {**self.pool.state_axes(),
+                           "sample": sampling.lane_axes()}
+        if mesh is not None:
+            st_sh = serving_sharding.state_shardings(ctx, self.state,
+                                                     self.state_axes)
+            tok_sh = serving_sharding.token_sharding(ctx, slots)
+            vec_sh = serving_sharding.vec_sharding(ctx, slots)
+            rep = serving_sharding.replicated(ctx)
+            par_sh = jax.tree_util.tree_map(lambda _: rep, params)
+            params = jax.device_put(params, par_sh)
+            self.state = jax.device_put(self.state, st_sh)
+
+            def _jit(fn, in_s, out_s):
+                return jax.jit(fn, in_shardings=in_s, out_shardings=out_s)
+        else:
+            st_sh = tok_sh = vec_sh = rep = par_sh = None
+
+            def _jit(fn, in_s, out_s):
+                return jax.jit(fn)
+        self.params = params
+
         # sampling stays on device: only [slots]-sized token + logprob
         # vectors cross the host boundary each tick, never [slots, vocab]
-        # logits.  The decode attention inside forward_decode_pooled is the
-        # fused prefix+tail kernel — one pallas_call per layer, no
-        # post-kernel tail merge to run (or time) out here.
+        # logits.  A decode tick is the Q == 1 instance of the SAME panel
+        # forward the speculative verify step uses (lm.forward_panel_pooled
+        # — the per-layer attention is one fused prefix+tail kernel), so
+        # decode and verify share one scan body and differ only in their
+        # static panel width.
         def _decode(p, st, t, m):
-            logits, st = lm.forward_decode_pooled(p, st, t, m, cfg, ctx, bs_)
-            tok, logp, lanes = sampling.sample_step(logits, st["sample"], m)
+            logits, st = lm.forward_panel_pooled(p, st, t, m, cfg, ctx, bs_)
+            tok, logp, lanes = sampling.sample_step(
+                logits[:, 0], st["sample"], m)
             return tok, logp, {**st, "sample": lanes}
 
         def _prefill(p, st, t, s, final):
@@ -295,17 +366,20 @@ class ContinuousEngine:
                 lanes["rng"], lane["rng"], s, axis=0)}
             return tok, logp, {**st, "sample": lanes}
 
-        self._decode = jax.jit(_decode)
-        self._prefill_chunk = jax.jit(_prefill)
-        self._refreeze = jax.jit(self.pool.refreeze)
-        self._release = jax.jit(self.pool.release)
+        self._decode = _jit(_decode, (par_sh, st_sh, tok_sh, vec_sh),
+                            (vec_sh, vec_sh, st_sh))
+        self._prefill_chunk = _jit(_prefill, (par_sh, st_sh, rep, rep, rep),
+                                   (rep, rep, st_sh))
+        self._refreeze = _jit(self.pool.refreeze, (st_sh,), st_sh)
+        self._release = _jit(self.pool.release, (st_sh, rep), st_sh)
         # a fresh function object, NOT sampling.set_lane itself: pjit's
         # fastpath cache is keyed on the function, so jitting the shared
         # module function would let other engines' pool geometries count
         # against this engine's trace_counts()
-        self._set_lane = jax.jit(
+        self._set_lane = _jit(
             lambda st, slot, t, k, p, key:
-                sampling.set_lane(st, slot, t, k, p, key))
+                sampling.set_lane(st, slot, t, k, p, key),
+            (st_sh, rep, rep, rep, rep, rep), st_sh)
 
         # speculative decoding: one jitted draft–verify step scores all
         # K+1 panel positions in a single forward over the pooled cache,
@@ -315,14 +389,20 @@ class ContinuousEngine:
         # bit-for-bit (the verify step is never built, never traced).
         self._spec = spec if spec is not None and spec.active else None
         self._verify = None
+        self._adaptive = None
         if self._spec is not None:
             self.drafter = self._spec.build_drafter()
             qn = self._spec.k + 1
             self.spec_hist = np.zeros(qn, np.int64)   # committed-1 per tick
+            if self._spec.adaptive:
+                # host-side per-slot draft-length controller: each slot's
+                # recent acceptance rate scales its next draft window
+                # (data only — the [slots, K+1] panel shape never changes)
+                self._adaptive = AdaptiveDraft(self._spec)
 
             def _verify(p, st, toks, m, dl):
-                logits, st = lm.forward_verify_pooled(p, st, toks, m, cfg,
-                                                      ctx, bs_)
+                logits, st = lm.forward_panel_pooled(p, st, toks, m, cfg,
+                                                     ctx, bs_)
                 tok, logp, nc, lanes = sampling.accept_step(
                     logits, toks, dl, st["sample"], m)
                 # appended qn per live slot; keep 1 + accepted = nc
@@ -330,7 +410,9 @@ class ContinuousEngine:
                 st = self.pool.rollback({**st, "sample": lanes}, roll)
                 return tok, logp, nc, st
 
-            self._verify = jax.jit(_verify)
+            self._verify = _jit(_verify,
+                                (par_sh, st_sh, tok_sh, vec_sh, vec_sh),
+                                (tok_sh, tok_sh, vec_sh, st_sh))
 
         # host mirrors (avoid a device sync per tick)
         self._tail_len = np.zeros(slots, np.int64)
@@ -392,6 +474,13 @@ class ContinuousEngine:
         if self._verify is not None:
             counts["verify"] = retrace_count(self._verify)
         return counts
+
+    @property
+    def adaptive_hist(self) -> Optional[np.ndarray]:
+        """Histogram of per-slot draft windows actually *proposed* under
+        ``SpecConfig(adaptive=True)`` (index = draft tokens a slot put up
+        for verification that tick); ``None`` when adaptive K is off."""
+        return None if self._adaptive is None else self._adaptive.hist
 
     # -- one tick -----------------------------------------------------------
     def step(self) -> List[RequestOutput]:
@@ -476,9 +565,15 @@ class ContinuousEngine:
             tokens[s, 0] = self._last_tok[s]
             mask[s] = True
             room = self.pool.tail - 1 - int(self._tail_len[s])
-            if room > 0:
+            cap = min(k, room)
+            if self._adaptive is not None:
+                # per-slot adaptive K: a slot whose drafts keep getting
+                # rejected speculates less (host-side data only — the
+                # [slots, K+1] panel shape, and hence the trace, is fixed)
+                cap = min(cap, self._adaptive.draft_len(s))
+            if cap > 0:
                 drafts = self.drafter.propose(
-                    req.prompt + req.generated, min(k, room))
+                    req.prompt + req.generated, cap)
                 dlen[s] = len(drafts)
                 tokens[s, 1:1 + len(drafts)] = drafts
         tok, logp, ncommit, self.state = self._verify(
@@ -490,6 +585,8 @@ class ContinuousEngine:
             nc = int(ncs[s])
             self._tail_len[s] += nc          # t0 + accepted stay appended
             self.spec_hist[nc - 1] += 1      # nc - 1 = accepted drafts
+            if self._adaptive is not None:
+                self._adaptive.update(s, int(dlen[s]), nc - 1)
             self._emit(s, [int(t) for t in picked[s, :nc]],
                        [float(l) for l in logps[s, :nc]], events)
         return events
@@ -513,5 +610,7 @@ class ContinuousEngine:
             self.state = self._release(self.state, jnp.int32(slot))
             self._tail_len[slot] = 0
             self._last_tok.pop(slot, None)
+            if self._adaptive is not None:
+                self._adaptive.reset(slot)   # next tenant starts fresh
         else:
             self._last_tok[slot] = req.generated[-1]

@@ -181,6 +181,18 @@ def init_lanes(slots: int) -> Dict[str, jax.Array]:
     }
 
 
+def lane_axes() -> Dict[str, tuple]:
+    """Logical-axes pytree matching :func:`init_lanes` — the lanes' own
+    sharding description (slots over the data axes; the RNG key's trailing
+    pair stays together).  Consumed by ``distributed/serving_sharding``."""
+    return {
+        "temperature": ("slots",),
+        "top_k": ("slots",),
+        "top_p": ("slots",),
+        "rng": ("slots", None),
+    }
+
+
 def request_key(params: SamplingParams) -> jax.Array:
     """The per-request RNG lane seed — deliberately slot-independent."""
     return jax.random.PRNGKey(params.seed)

@@ -25,6 +25,8 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Protocol, Sequence, runtime_checkable
 
+import numpy as np
+
 
 @runtime_checkable
 class Drafter(Protocol):
@@ -48,6 +50,17 @@ class SpecConfig:
       drafter tries, longest first.
     drafter: optional :class:`Drafter` override; ``None`` builds an
       :class:`NGramDrafter` from the n-gram bounds.
+    adaptive: per-slot adaptive draft K — each slot's *recent acceptance
+      rate* (EMA, decay ``adapt_decay``) scales its next draft window
+      within ``[adapt_min_k, k]``.  Host-side data only: the verify panel
+      stays ``[slots, k+1]`` wide whatever each slot proposes, so the
+      compiled step (and the zero-retrace bar) is untouched.  Outputs are
+      unchanged too — acceptance is per token, so proposing fewer drafts
+      never changes *which* tokens commit, only how many ride one tick.
+    adapt_decay: EMA decay of the per-slot acceptance-rate estimate
+      (weight on the past; 0 = last tick only).
+    adapt_min_k: floor of the adaptive window — a cold or unlucky slot
+      keeps probing with at least this many drafts.
     """
 
     k: int = 4
@@ -55,6 +68,9 @@ class SpecConfig:
     max_ngram: int = 3
     min_ngram: int = 1
     drafter: Optional[Drafter] = None
+    adaptive: bool = False
+    adapt_decay: float = 0.75
+    adapt_min_k: int = 1
 
     def __post_init__(self):
         if self.k < 0:
@@ -63,6 +79,12 @@ class SpecConfig:
             raise ValueError(
                 f"need 1 <= min_ngram <= max_ngram: "
                 f"{self.min_ngram}, {self.max_ngram}")
+        if not 0.0 <= self.adapt_decay < 1.0:
+            raise ValueError(
+                f"adapt_decay must be in [0, 1): {self.adapt_decay}")
+        if self.adaptive and self.k and not 1 <= self.adapt_min_k <= self.k:
+            raise ValueError(
+                f"need 1 <= adapt_min_k <= k: {self.adapt_min_k}, {self.k}")
 
     @property
     def active(self) -> bool:
@@ -73,6 +95,52 @@ class SpecConfig:
             return self.drafter
         return NGramDrafter(max_ngram=self.max_ngram,
                             min_ngram=self.min_ngram)
+
+
+class AdaptiveDraft:
+    """Per-slot adaptive draft-length controller (host-side).
+
+    Keeps an EMA of each slot's draft acceptance rate and maps it onto a
+    draft window in ``[min_k, k]``: a slot whose history keeps verifying
+    speculates at full depth, one whose drafts keep getting rejected backs
+    off to the floor (rejected drafts are cheap — a rollback — but they
+    widen the verify panel's *useful* fraction, so proposing fewer on cold
+    streams keeps accept-rate statistics honest in the spec histogram).
+    Ticks where a slot proposed nothing (no n-gram hit / no tail headroom)
+    carry no acceptance evidence and leave the estimate untouched.
+
+    Pure ints/floats per slot; the engine resets a slot's estimate when
+    its request finishes so the next tenant starts fresh (optimistic at
+    full ``k`` — the first tick probes).
+    """
+
+    def __init__(self, spec: "SpecConfig"):
+        self.k = spec.k
+        self.min_k = min(spec.adapt_min_k, spec.k) if spec.k else 0
+        self.decay = spec.adapt_decay
+        self._rate: dict = {}                 # slot -> EMA acceptance rate
+        self.hist = np.zeros(spec.k + 1, np.int64)
+
+    def draft_len(self, slot: int) -> int:
+        """The slot's current draft window: ``min_k + rate * (k - min_k)``
+        rounded; optimistic full-``k`` until the first evidence arrives."""
+        rate = self._rate.get(slot)
+        if rate is None:
+            return self.k
+        return self.min_k + int(round(rate * (self.k - self.min_k)))
+
+    def update(self, slot: int, proposed: int, accepted: int) -> None:
+        """Fold one verify tick's outcome into the slot's estimate."""
+        self.hist[max(0, min(proposed, self.k))] += 1
+        if proposed <= 0:
+            return                            # no evidence this tick
+        rate = min(max(accepted / proposed, 0.0), 1.0)
+        prev = self._rate.get(slot)
+        self._rate[slot] = rate if prev is None else \
+            self.decay * prev + (1.0 - self.decay) * rate
+
+    def reset(self, slot: int) -> None:
+        self._rate.pop(slot, None)
 
 
 class NGramDrafter:
