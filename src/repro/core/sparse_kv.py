@@ -172,18 +172,31 @@ def freeze_chunk_blocks(k: jax.Array, v: jax.Array,
     ``k/v [B, Hkv, C, D]`` with ``C % bs == 0`` -> ``(k_bitmap [B, Hkv, Cb,
     bs*D//32], k_values [B, Hkv, Cb, cap_k], v_bitmap, v_values)``.
 
-    The magnitude threshold is computed per leading batch entry (the
-    paper's layer-wide rule, applied per request slot), then each
-    ``(bs, D)`` token block is packed at the pool's fixed capacity via
-    :func:`pack_blocks` — if pruning leaves a block denser than the
-    capacity, the overflow is dropped consistently from bitmap and values.
-    Everything here is traceable with static shapes, so the serving refreeze
-    can run inside a once-compiled ``jax.jit``.
+    The magnitude threshold is computed per ``(batch entry, token block)``
+    — the paper's layer-wide rule applied per request slot at block
+    granularity — then each ``(bs, D)`` token block is packed at the
+    pool's fixed capacity via :func:`pack_blocks` — if pruning leaves a
+    block denser than the capacity, the overflow is dropped consistently
+    from bitmap and values.  Per-*block* (not per-chunk) thresholds are a
+    sharing invariant, not a tuning choice: they make a frozen block's
+    compressed bytes a pure function of the tokens up to the block's end,
+    independent of how prefill happened to be chunked — the property the
+    paged cache's content-addressed block index relies on.  Everything
+    here is traceable with static shapes, so the serving refreeze can run
+    inside a once-compiled ``jax.jit``.
     """
     b, hkv, c, d = k.shape
     assert c % bs == 0, (c, bs)
-    mask_k = jax.vmap(lambda a: prune_kv(a, k_sparsity))(k)
-    mask_v = jax.vmap(lambda a: prune_kv(a, v_sparsity))(v)
+    nb = c // bs
+
+    def block_masks(a, sparsity):
+        # [B, Hkv, C, D] -> per-(slot, block) thresholds over (Hkv, bs, D)
+        ab = a.reshape(b, hkv, nb, bs, d).transpose(0, 2, 1, 3, 4)
+        m = jax.vmap(jax.vmap(lambda x: prune_kv(x, sparsity)))(ab)
+        return m.transpose(0, 2, 1, 3, 4).reshape(b, hkv, c, d)
+
+    mask_k = block_masks(k, k_sparsity)
+    mask_v = block_masks(v, v_sparsity)
 
     def blocks(a):
         return a.reshape(b, hkv, c // bs, bs * d)

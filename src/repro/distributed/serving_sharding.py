@@ -19,6 +19,18 @@ does not divide the mesh axis — any (pool geometry x mesh) combination
 lowers, and a 1-device mesh is exactly the unsharded engine
 (token-identical, zero extra retraces).
 
+**Paged pool placement.**  The paged arena breaks the "slots over data"
+rule on purpose: any slot on any data shard may point its block-table row
+at any physical page (cross-slot sharing is the feature), so the arena's
+physical-block axis is REPLICATED over the data axes while its KV-head
+axis still shards over the model axis — each chip holds all pages but only
+its heads' bytes, the same per-chip cache footprint as the flat grid when
+``n_phys == slots * max_blocks``.  The block table shards with the slots
+it indexes; the refcount vector is replicated (its scatter-adds are
+computed identically on every shard, so no reduction is needed).  All of
+this is described by ``CachePool.state_axes`` and flows through the same
+:func:`tree_shardings` machinery — nothing below is paged-aware.
+
 Weights are *replicated* by the engine (serving decode is memory-bound on
 the cache, not the weights): ``ContinuousEngine(mesh=...)`` device_puts
 its params onto a fully-replicated placement and pins them that way in

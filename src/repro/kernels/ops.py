@@ -241,3 +241,78 @@ def sparse_decode_attention(q: jax.Array,
                 jnp.asarray(prefix_len)) <= 0, (b,))
             o = jnp.where(empty_p[:, None, None, None], 0.0, o)
     return o.reshape(b, hq, d).astype(q.dtype)
+
+
+def sparse_decode_attention_paged(q: jax.Array,
+                                  k_bitmap: jax.Array, k_values: jax.Array,
+                                  v_bitmap: jax.Array, v_values: jax.Array,
+                                  table: jax.Array,
+                                  hkv: int,
+                                  sm_scale: float,
+                                  bs: int,
+                                  k_tail: jax.Array,
+                                  v_tail: jax.Array,
+                                  tail_len: Optional[jax.Array] = None,
+                                  prefix_len: Optional[jax.Array] = None
+                                  ) -> jax.Array:
+    """Paged twin of :func:`sparse_decode_attention`: the compressed prefix
+    lives ONCE in a pool-global arena and each slot reaches it through its
+    block-table row.
+
+    q as in :func:`sparse_decode_attention` (``[B, Hq, D]`` tick or
+    ``[B, Q, Hq, D]`` panel); ``k_bitmap`` uint32 ``[n_phys, Hkv, w]`` /
+    ``k_values [n_phys, Hkv, Ck]`` (same for v) the shared arena; ``table``
+    int32 ``[B, Sb]`` physical block ids (entries past
+    ``prefix_len // bs`` are dead but must stay in range).  Tail ring and
+    length semantics are identical to the flat entry — paging touches only
+    where prefix blocks are FETCHED from, never what they mean.
+
+    XLA backend: gather each slot's logical prefix out of the arena and
+    reuse the flat reference semantics verbatim (the defining oracle).
+    Pallas backend: the fused kernel takes the table as a scalar-prefetch
+    operand and its prefix phase loads block ``table[slot, i]`` — the
+    shared blocks are streamed per slot but STORED once, which is where
+    the memory-bound decode wins.
+    """
+    interp = _pallas()
+    d = q.shape[-1]
+    if interp is None:
+        k_sp = ref.gather_paged_prefix(table, k_bitmap, k_values, bs, d)
+        v_sp = ref.gather_paged_prefix(table, v_bitmap, v_values, bs, d)
+        return sparse_decode_attention(q, k_sp, v_sp, hkv, sm_scale,
+                                       k_tail, v_tail, tail_len, prefix_len)
+    if q.ndim == 4 and q.shape[1] == 1:
+        # Q == 1 panel IS a decode tick (see sparse_decode_attention)
+        o = sparse_decode_attention_paged(
+            q[:, 0], k_bitmap, k_values, v_bitmap, v_values, table, hkv,
+            sm_scale, bs, k_tail, v_tail, tail_len, prefix_len)
+        return o[:, None]
+    panel = q.ndim == 4
+    if panel:
+        b, qn, hq, _ = q.shape
+        qg = (q.reshape(b, qn, hkv, hq // hkv, d).transpose(0, 2, 1, 3, 4)
+              .reshape(b, hkv, qn * (hq // hkv), d))
+    else:
+        b, hq, _ = q.shape
+        qn = 1
+        qg = q.reshape(b, hkv, hq // hkv, d)
+    g = hq // hkv
+    n_blocks = None
+    if prefix_len is not None:
+        n_blocks = jnp.broadcast_to(
+            jnp.asarray(prefix_len, jnp.int32) // bs, (b,))
+    t = k_tail.shape[2]
+    tl = jnp.broadcast_to(jnp.asarray(
+        tail_len if tail_len is not None else t, jnp.int32), (b,))
+    pad = -t % bs
+    if pad:
+        k_tail = jnp.pad(k_tail, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_tail = jnp.pad(v_tail, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    o = sparse_decode_attention_fused_pallas(
+        qg, k_bitmap, k_values, v_bitmap, v_values, k_tail, v_tail, bs=bs,
+        sm_scale=sm_scale, interpret=interp, n_blocks=n_blocks,
+        tail_len=tl, group=g, block_table=table)
+    if panel:
+        return (o.reshape(b, hkv, qn, g, d).transpose(0, 2, 1, 3, 4)
+                .reshape(b, qn, hq, d).astype(q.dtype))
+    return o.reshape(b, hq, d).astype(q.dtype)

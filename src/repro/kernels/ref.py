@@ -63,6 +63,30 @@ def sparse_matmul_int8_ref(x: jax.Array, sw: BlockSparseWeight,
     return out[:, :n].astype(out_dtype)
 
 
+def gather_paged_prefix(table: jax.Array, bitmap: jax.Array,
+                        values: jax.Array, bs: int, d: int
+                        ) -> BlockSparseWeight:
+    """Paged arena + per-slot block table -> the flat pooled-prefix view.
+
+    ``bitmap [n_phys, Hkv, w]`` / ``values [n_phys, Hkv, C]`` hold every
+    compressed block ONCE; ``table [B, Sb]`` int32 maps each slot's
+    logical block ``i`` to its physical id.  The gather materializes each
+    slot's logical prefix (``[B, Hkv, Sb, X]``) and wraps it in the
+    structured :class:`BlockSparseWeight` view the flat reference
+    semantics consume — this IS the oracle for the paged kernel's index
+    indirection: paged attention == gather-then-flat-attention.  Table
+    entries past a slot's valid count select arbitrary (live or dead)
+    blocks; callers mask them with ``prefix_len`` exactly as on the flat
+    path.
+    """
+    bm = jnp.take(bitmap, table, axis=0).transpose(0, 2, 1, 3)
+    vl = jnp.take(values, table, axis=0).transpose(0, 2, 1, 3)
+    sb = table.shape[1]
+    return BlockSparseWeight(
+        bitmap=bm[:, :, :, None, :], values=vl[:, :, :, None, :],
+        scale=None, shape=(sb * bs, d), block=(bs, d))
+
+
 def _merge_attn(o1, lse1, o2, lse2):
     """Combine two attention partials via their log-sum-exps."""
     m = jnp.maximum(lse1, lse2)

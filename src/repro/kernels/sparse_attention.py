@@ -223,6 +223,15 @@ def _fused_kernel(nb_ref, tl_ref, q_ref, kbm_ref, kval_ref, vbm_ref,
         o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
 
 
+def _fused_kernel_paged(tbl_ref, *refs, **kw):
+    """Paged wrapper: the block table rides in as a scalar-prefetch operand
+    consumed ONLY by the index maps (one level of indirection on the
+    prefix phase's block fetch); the kernel body is byte-for-byte the flat
+    ``_fused_kernel``."""
+    del tbl_ref
+    _fused_kernel(*refs, **kw)
+
+
 @partial(jax.jit, static_argnames=("bs", "sm_scale", "interpret", "group"))
 def sparse_decode_attention_fused_pallas(
         q: jax.Array,
@@ -232,7 +241,8 @@ def sparse_decode_attention_fused_pallas(
         bs: int, sm_scale: float, interpret: bool = True,
         n_blocks: jax.Array | None = None,
         tail_len: jax.Array | None = None,
-        group: int | None = None) -> jax.Array:
+        group: int | None = None,
+        block_table: jax.Array | None = None) -> jax.Array:
     """Fused prefix+tail flash-decode: final attention in ONE pallas_call.
 
     q:             [B, Hkv, Q*G, D] query panel, rows ordered query-major
@@ -251,13 +261,34 @@ def sparse_decode_attention_fused_pallas(
                    0; query ``j`` sees ``tail_len + j`` (intra-window
                    causal — the verify step appends one K/V per panel
                    query).  None means the whole ring is valid to query 0.
+    block_table:   optional int32 [B, Sb] — PAGED prefix: the bitmap/values
+                   operands are then a pool-global arena
+                   ``[n_phys, Hkv, X]`` and the grid's prefix phase loads
+                   physical block ``block_table[slot, i]`` instead of slot
+                   block ``(slot, i)``.  The table rides in as a
+                   scalar-prefetch operand so the index maps (which run
+                   ahead of the kernel body to schedule the block DMAs)
+                   can read it; every entry must address real storage
+                   (``< n_phys``) even past ``n_blocks`` — dead fetches
+                   are gated off the softmax by the same ``n_blocks``
+                   check as the flat path, so they are never *read*.
     Returns out [B, Hkv, Q*G, D] f32 — softmax-normalized over the union
     of valid prefix and tail positions (all-empty slots return zeros).
     """
     b, hkv, qg, d = q.shape
     g = group or qg
     assert qg % g == 0, (qg, g)
-    sb = k_bitmap.shape[2]
+    paged = block_table is not None
+    if paged:
+        assert k_bitmap.ndim == 3, k_bitmap.shape   # [n_phys, Hkv, X] arena
+        sb = block_table.shape[1]
+        # rank-4 views so the block shapes match the flat layout's
+        # (1, 1, 1, X) fetches: physical block axis leads, Hkv second
+        k_bitmap, k_values, v_bitmap, v_values = (
+            a[:, :, None, :] for a in (k_bitmap, k_values,
+                                       v_bitmap, v_values))
+    else:
+        sb = k_bitmap.shape[2]
     tp = k_tail.shape[2]
     assert sb >= 1 and tp >= bs and tp % bs == 0, (sb, tp, bs)
     tb = tp // bs
@@ -269,6 +300,53 @@ def sparse_decode_attention_fused_pallas(
         tail_len = jnp.full((b,), tp, jnp.int32)
     nb2 = n_blocks.astype(jnp.int32).reshape(b, 1)   # 2-D for SMEM
     tl2 = tail_len.astype(jnp.int32).reshape(b, 1)
+
+    common = dict(
+        out_shape=jax.ShapeDtypeStruct((b, hkv, qg, d), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )
+    scratch = [
+        pltpu.VMEM((qg, d), jnp.float32),
+        pltpu.VMEM((qg, 128), jnp.float32),
+        pltpu.VMEM((qg, 128), jnp.float32),
+    ]
+
+    if paged:
+        # THE paged change: the prefix phase's block index goes through the
+        # table.  Clamped on tail-phase steps like the flat path (the
+        # fetched block is ignored there — the pl.when gates never fire).
+        pre = lambda bb, h, s, tbl: (tbl[bb, jnp.minimum(s, sb - 1)],
+                                     h, 0, 0)
+        tail = lambda bb, h, s, tbl: (bb, h, jnp.maximum(s - sb, 0), 0)
+        smem = lambda bb, h, s, tbl: (bb, 0)
+        bcast = lambda bb, h, s, tbl: (bb, h, 0, 0)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, hkv, sb + tb),
+            in_specs=[
+                pl.BlockSpec((1, 1), smem, memory_space=pltpu.SMEM),
+                pl.BlockSpec((1, 1), smem, memory_space=pltpu.SMEM),
+                pl.BlockSpec((1, 1, qg, d), bcast),
+                pl.BlockSpec((1, 1, 1, words), pre),
+                pl.BlockSpec((1, 1, 1, ck), pre),
+                pl.BlockSpec((1, 1, 1, words), pre),
+                pl.BlockSpec((1, 1, 1, cv), pre),
+                pl.BlockSpec((1, 1, bs, d), tail),
+                pl.BlockSpec((1, 1, bs, d), tail),
+            ],
+            out_specs=pl.BlockSpec((1, 1, qg, d), bcast),
+            scratch_shapes=scratch,
+        )
+        return pl.pallas_call(
+            partial(_fused_kernel_paged, bs=bs, d=d, sm_scale=sm_scale,
+                    sb=sb, g=g),
+            grid_spec=grid_spec,
+            name="sparse_decode_attention_fused_paged",
+            **common,
+        )(block_table.astype(jnp.int32), nb2, tl2, q,
+          k_bitmap, k_values, v_bitmap, v_values, k_tail, v_tail)
 
     # index maps clamp into range on the other phase's steps (the fetched
     # block is ignored there — the pl.when gates never fire)
@@ -292,15 +370,8 @@ def sparse_decode_attention_fused_pallas(
             pl.BlockSpec((1, 1, bs, d), tail),
         ],
         out_specs=pl.BlockSpec((1, 1, qg, d), lambda bb, h, s: (bb, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, hkv, qg, d), jnp.float32),
-        scratch_shapes=[
-            pltpu.VMEM((qg, d), jnp.float32),
-            pltpu.VMEM((qg, 128), jnp.float32),
-            pltpu.VMEM((qg, 128), jnp.float32),
-        ],
-        compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
+        scratch_shapes=scratch,
         name="sparse_decode_attention_fused",
+        **common,
     )(nb2, tl2, q, k_bitmap, k_values, v_bitmap, v_values, k_tail, v_tail)
     return out

@@ -70,6 +70,17 @@ def main(argv=None):
     ap.add_argument("--spec-adaptive", action="store_true",
                     help="with --spec-k: per-slot adaptive draft windows "
                          "(each slot's acceptance rate scales its K)")
+    ap.add_argument("--paged", action="store_true",
+                    help="stream mode: paged shared-prefix pool — "
+                         "compressed blocks live once in a pool-global "
+                         "arena behind per-slot block tables; prompts "
+                         "sharing a block-aligned prefix store and "
+                         "prefill it once (needs --prefill-chunk for "
+                         "prefix-cache hits)")
+    ap.add_argument("--phys-blocks", type=int, default=0,
+                    help="with --paged: physical blocks in the shared "
+                         "arena (default: slots * max_blocks — the flat "
+                         "pool's footprint)")
     ap.add_argument("--mesh", default="",
                     help="stream mode: serve the pooled engine on a "
                          "DPxTP device mesh, e.g. --mesh 4,2 — slots "
@@ -168,7 +179,11 @@ def main(argv=None):
         prefill_chunk=args.prefill_chunk or None,
         spec=SpecConfig(k=args.spec_k, adaptive=args.spec_adaptive)
         if args.spec_k else None,
-        mesh=mesh)
+        mesh=mesh, paged=args.paged, phys_blocks=args.phys_blocks)
+    if args.paged:
+        print(f"[serve] paged pool: {eng.pool.n_phys} physical blocks of "
+              f"{eng.pool.bs} tokens behind {slots}x{eng.pool.max_blocks} "
+              f"block tables")
     if mesh is not None:
         from repro.distributed import serving_sharding
         place = serving_sharding.describe(eng.ctx, eng.state, eng.state_axes)
@@ -196,6 +211,9 @@ def main(argv=None):
     print(f"[serve] ttft p50={np.median(ttfts)*1e3:.0f}ms "
           f"max={max(ttfts)*1e3:.0f}ms; e2e p50={np.median(lats)*1e3:.0f}ms; "
           f"finish: { {o.finish_reason for o in out.values()} }")
+    if args.paged:
+        print(f"[serve] paged: prefix trie holds {len(eng._trie)} blocks; "
+              f"{eng._alloc.free_blocks()}/{eng.pool.n_phys} reclaimable")
     print("[serve] sample:", list(out[rids[0]].token_ids[:16]))
     lps = [lp for o in out.values() for lp in o.logprobs if lp is not None]
     print(f"[serve] mean chosen-token logprob: {np.mean(lps):.3f} "

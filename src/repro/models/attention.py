@@ -184,7 +184,8 @@ def attn_decode(p, x_t: jax.Array, cache, cfg, ctx,
 
 def pooled_attn_panel(p, x: jax.Array, kv: Dict[str, jax.Array], cfg,
                       ctx, positions: jax.Array, prefix_blocks: jax.Array,
-                      tail_len: jax.Array, slot_mask: jax.Array, bs: int
+                      tail_len: jax.Array, slot_mask: jax.Array, bs: int,
+                      table: Optional[jax.Array] = None
                       ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """THE pooled serving attention: one ``[B, Qn]`` query panel per layer.
 
@@ -208,6 +209,12 @@ def pooled_attn_panel(p, x: jax.Array, kv: Dict[str, jax.Array], cfg,
     bit-identical to the pre-unification ``pooled_attn_decode`` path.
     Inactive slots (``slot_mask`` False) write nothing and pass their
     cache through bit-identical.
+
+    ``table`` (int32 ``[B, Sb]``, paged pool only) switches the frozen
+    prefix to the pool-global arena layout: ``kv``'s compressed leaves are
+    then ``[n_phys, Hkv, X]`` shared storage and each slot's blocks are
+    reached through its table row — same math, one indirection on the
+    fetch.  The dense tail stays per-slot either way.
     """
     b, qn, _ = x.shape
     hq, hkv, hd = cfg.padded_heads, cfg.n_kv, cfg.hd
@@ -225,18 +232,25 @@ def pooled_attn_panel(p, x: jax.Array, kv: Dict[str, jax.Array], cfg,
                                tail_len, n_valid)
     # panel query 0 sees its own token; each later query j sees j more
     t_att = tail_len + slot_mask.astype(jnp.int32)
-    k_sp = pooled_view(kv["k_bitmap"], kv["k_values"], bs, hd)
-    v_sp = pooled_view(kv["v_bitmap"], kv["v_values"], bs, hd)
-    o = ops.sparse_decode_attention(q, k_sp, v_sp, hkv, sm,
-                                    k_tail, v_tail, t_att,
-                                    prefix_len=prefix_blocks * bs)
+    if table is not None:
+        o = ops.sparse_decode_attention_paged(
+            q, kv["k_bitmap"], kv["k_values"], kv["v_bitmap"],
+            kv["v_values"], table, hkv, sm, bs, k_tail, v_tail, t_att,
+            prefix_len=prefix_blocks * bs)
+    else:
+        k_sp = pooled_view(kv["k_bitmap"], kv["k_values"], bs, hd)
+        v_sp = pooled_view(kv["v_bitmap"], kv["v_values"], bs, hd)
+        o = ops.sparse_decode_attention(q, k_sp, v_sp, hkv, sm,
+                                        k_tail, v_tail, t_att,
+                                        prefix_len=prefix_blocks * bs)
     out = ops.linear(o.reshape(b, qn, hq * hd).astype(x.dtype), p["wo"])
     return out, {**kv, "k_tail": k_tail, "v_tail": v_tail}
 
 
 def pooled_attn_prefill_chunk(p, x: jax.Array, kv: Dict[str, jax.Array],
                               cfg, ctx, positions: jax.Array,
-                              ctx_len: jax.Array, bs: int
+                              ctx_len: jax.Array, bs: int,
+                              table_row: Optional[jax.Array] = None
                               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Chunked-prefill attention for ONE slot of the pooled cache.
 
@@ -247,6 +261,11 @@ def pooled_attn_prefill_chunk(p, x: jax.Array, kv: Dict[str, jax.Array],
     ``ctx_len`` scalar int32 — valid prefix tokens.  Returns
     ``(out [1, C, d], k_chunk, v_chunk [1, Hkv, C, hd] post-RoPE)`` so the
     caller can freeze the chunk into the pool.
+
+    ``table_row`` (int32 ``[Sb]``, paged pool only): ``kv``'s compressed
+    leaves are the shared ``[n_phys, Hkv, X]`` arena and the slot's frozen
+    prefix is gathered through its block-table row before decompression —
+    a prefix-cache hit means these are blocks some OTHER request froze.
     """
     b, c, _ = x.shape
     hq, hkv, hd = cfg.padded_heads, cfg.n_kv, cfg.hd
@@ -260,8 +279,17 @@ def pooled_attn_prefill_chunk(p, x: jax.Array, kv: Dict[str, jax.Array],
     k = k.transpose(0, 2, 1, 3)                              # [1,Hkv,C,hd]
     v = v.transpose(0, 2, 1, 3)
 
-    k_ctx = unpack(pooled_view(kv["k_bitmap"], kv["k_values"], bs, hd))
-    v_ctx = unpack(pooled_view(kv["v_bitmap"], kv["v_values"], bs, hd))
+    if table_row is not None:
+        # gather the slot's logical blocks out of the shared arena, then
+        # decompress exactly as the flat path would
+        view = lambda bm, vl: pooled_view(
+            bm[table_row].transpose(1, 0, 2)[None],
+            vl[table_row].transpose(1, 0, 2)[None], bs, hd)
+        k_ctx = unpack(view(kv["k_bitmap"], kv["k_values"]))
+        v_ctx = unpack(view(kv["v_bitmap"], kv["v_values"]))
+    else:
+        k_ctx = unpack(pooled_view(kv["k_bitmap"], kv["k_values"], bs, hd))
+        v_ctx = unpack(pooled_view(kv["v_bitmap"], kv["v_values"], bs, hd))
     s_ctx = k_ctx.shape[2]
     kv_valid = jnp.concatenate(
         [jnp.arange(s_ctx) < ctx_len, jnp.ones((c,), bool)])[None, :]

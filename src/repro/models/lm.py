@@ -455,6 +455,9 @@ def forward_panel_pooled(params, state, tokens: jax.Array,
     positions = state["pos"][:, None] + jnp.arange(qn)[None, :]
     prefix_blocks = state["prefix_blocks"]
     tail_len = state["tail_len"]
+    # paged pool: the block table is pool-level state threaded to every
+    # layer's attention (the arena leaves themselves ride the scan)
+    table = state.get("table")
 
     def body(xc, xs):
         pp, cc = xs
@@ -464,7 +467,7 @@ def forward_panel_pooled(params, state, tokens: jax.Array,
             h = rms_norm(xc, pj["ln1"])
             h, new_kv = pooled_attn_panel(
                 pj["mixer"], h, cj["kv"], cfg, ctx, positions,
-                prefix_blocks, tail_len, slot_mask, bs)
+                prefix_blocks, tail_len, slot_mask, bs, table=table)
             xc = xc + h
             xc = xc + _pooled_ffn(pj, kind, rms_norm(xc, pj["ln2"]),
                                   cfg, ctx)
@@ -482,8 +485,13 @@ def forward_panel_pooled(params, state, tokens: jax.Array,
     return logits, new_state
 
 
+_ARENA_KEYS = ("k_bitmap", "k_values", "v_bitmap", "v_values")
+
+
 def forward_prefill_chunk(params, state, tokens: jax.Array, slot: jax.Array,
-                          cfg, ctx, bs: int) -> Tuple[jax.Array, Any]:
+                          cfg, ctx, bs: int,
+                          new_ids: Optional[jax.Array] = None
+                          ) -> Tuple[jax.Array, Any]:
     """Prefill one prompt chunk for a single slot of the pooled cache.
 
     tokens [1, C]; slot scalar int32.  The chunk attends to the slot's
@@ -496,18 +504,41 @@ def forward_prefill_chunk(params, state, tokens: jax.Array, slot: jax.Array,
     Returns (last-token logits [1, V], new state) — the engine samples the
     request's first token from these logits under the slot's lane; unknown
     ``state`` keys pass through untouched.
+
+    Paged pool (``state`` carries a block table): the slot attends to its
+    prefix THROUGH its table row (blocks a cache hit pointed at were
+    frozen by other requests), and the chunk's ``C // bs`` new blocks are
+    frozen into FRESH arena pages ``new_ids`` (int32 ``[C // bs]``,
+    host-allocated) appended to the table row — never into shared storage,
+    which is the copy-on-write guarantee.
     """
     c = tokens.shape[1]
     nb_new, rem = c // bs, c % bs
     kinds = _attn_kinds(cfg)
+    paged = "table" in state
     x = embed_apply(params["embed"], tokens, cfg)            # [1, C, d]
     start = jnp.take(state["pos"], slot)
     pb0 = jnp.take(state["prefix_blocks"], slot)
     positions = start + jnp.arange(c)
     ctx_len = pb0 * bs
-    slot_layers = jax.tree_util.tree_map(
-        lambda a: lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
-        state["layers"])
+    if paged:
+        assert new_ids is not None or nb_new == 0, \
+            "paged prefill needs fresh arena ids for its full blocks"
+        # arena leaves are pool-global — only the per-slot tails slice
+        slot_layers = {
+            name: {"kv": {
+                k: (a if k in _ARENA_KEYS
+                    else lax.dynamic_slice_in_dim(a, slot, 1, axis=1))
+                for k, a in leaf["kv"].items()}}
+            for name, leaf in state["layers"].items()}
+        sb = state["table"].shape[1]
+        table_row = lax.dynamic_slice(
+            state["table"], (slot, jnp.int32(0)), (1, sb))[0]
+    else:
+        slot_layers = jax.tree_util.tree_map(
+            lambda a: lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
+            state["layers"])
+        table_row = None
 
     def body(xc, xs):
         pp, cc = xs
@@ -516,7 +547,8 @@ def forward_prefill_chunk(params, state, tokens: jax.Array, slot: jax.Array,
             pj, cj = pp[f"l{j}"], cc[f"l{j}"]
             h = rms_norm(xc, pj["ln1"])
             h, k_c, v_c = pooled_attn_prefill_chunk(
-                pj["mixer"], h, cj["kv"], cfg, ctx, positions, ctx_len, bs)
+                pj["mixer"], h, cj["kv"], cfg, ctx, positions, ctx_len, bs,
+                table_row=table_row)
             xc = xc + h
             h2 = rms_norm(xc, pj["ln2"])
             if kind[1] == "moe":
@@ -532,6 +564,8 @@ def forward_prefill_chunk(params, state, tokens: jax.Array, slot: jax.Array,
     logits = logits_fn(params, hidden[:, -1:], cfg, ctx)[:, 0]
 
     from repro.core.sparse_kv import freeze_chunk_blocks
+    if paged and nb_new:
+        new_ids = jnp.asarray(new_ids, jnp.int32)            # [nb_new]
     new_layers = {}
     for name, leaf in state["layers"].items():
         kv = dict(leaf["kv"])
@@ -545,9 +579,15 @@ def forward_prefill_chunk(params, state, tokens: jax.Array, slot: jax.Array,
                 cfg.kv_k_sparsity, cfg.kv_v_sparsity, bs, cap_k, cap_v)
             for key, upd in (("k_bitmap", k_bm), ("k_values", k_vl),
                              ("v_bitmap", v_bm), ("v_values", v_vl)):
-                kv[key] = lax.dynamic_update_slice(
-                    kv[key], upd[:, None].astype(kv[key].dtype),
-                    (0, slot, 0, pb0, 0))
+                if paged:
+                    # [P, Hkv, nb, X] -> [P, nb, Hkv, X] rows into the
+                    # fresh arena pages (never shared storage: CoW)
+                    kv[key] = kv[key].at[:, new_ids].set(
+                        upd.transpose(0, 2, 1, 3).astype(kv[key].dtype))
+                else:
+                    kv[key] = lax.dynamic_update_slice(
+                        kv[key], upd[:, None].astype(kv[key].dtype),
+                        (0, slot, 0, pb0, 0))
         if rem:
             for key, src in (("k_tail", ck), ("v_tail", cv)):
                 kv[key] = lax.dynamic_update_slice(
@@ -561,6 +601,10 @@ def forward_prefill_chunk(params, state, tokens: jax.Array, slot: jax.Array,
                  "prefix_blocks":
                      state["prefix_blocks"].at[slot].set(pb0 + nb_new),
                  "tail_len": state["tail_len"].at[slot].set(rem)}
+    if paged and nb_new:
+        new_state["table"] = lax.dynamic_update_slice(
+            state["table"], new_ids[None], (slot, pb0))
+        new_state["refcount"] = state["refcount"].at[new_ids].add(1)
     return logits, new_state
 
 

@@ -1,6 +1,6 @@
 from .engine import (Engine, ContinuousEngine, retrace_count,
                      stable_trace_counts)
-from .cache_pool import CachePool
+from .cache_pool import BlockAllocator, CachePool
 from .sampling import RequestMetrics, RequestOutput, SamplingParams
-from .scheduler import Scheduler, Request
+from .scheduler import PrefixTrie, Request, Scheduler, block_hashes
 from .spec import AdaptiveDraft, Drafter, NGramDrafter, SpecConfig

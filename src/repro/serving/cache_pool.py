@@ -26,11 +26,28 @@ model state" design needs to survive heavy multi-tenant traffic.
 Both dense and sparse KV live behind this one interface: a dense pool is
 just ``k_sparsity = v_sparsity = 0`` (full per-block capacity), for which
 compression is a bit-exact round trip.
+
+**Paged mode** (``paged=True``) generalizes the per-slot block grid into a
+pool-global arena: compressed blocks live once in ``[P, n_phys, Hkv, X]``
+storage, each slot's prefix is a row of the ``[slots, max_blocks]`` int32
+**block table**, and a ``[n_phys]`` **refcount** vector tracks sharing —
+N requests whose prompts share a prefix point their table rows at the SAME
+physical blocks (stored once, attended over once).  Frozen blocks are
+immutable; the dense tail ring is each slot's private working copy, and
+refreeze/prefill always append FRESH physical ids past the shared prefix —
+copy-on-write at the divergence block by construction, never a write into
+shared storage.  The table and refcount are data, so every transition
+below stays pure over static shapes and decode still compiles exactly once
+per pool geometry.  The host-side id lifecycle (free list, LRU reuse of
+refcount-0 cached blocks, hash bookkeeping) lives in
+:class:`BlockAllocator`; the device transitions only consume the id
+vectors it hands out.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -56,10 +73,13 @@ class CachePool:
     tail: int                # dense-tail ring size (tokens)
     cap_k: int               # packed K values per block (static)
     cap_v: int
+    paged: bool = False      # pool-global arena + per-slot block table
+    n_phys: int = 0          # physical blocks in the paged arena
 
     @classmethod
     def build(cls, cfg, slots: int, max_tokens: int,
-              bs: int = 0, capacity_slack: float = 1.25) -> "CachePool":
+              bs: int = 0, capacity_slack: float = 1.25,
+              paged: bool = False, n_phys: int = 0) -> "CachePool":
         """Size a pool for ``slots`` concurrent requests of up to
         ``max_tokens`` context each.
 
@@ -67,10 +87,30 @@ class CachePool:
         size, padded by ``capacity_slack`` and rounded to the lane size —
         headroom for the unevenness of the paper's layer-wide magnitude
         rule.  Zero sparsity always gets full capacity (exact round trip).
+
+        ``paged=True`` stores compressed blocks in a shared physical arena
+        of ``n_phys`` blocks (default ``slots * max_blocks`` — the same
+        prefix bytes as the flat pool) indexed through per-slot block
+        tables, so requests sharing a prefix store it once.
+
+        Raises :class:`ValueError` for geometries the pool cannot serve:
+        architecture families with state the pooled path would drop
+        (cross-attention / frontend embeddings / recurrent layers), and a
+        ``kv_tail`` that is not a whole number of blocks (refreeze folds
+        the tail in whole blocks).
         """
-        lm._attn_kinds(cfg)   # reject ssm/hybrid/encdec/frontend families
+        try:
+            lm._attn_kinds(cfg)   # ssm/hybrid/encdec/frontend families
+        except AssertionError as e:
+            raise ValueError(
+                f"CachePool cannot serve arch {cfg.name!r} "
+                f"(family {cfg.family!r}): {e}") from None
         bs = bs or min(128, cfg.kv_tail)
-        assert cfg.kv_tail % bs == 0, (cfg.kv_tail, bs)
+        if cfg.kv_tail % bs != 0:
+            raise ValueError(
+                f"kv_tail={cfg.kv_tail} is not a multiple of the block "
+                f"size bs={bs}: refreeze folds the dense tail into whole "
+                f"(bs,)-token compressed blocks")
         l = bs * cfg.hd
 
         def cap(sparsity: float) -> int:
@@ -80,9 +120,12 @@ class CachePool:
             return min(_ceil_to(int(round(density * l * capacity_slack)),
                                 LANE), l)
         max_blocks = max(-(-int(max_tokens) // bs), 1)
+        if paged:
+            n_phys = n_phys or slots * max_blocks
         return cls(cfg=cfg, slots=slots, max_blocks=max_blocks, bs=bs,
                    tail=cfg.kv_tail, cap_k=cap(cfg.kv_k_sparsity),
-                   cap_v=cap(cfg.kv_v_sparsity))
+                   cap_v=cap(cfg.kv_v_sparsity), paged=paged,
+                   n_phys=n_phys if paged else 0)
 
     # -- geometry -----------------------------------------------------------
     @property
@@ -103,7 +146,14 @@ class CachePool:
     # -- state --------------------------------------------------------------
     def init_state(self) -> Dict[str, Any]:
         """Zeroed pool pytree.  Leaves under ``layers`` carry a leading
-        period axis so the model's ``lax.scan`` slices them per layer."""
+        period axis so the model's ``lax.scan`` slices them per layer.
+
+        Flat pool: compressed leaves are per-slot grids
+        ``[P, slots, Hkv, max_blocks, X]``.  Paged pool: compressed leaves
+        are the shared arena ``[P, n_phys, Hkv, X]`` plus the pool-level
+        ``table [slots, max_blocks]`` / ``refcount [n_phys]`` int32
+        vectors; the dense tails stay per-slot either way (the tail is
+        private working state, never shared)."""
         cfg = self.cfg
         p = lm.period_len(cfg)
         n_periods = cfg.n_layers // p
@@ -111,22 +161,42 @@ class CachePool:
         b, sb, w = self.slots, self.max_blocks, self.bs * hd // 32
 
         def kv_leaf():
+            if self.paged:
+                n = self.n_phys
+                comp = {
+                    "k_bitmap": jnp.zeros((n_periods, n, hkv, w), jnp.uint32),
+                    "k_values": jnp.zeros((n_periods, n, hkv, self.cap_k),
+                                          dt),
+                    "v_bitmap": jnp.zeros((n_periods, n, hkv, w), jnp.uint32),
+                    "v_values": jnp.zeros((n_periods, n, hkv, self.cap_v),
+                                          dt),
+                }
+            else:
+                comp = {
+                    "k_bitmap": jnp.zeros((n_periods, b, hkv, sb, w),
+                                          jnp.uint32),
+                    "k_values": jnp.zeros((n_periods, b, hkv, sb, self.cap_k),
+                                          dt),
+                    "v_bitmap": jnp.zeros((n_periods, b, hkv, sb, w),
+                                          jnp.uint32),
+                    "v_values": jnp.zeros((n_periods, b, hkv, sb, self.cap_v),
+                                          dt),
+                }
             return {
-                "k_bitmap": jnp.zeros((n_periods, b, hkv, sb, w), jnp.uint32),
-                "k_values": jnp.zeros((n_periods, b, hkv, sb, self.cap_k),
-                                      dt),
-                "v_bitmap": jnp.zeros((n_periods, b, hkv, sb, w), jnp.uint32),
-                "v_values": jnp.zeros((n_periods, b, hkv, sb, self.cap_v),
-                                      dt),
+                **comp,
                 "k_tail": jnp.zeros((n_periods, b, hkv, self.tail, hd), dt),
                 "v_tail": jnp.zeros((n_periods, b, hkv, self.tail, hd), dt),
             }
-        return {
+        state = {
             "pos": jnp.zeros((b,), jnp.int32),
             "prefix_blocks": jnp.zeros((b,), jnp.int32),
             "tail_len": jnp.zeros((b,), jnp.int32),
             "layers": {f"l{j}": {"kv": kv_leaf()} for j in range(p)},
         }
+        if self.paged:
+            state["table"] = jnp.zeros((b, sb), jnp.int32)
+            state["refcount"] = jnp.zeros((self.n_phys,), jnp.int32)
+        return state
 
     def state_axes(self) -> Dict[str, Any]:
         """Logical-axes pytree matching :meth:`init_state` leaf for leaf —
@@ -134,26 +204,42 @@ class CachePool:
         (``distributed/serving_sharding`` turns it into NamedShardings).
 
         Slot occupancy vectors are ``[slots]`` -> the slot axis; every
-        layer leaf is ``[P, slots, Hkv, ...]`` -> slots over the data
+        flat layer leaf is ``[P, slots, Hkv, ...]`` -> slots over the data
         axes, KV heads over the model axis, block/ring/packed dims
         unsharded (block storage is per-(slot, head) and refreeze's
         scatter is per-slot — no cross-shard writes ever happen).
+
+        Paged: the block table shards with the slots it indexes; the
+        arena's physical-block axis is REPLICATED over the data axes (any
+        slot on any data shard may point at any physical block — that
+        cross-slot reach is the whole point of sharing) while its KV-head
+        axis still shards over the model axis, splitting the arena bytes
+        the same way the flat grid split; the refcount vector is
+        replicated (scatter-adds into it are identical on every shard).
         """
         p = lm.period_len(self.cfg)
 
         def kv_axes():
-            row = (None, "slots", "kv_heads", None, None)
-            return {k: row for k in ("k_bitmap", "k_values", "v_bitmap",
-                                     "v_values", "k_tail", "v_tail")}
-        return {
+            comp = ((None, None, "kv_heads", None) if self.paged
+                    else (None, "slots", "kv_heads", None, None))
+            tail = (None, "slots", "kv_heads", None, None)
+            return {**{k: comp for k in ("k_bitmap", "k_values",
+                                         "v_bitmap", "v_values")},
+                    "k_tail": tail, "v_tail": tail}
+        axes = {
             "pos": ("slots",),
             "prefix_blocks": ("slots",),
             "tail_len": ("slots",),
             "layers": {f"l{j}": {"kv": kv_axes()} for j in range(p)},
         }
+        if self.paged:
+            axes["table"] = ("slots", None)
+            axes["refcount"] = (None,)
+        return axes
 
     # -- transitions (pure; the engine jits each exactly once) --------------
-    def refreeze(self, state: Dict[str, Any]) -> Dict[str, Any]:
+    def refreeze(self, state: Dict[str, Any],
+                 new_ids: Optional[jax.Array] = None) -> Dict[str, Any]:
         """Fold every full tail into its slot's next free prefix blocks.
 
         In-place at static shapes: compress all slots' tails at the pool
@@ -161,11 +247,27 @@ class CachePool:
         ``prefix_blocks`` offset, select per slot.  Slots whose tail is not
         full come back bit-identical.  The caller must ensure no full slot
         overflows ``max_blocks`` (see ``Scheduler`` admission).
+
+        Paged pool: ``new_ids`` int32 ``[slots, tail // bs]`` must carry a
+        FRESH physical block id per (full slot, tail block) — the host
+        :class:`BlockAllocator` hands them out, which is what guarantees
+        the fold never writes shared storage (copy-on-write at the
+        divergence block: the tail is the private copy, the fold targets
+        fresh pages).  Rows for non-full slots are ignored.  The ids land
+        in the arena + each full slot's table row, and their refcounts go
+        to 1.
         """
         cfg = self.cfg
         t, tb = self.tail, self.tail // self.bs
         full = state["tail_len"] >= t                           # [B]
         pb = state["prefix_blocks"]
+        if self.paged:
+            assert new_ids is not None, "paged refreeze needs fresh ids"
+            # masked flat scatter: non-full slots' rows are re-pointed at
+            # id == n_phys, which every mode="drop" scatter discards
+            ids = jnp.asarray(new_ids, jnp.int32)               # [B, tb]
+            drop_ids = jnp.where(full[:, None], ids,
+                                 self.n_phys).reshape(-1)       # [B*tb]
         new_layers = {}
         for name, leaf in state["layers"].items():
             kv = leaf["kv"]
@@ -175,28 +277,79 @@ class CachePool:
                 flat(kv["k_tail"]), flat(kv["v_tail"]),
                 cfg.kv_k_sparsity, cfg.kv_v_sparsity,
                 self.bs, self.cap_k, self.cap_v)
-            unflat = lambda a: a.reshape((p_, b_) + a.shape[1:])
 
-            def write(dst, upd):
-                # per-slot offset scatter over the block axis
-                out = jax.vmap(
-                    lambda db, ub, off: jax.lax.dynamic_update_slice(
-                        db, ub.astype(db.dtype), (0, 0, off, 0)),
-                    in_axes=(1, 1, 0), out_axes=1)(dst, upd, pb)
-                sel = full.reshape((1, b_) + (1,) * (dst.ndim - 2))
-                return jnp.where(sel, out, dst)
+            if self.paged:
+                def write(dst, upd):
+                    # [P*B, Hkv, tb, X] -> [P, B*tb, Hkv, X] rows, scattered
+                    # at the fresh ids on the arena's physical-block axis
+                    u = upd.reshape(p_, b_, hkv, tb, -1)
+                    u = u.transpose(0, 1, 3, 2, 4).reshape(
+                        p_, b_ * tb, hkv, -1)
+                    return dst.at[:, drop_ids].set(
+                        u.astype(dst.dtype), mode="drop")
+            else:
+                unflat = lambda a: a.reshape((p_, b_) + a.shape[1:])
+
+                def write(dst, upd):
+                    # per-slot offset scatter over the block axis
+                    upd = unflat(upd)
+                    out = jax.vmap(
+                        lambda db, ub, off: jax.lax.dynamic_update_slice(
+                            db, ub.astype(db.dtype), (0, 0, off, 0)),
+                        in_axes=(1, 1, 0), out_axes=1)(dst, upd, pb)
+                    sel = full.reshape((1, b_) + (1,) * (dst.ndim - 2))
+                    return jnp.where(sel, out, dst)
 
             new_layers[name] = {"kv": {
                 **kv,
-                "k_bitmap": write(kv["k_bitmap"], unflat(k_bm)),
-                "k_values": write(kv["k_values"], unflat(k_vl)),
-                "v_bitmap": write(kv["v_bitmap"], unflat(v_bm)),
-                "v_values": write(kv["v_values"], unflat(v_vl)),
+                "k_bitmap": write(kv["k_bitmap"], k_bm),
+                "k_values": write(kv["k_values"], k_vl),
+                "v_bitmap": write(kv["v_bitmap"], v_bm),
+                "v_values": write(kv["v_values"], v_vl),
             }}
         grow = jnp.where(full, tb, 0).astype(jnp.int32)
-        return {**state, "layers": new_layers,
-                "prefix_blocks": pb + grow,
-                "tail_len": jnp.where(full, 0, state["tail_len"])}
+        out = {**state, "layers": new_layers,
+               "prefix_blocks": pb + grow,
+               "tail_len": jnp.where(full, 0, state["tail_len"])}
+        if self.paged:
+            # table rows grow by tb entries at each full slot's own offset
+            # (ids clipped in range: table entries are consumed by kernel
+            # index maps, so even dead ones must address real storage)
+            row_ids = jnp.clip(ids, 0, self.n_phys - 1)
+            grown = jax.vmap(
+                lambda row, idr, off: jax.lax.dynamic_update_slice(
+                    row, idr, (off,)))(state["table"], row_ids, pb)
+            out["table"] = jnp.where(full[:, None], grown, state["table"])
+            out["refcount"] = state["refcount"].at[drop_ids].add(
+                1, mode="drop")
+        return out
+
+    def assign_blocks(self, state: Dict[str, Any], slot: jax.Array,
+                      ids: jax.Array, n: jax.Array) -> Dict[str, Any]:
+        """Point a freshly-admitted slot's table row at ``n`` existing
+        physical blocks (a prefix-cache hit): entries ``[0, n)`` of the
+        row become ``ids[:n]``, the blocks' refcounts increment, and the
+        slot's lengths jump to the shared prefix (``n`` blocks, empty
+        tail) — the prefill those blocks would have required is skipped.
+
+        ``ids`` int32 ``[max_blocks]`` (entries past ``n`` ignored),
+        ``slot``/``n`` scalar int32.  Paged pools only.  Pure data motion
+        at static shapes: admitting a hit of any length reuses one trace.
+        """
+        assert self.paged, "assign_blocks is a paged-pool transition"
+        sb = self.max_blocks
+        live = jnp.arange(sb) < n
+        row = jnp.where(live, jnp.clip(ids, 0, self.n_phys - 1), 0)
+        table = jax.lax.dynamic_update_slice(
+            state["table"], row[None].astype(jnp.int32), (slot, 0))
+        rc_ids = jnp.where(live, ids, self.n_phys)
+        n = jnp.asarray(n, jnp.int32)
+        return {**state,
+                "table": table,
+                "refcount": state["refcount"].at[rc_ids].add(1, mode="drop"),
+                "pos": state["pos"].at[slot].set(n * self.bs),
+                "prefix_blocks": state["prefix_blocks"].at[slot].set(n),
+                "tail_len": state["tail_len"].at[slot].set(0)}
 
     def append_many(self, state: Dict[str, Any],
                     panels: Dict[str, Any], n: jax.Array) -> Dict[str, Any]:
@@ -250,11 +403,135 @@ class CachePool:
 
     def release(self, state: Dict[str, Any], slot: jax.Array
                 ) -> Dict[str, Any]:
-        """Recycle a slot: zero its lengths.  Stale prefix/tail contents
-        stay in storage but are fully masked (validity is length-gated
-        everywhere), so the next admission simply overwrites them."""
-        keep = jnp.arange(self.slots) != slot
-        z = lambda a: jnp.where(keep, a, 0)
-        return {**state, "pos": z(state["pos"]),
-                "prefix_blocks": z(state["prefix_blocks"]),
-                "tail_len": z(state["tail_len"])}
+        """Recycle one or many slots: zero their lengths.  Stale
+        prefix/tail contents stay in storage but are fully masked
+        (validity is length-gated everywhere), so the next admission
+        simply overwrites them.
+
+        ``slot`` is a scalar or an int32 ``[R]`` vector (batched release —
+        one jitted call recycles every slot a tick finished; pad with
+        ``-1``, which matches nothing).  Paged pool: every released slot's
+        live table entries decrement their blocks' refcounts (shared
+        blocks scatter-add correctly when several released slots point at
+        the same page) and its table row resets to 0 — the HOST allocator
+        decides what a refcount-0 page becomes (cached for re-hit, or
+        free).
+        """
+        slot = jnp.atleast_1d(jnp.asarray(slot, jnp.int32))     # [R]
+        rel = jnp.any(slot[:, None] == jnp.arange(self.slots)[None, :],
+                      axis=0)                                   # [B]
+        z = lambda a: jnp.where(rel, 0, a)
+        out = {**state, "pos": z(state["pos"]),
+               "prefix_blocks": z(state["prefix_blocks"]),
+               "tail_len": z(state["tail_len"])}
+        if self.paged:
+            live = rel[:, None] & (jnp.arange(self.max_blocks)[None, :]
+                                   < state["prefix_blocks"][:, None])
+            ids = jnp.where(live, state["table"],
+                            self.n_phys).reshape(-1)
+            out["refcount"] = state["refcount"].at[ids].add(-1, mode="drop")
+            out["table"] = jnp.where(rel[:, None], 0, state["table"])
+        return out
+
+
+class BlockAllocator:
+    """Host-side physical-block lifecycle for the paged pool.
+
+    The device transitions above are pure data motion; THIS object decides
+    which ids they move.  Three populations partition ``[0, n_phys)``:
+
+    * **free** — never used or fully reclaimed; a LIFO stack.
+    * **live** — refcount > 0: referenced by at least one slot's table row.
+    * **cached** — refcount == 0 but still holding a registered
+      (content-hashed) block; kept in an LRU so a future prompt sharing
+      the prefix can revive it for free.  ``alloc`` evicts from the LRU's
+      cold end only when the free stack runs dry, invalidating the hash
+      through ``on_evict`` (the engine points that at its prefix index).
+
+    The allocator mirrors refcounts so admission can reason about
+    availability without a device sync; the device ``refcount`` vector
+    carries the same counts for on-device masking and the property tests.
+    """
+
+    def __init__(self, n_phys: int,
+                 on_evict: Optional[Callable[[int], None]] = None):
+        self.n_phys = n_phys
+        self.on_evict = on_evict
+        self._free: List[int] = list(range(n_phys - 1, -1, -1))
+        self._ref = np.zeros(n_phys, np.int64)
+        self._cached: "OrderedDict[int, int]" = OrderedDict()  # id -> hash
+        self._hash2id: Dict[int, int] = {}
+
+    # -- queries -------------------------------------------------------------
+    def free_blocks(self) -> int:
+        """Blocks an ``alloc`` could hand out right now (free + evictable)."""
+        return len(self._free) + len(self._cached)
+
+    def refcount(self, bid: int) -> int:
+        return int(self._ref[bid])
+
+    def lookup(self, h: int) -> Optional[int]:
+        """Physical id of the block registered under chained hash ``h``."""
+        return self._hash2id.get(h)
+
+    # -- lifecycle -------------------------------------------------------------
+    def alloc(self, n: int) -> List[int]:
+        """Hand out ``n`` fresh ids at refcount 1, evicting the LRU's cold
+        end when the free stack runs dry.  The engine's admission
+        reservation guarantees this never runs out — treat failure as a
+        bookkeeping bug, not backpressure."""
+        ids = []
+        for _ in range(n):
+            if self._free:
+                bid = self._free.pop()
+            else:
+                if not self._cached:
+                    raise RuntimeError(
+                        "BlockAllocator exhausted: admission reservations "
+                        "must cover every alloc")
+                bid, h = self._cached.popitem(last=False)      # LRU evict
+                del self._hash2id[h]
+                if self.on_evict is not None:
+                    self.on_evict(h)
+            self._ref[bid] = 1
+            ids.append(bid)
+        return ids
+
+    def register(self, bid: int, h: int) -> bool:
+        """Associate a live block with its chained content hash so future
+        prompts can share it.  First writer wins (a concurrent duplicate
+        simply stays private); returns whether the hash was recorded."""
+        if h in self._hash2id:
+            return False
+        self._hash2id[h] = bid
+        return True
+
+    def hash_of(self, bid: int) -> Optional[int]:
+        for h, i in self._hash2id.items():
+            if i == bid:
+                return h
+        return None
+
+    def incref(self, ids: Sequence[int]) -> None:
+        """Take shared references (a prefix-cache hit); revives cached
+        refcount-0 blocks out of the eviction LRU."""
+        for bid in ids:
+            if self._ref[bid] == 0:
+                self._cached.pop(bid, None)
+            self._ref[bid] += 1
+
+    def decref(self, ids: Sequence[int]) -> None:
+        """Drop references (slot release).  A block hitting refcount 0
+        parks in the LRU if its content hash is registered (revivable),
+        else returns to the free stack."""
+        for bid in ids:
+            assert self._ref[bid] > 0, f"double free of block {bid}"
+            self._ref[bid] -= 1
+            if self._ref[bid] == 0:
+                h = next((hh for hh, ii in self._hash2id.items()
+                          if ii == bid), None)
+                if h is None:
+                    self._free.append(bid)
+                else:
+                    self._cached[bid] = h
+                    self._cached.move_to_end(bid)

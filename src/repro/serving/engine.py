@@ -38,9 +38,9 @@ from repro.models import lm
 from repro.models.attention import DenseKVCache
 
 from . import sampling
-from .cache_pool import CachePool
+from .cache_pool import BlockAllocator, CachePool
 from .sampling import RequestOutput, SamplingParams
-from .scheduler import Scheduler
+from .scheduler import PrefixTrie, Scheduler, block_hashes
 from .spec import AdaptiveDraft, SpecConfig
 
 
@@ -272,6 +272,21 @@ class ContinuousEngine:
     back by a pure length decrement.  The verify step compiles once per
     (pool geometry, k); accept lengths 0..k never retrace.
     ``spec_hist[a]`` counts ticks that committed ``a`` accepted drafts.
+
+    With ``paged=True`` the pool stores compressed blocks ONCE in a shared
+    physical arena of ``phys_blocks`` pages indexed through per-slot block
+    tables.  Admission content-addresses each prompt's block-aligned
+    prefix against a host prefix index (:class:`~.scheduler.PrefixTrie` of
+    chained block hashes): a hit points the new slot's table row at the
+    already-frozen pages (refcount++) and SKIPS their prefill entirely —
+    N requests sharing a system prompt pay its prefill and its arena bytes
+    once.  Frozen pages are immutable; prefill/refreeze always append
+    fresh pages past the shared prefix (copy-on-write at the divergence
+    block), and releases decref — a refcount-0 page parks in the
+    allocator's LRU, revivable by a future hit until evicted for reuse.
+    Admission reserves each request's worst-case page demand up front, so
+    device-side allocation can never fail mid-flight.  The table and
+    refcount are data: decode still never retraces.
     """
 
     def __init__(self, params, cfg, ctx=NULL_CTX, slots: int = 4,
@@ -279,7 +294,7 @@ class ContinuousEngine:
                  prefill_chunk: Optional[int] = None,
                  spec: Optional[SpecConfig] = None,
                  capacity_slack: float = 1.25,
-                 mesh=None):
+                 mesh=None, paged: bool = False, phys_blocks: int = 0):
         if mesh is not None:
             # mesh-sharded serving: slots over the data axes, KV heads over
             # the model axis.  The ctx also constrains activations inside
@@ -301,7 +316,8 @@ class ContinuousEngine:
             bs = next(d for d in range(limit, 0, -1)
                       if cfg.kv_tail % d == 0)
         self.pool = CachePool.build(cfg, slots, max_tokens, bs=bs,
-                                    capacity_slack=capacity_slack)
+                                    capacity_slack=capacity_slack,
+                                    paged=paged, n_phys=phys_blocks)
         # pool storage + per-slot sampling lanes travel as one state pytree
         # through every jitted transition (the pool ops pass unknown keys
         # through untouched)
@@ -352,8 +368,9 @@ class ContinuousEngine:
                 logits[:, 0], st["sample"], m)
             return tok, logp, {**st, "sample": lanes}
 
-        def _prefill(p, st, t, s, final):
-            logits, st = lm.forward_prefill_chunk(p, st, t, s, cfg, ctx, bs_)
+        def _prefill(p, st, t, s, final, ids=None):
+            logits, st = lm.forward_prefill_chunk(p, st, t, s, cfg, ctx, bs_,
+                                                  new_ids=ids)
             lanes = st["sample"]
             lane = {k: jax.lax.dynamic_slice_in_dim(v, s, 1, axis=0)
                     for k, v in lanes.items()}
@@ -368,9 +385,21 @@ class ContinuousEngine:
 
         self._decode = _jit(_decode, (par_sh, st_sh, tok_sh, vec_sh),
                             (vec_sh, vec_sh, st_sh))
-        self._prefill_chunk = _jit(_prefill, (par_sh, st_sh, rep, rep, rep),
-                                   (rep, rep, st_sh))
-        self._refreeze = _jit(self.pool.refreeze, (st_sh,), st_sh)
+        if paged:
+            self._prefill_chunk = _jit(
+                _prefill, (par_sh, st_sh, rep, rep, rep, rep),
+                (rep, rep, st_sh))
+            self._refreeze = _jit(
+                lambda st, ids: self.pool.refreeze(st, new_ids=ids),
+                (st_sh, rep), st_sh)
+            self._assign = _jit(
+                lambda st, s, ids, n: self.pool.assign_blocks(st, s, ids, n),
+                (st_sh, rep, rep, rep), st_sh)
+        else:
+            self._prefill_chunk = _jit(
+                _prefill, (par_sh, st_sh, rep, rep, rep), (rep, rep, st_sh))
+            self._refreeze = _jit(self.pool.refreeze, (st_sh,), st_sh)
+            self._assign = None
         self._release = _jit(self.pool.release, (st_sh, rep), st_sh)
         # a fresh function object, NOT sampling.set_lane itself: pjit's
         # fastpath cache is keyed on the function, so jitting the shared
@@ -418,6 +447,18 @@ class ContinuousEngine:
         self._tail_len = np.zeros(slots, np.int64)
         self._last_tok: Dict[int, int] = {}           # slot -> last token
         self._callbacks: Dict[int, Callable[[RequestOutput], None]] = {}
+        self._pending_release: List[int] = []         # flushed once per tick
+
+        # paged pool: host-side id lifecycle + prefix index.  Sharing needs
+        # deterministic block content, which needs deterministic chunk
+        # boundaries — the trie only indexes blocks frozen by full-width
+        # chunks, so it is active iff prefill is chunked.
+        self._trie = PrefixTrie() if paged else None
+        self._alloc = (BlockAllocator(self.pool.n_phys,
+                                      on_evict=self._trie.drop)
+                       if paged else None)
+        self._blocks: Dict[int, List[int]] = {}       # slot -> table row ids
+        self._reserved: Dict[int, int] = {}           # slot -> pages owed
 
     # -- public API ---------------------------------------------------------
     def submit(self, prompt, params: Optional[SamplingParams] = None,
@@ -471,6 +512,8 @@ class ContinuousEngine:
                   "refreeze": retrace_count(self._refreeze),
                   "release": retrace_count(self._release),
                   "set_lane": retrace_count(self._set_lane)}
+        if self._assign is not None:
+            counts["assign"] = retrace_count(self._assign)
         if self._verify is not None:
             counts["verify"] = retrace_count(self._verify)
         return counts
@@ -485,36 +528,139 @@ class ContinuousEngine:
     # -- one tick -----------------------------------------------------------
     def step(self) -> List[RequestOutput]:
         """Advance the engine one tick; returns a snapshot per token emitted
-        (empty while the pool is still prefilling)."""
+        (empty while the pool is still prefilling).  Slots freed this tick
+        are recycled in ONE batched release at the end (host-padded
+        ``[slots]`` vector — a tick finishing many requests costs one
+        jitted call, not one per slot)."""
+        try:
+            return self._step_inner()
+        finally:
+            self._flush_releases()
+
+    def _flush_releases(self) -> None:
+        if not self._pending_release:
+            return
+        vec = np.full(self.pool.slots, -1, np.int32)
+        vec[:len(self._pending_release)] = self._pending_release
+        self.state = self._release(self.state, jnp.asarray(vec))
+        if self._alloc is not None:
+            for s in self._pending_release:
+                ids = self._blocks.pop(s, [])
+                if ids:
+                    self._alloc.decref(ids)
+                self._reserved.pop(s, None)
+        self._pending_release = []
+
+    def _admit_paged(self):
+        """Reservation + prefix-hit admission for the queue's head.
+
+        Returns the admitted :class:`~.scheduler.Request`, or None (leaving
+        the request queued) when the arena cannot guarantee its worst-case
+        page demand on top of every already-admitted request's outstanding
+        reservation — the paged analogue of running out of slots.  On
+        admission, a prefix-trie hit points the slot's table row at the
+        shared pages and skips their prefill.
+        """
+        sch, bs, alloc = self.scheduler, self.pool.bs, self._alloc
+        nxt = sch.queue[0]
+        plen = len(nxt.prompt)
+        hits: List[int] = []
+        if sch.chunk is not None:
+            hits = self._trie.match(block_hashes(nxt.prompt, bs))
+            # a full-prompt hit would leave no tokens to produce the first
+            # token's logits; and hits are quantized down to whole chunks
+            # so the remaining prefill reuses the full-width chunk
+            # boundaries the frozen blocks were hashed under
+            cw = sch.chunk // bs
+            n_hit = min(len(hits), (plen - 1) // bs) // cw * cw
+            hits = hits[:n_hit]
+        revived = sum(1 for i in hits if alloc.refcount(i) == 0)
+        need = -(-(plen + nxt.params.max_new_tokens) // bs) - len(hits)
+        outstanding = sum(self._reserved.values())
+        if need + revived + outstanding > alloc.free_blocks():
+            return None
+        req = sch.admit()
+        self._reserved[req.slot] = need
+        self._blocks[req.slot] = list(hits)
+        if hits:
+            alloc.incref(hits)
+            pad = np.zeros(self.pool.max_blocks, np.int32)
+            pad[:len(hits)] = hits
+            self.state = self._assign(self.state, jnp.int32(req.slot),
+                                      jnp.asarray(pad),
+                                      jnp.int32(len(hits)))
+            req.prefill_done = len(hits) * bs   # shared prefix: no prefill
+            self._tail_len[req.slot] = 0
+        return req
+
+    def _step_inner(self) -> List[RequestOutput]:
         events: List[RequestOutput] = []
         sch = self.scheduler
         # admission: fill every free slot from the queue, writing each new
         # request's sampling lane into device state
         while sch.queue and sch.free_slots():
-            req = sch.admit()
+            req = (sch.admit() if self._alloc is None
+                   else self._admit_paged())
+            if req is None:
+                break                          # arena full: wait for releases
             p = req.params
             self.state = self._set_lane(
                 self.state, jnp.int32(req.slot),
                 jnp.float32(p.temperature), jnp.int32(p.top_k),
                 jnp.float32(p.top_p), sampling.request_key(p))
 
-        # refreeze before decode appends: any decoding slot with a full tail
-        if any(self._tail_len[s] >= self.pool.tail
-               for s in sch.decoding_slots()):
-            self.state = self._refreeze(self.state)
-            for s in range(self.pool.slots):
-                if self._tail_len[s] >= self.pool.tail:
-                    self._tail_len[s] = 0
+        # refreeze before decode appends: any slot with a full tail (only
+        # decoding slots can fill one; the host list must mirror the
+        # device-side ``tail_len == tail`` mask exactly, because the paged
+        # fold scatters into precisely the rows the device deems full)
+        full = [s for s in range(self.pool.slots)
+                if self._tail_len[s] >= self.pool.tail]
+        if full:
+            if self._alloc is not None:
+                tb = self.pool.tail // self.pool.bs
+                ids = np.zeros((self.pool.slots, tb), np.int32)
+                for s in full:
+                    fresh = self._alloc.alloc(tb)    # CoW: never shared pages
+                    ids[s] = fresh
+                    self._blocks.setdefault(s, []).extend(fresh)
+                    self._reserved[s] = max(0, self._reserved.get(s, 0) - tb)
+                self.state = self._refreeze(self.state, jnp.asarray(ids))
+            else:
+                self.state = self._refreeze(self.state)
+            for s in full:
+                self._tail_len[s] = 0
 
         # one prefill chunk for the oldest request still owed prompt work
         req = sch.next_prefill()
         if req is not None:
+            off0 = req.prefill_done
             chunk = sch.prefill_chunk(req)
             final = req.prefill_done >= len(req.prompt)
             toks = jnp.asarray(np.asarray(chunk, np.int32)[None, :])
-            tok, logp, self.state = self._prefill_chunk(
-                self.params, self.state, toks, jnp.int32(req.slot),
-                jnp.asarray(final))
+            args = (self.params, self.state, toks, jnp.int32(req.slot),
+                    jnp.asarray(final))
+            if self._alloc is not None:
+                nb_new = len(chunk) // self.pool.bs
+                fresh = self._alloc.alloc(nb_new) if nb_new else []
+                tok, logp, self.state = self._prefill_chunk(
+                    *args, jnp.asarray(np.asarray(fresh, np.int32)))
+                self._blocks.setdefault(req.slot, []).extend(fresh)
+                self._reserved[req.slot] = max(
+                    0, self._reserved.get(req.slot, 0) - nb_new)
+                # content-address the new blocks, but only when this chunk
+                # ran at full width: block bytes depend on the whole token
+                # prefix AND the chunk boundaries it was processed under,
+                # so only full-width-chunk blocks are reproducible by a
+                # future prompt prefilling through the same scheduler
+                if sch.chunk is not None and len(chunk) == sch.chunk:
+                    hs = block_hashes(req.prompt[:req.prefill_done],
+                                      self.pool.bs)
+                    for i, bid in enumerate(fresh):
+                        h = hs[off0 // self.pool.bs + i]
+                        if self._alloc.register(bid, h):
+                            self._trie.insert(h, bid)
+            else:
+                tok, logp, self.state = self._prefill_chunk(*args)
             # device-side tail_len after a chunk = chunk_len % bs, and all
             # chunks before the last are block-aligned
             self._tail_len[req.slot] = req.prefill_done % self.pool.bs
@@ -607,7 +753,7 @@ class ContinuousEngine:
             cb(out)
         if finished:
             self._callbacks.pop(req.rid, None)
-            self.state = self._release(self.state, jnp.int32(slot))
+            self._pending_release.append(slot)   # batched flush at tick end
             self._tail_len[slot] = 0
             self._last_tok.pop(slot, None)
             if self._adaptive is not None:

@@ -68,6 +68,58 @@ class Request:
             logprobs=tuple(self.logprobs))
 
 
+def block_hashes(tokens: Sequence[int], bs: int) -> List[int]:
+    """Chained content hashes of ``tokens``' full ``bs``-token blocks.
+
+    ``h[i] = hash((h[i-1], block_i))`` — each hash commits to the ENTIRE
+    token prefix up to its block's end, so a flat ``hash -> block id`` dict
+    behaves exactly like a prefix trie: two prompts share hash ``i`` iff
+    their first ``(i + 1) * bs`` tokens are identical.  The trailing
+    partial block (if any) is not hashed — only frozen, block-aligned
+    content is shareable.
+    """
+    out: List[int] = []
+    parent = bs                      # domain-separate from user token values
+    for i in range(len(tokens) // bs):
+        parent = hash((parent, tuple(tokens[i * bs:(i + 1) * bs])))
+        out.append(parent)
+    return out
+
+
+class PrefixTrie:
+    """Host-side prefix index: chained block hash -> physical block id.
+
+    Because the hashes chain (see :func:`block_hashes`), a flat dict IS a
+    trie — :meth:`match` walks a prompt's hash list until the first miss,
+    which is the longest shared block-aligned prefix already frozen in the
+    arena.  The trie never owns blocks: the :class:`BlockAllocator` does
+    refcounting/eviction and calls :meth:`drop` (via its ``on_evict``
+    callback) when a cached block's storage is reclaimed.
+    """
+
+    def __init__(self) -> None:
+        self._map: Dict[int, int] = {}
+
+    def match(self, hashes: Sequence[int]) -> List[int]:
+        """Physical ids of the longest indexed prefix of ``hashes``."""
+        ids: List[int] = []
+        for h in hashes:
+            bid = self._map.get(h)
+            if bid is None:
+                break
+            ids.append(bid)
+        return ids
+
+    def insert(self, h: int, bid: int) -> None:
+        self._map.setdefault(h, bid)     # first writer wins
+
+    def drop(self, h: int) -> None:
+        self._map.pop(h, None)
+
+    def __len__(self) -> int:
+        return len(self._map)
+
+
 def _matches_stop(generated: List[int],
                   stop_ids: Sequence[Sequence[int]]) -> bool:
     """True if the generated tail equals any stop sequence."""

@@ -1,0 +1,567 @@
+"""Paged shared-prefix cache: block tables + copy-on-write over the
+compressed pool.
+
+The acceptance bar for the subsystem:
+
+* the paged fused kernel (interpret mode) — block table as a
+  scalar-prefetch operand, prefix phase loading ``table[slot, i]`` —
+  matches the gather-then-flat XLA oracle across the pooled edge grid,
+  including tables that SHARE physical blocks across slots;
+* dead arena blocks are never *read*: poisoning every physical block not
+  referenced by a live table entry (and pointing dead table entries at
+  poisoned pages) leaves the kernel output bit-identical on both
+  backends;
+* refcounts are conserved: across any admit / refreeze / CoW / release
+  sequence, ``sum(refcount) == live table entries`` and the device vector
+  mirrors the host :class:`BlockAllocator` exactly (property tests,
+  hypothesis-gated like tests/test_sparse_format.py); the allocator never
+  evicts a referenced block and catches double-frees;
+* greedy ``ContinuousEngine(paged=True)`` output is token-identical to
+  the flat pre-PR pool on mixed shared/unshared request waves — including
+  refreeze, copy-on-write divergence, prefix-cache hits, LRU eviction,
+  and speculative-decoding rollback — with ZERO decode retraces across
+  admissions/evictions (``trace_counts()``), and a cache hit admits with
+  the shared prefill already done.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container ships without hypothesis
+    class _St:
+        def integers(self, *a, **k): return None
+        def lists(self, *a, **k): return None
+    st = _St()
+
+    def settings(**_kw):
+        return lambda fn: fn
+
+    def given(**_kw):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def wrapper():
+                pass
+            wrapper.__name__ = fn.__name__
+            return wrapper
+        return deco
+
+from repro.configs import get_config
+from repro.core.sparse_kv import freeze_chunk_blocks
+from repro.kernels import ops
+from repro.models import lm
+from repro.serving import (BlockAllocator, CachePool, ContinuousEngine,
+                           PrefixTrie, SamplingParams, SpecConfig,
+                           block_hashes, stable_trace_counts)
+
+
+def _rand(shape, seed):
+    return jnp.asarray(np.random.default_rng(seed).normal(
+        size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# kernel: table indirection vs the gather-then-flat oracle
+# ---------------------------------------------------------------------------
+
+def _arena_case(n_phys=10, hkv=2, bs=16, d=32, ks=0.3, vs=0.5, seed=0):
+    """A frozen arena of ``n_phys`` independent compressed blocks."""
+    k = _rand((n_phys, hkv, bs, d), seed)
+    v = _rand((n_phys, hkv, bs, d), seed + 1)
+    cap = bs * d
+    kbm, kvl, vbm, vvl = freeze_chunk_blocks(k, v, ks, vs, bs, cap, cap)
+    return tuple(a[:, :, 0] for a in (kbm, kvl, vbm, vvl))  # [n_phys,Hkv,X]
+
+
+# tables share physical pages across slots on purpose — that sharing is
+# the feature the indirection exists for
+PAGED_GRID = [
+    # (table rows, prefix_blocks, tail_len)  b=4, sb=4
+    pytest.param([[0, 1, 2, 3], [0, 1, 2, 3], [0, 1, 2, 3], [0, 1, 2, 3]],
+                 [4, 4, 4, 4], [1, 9, 14, 16], id="all_shared"),
+    pytest.param([[0, 1, 2, 3], [0, 1, 5, 6], [7, 8, 0, 0], [9, 0, 0, 0]],
+                 [4, 4, 2, 1], [1, 5, 9, 13], id="cow_divergence"),
+    pytest.param([[0, 1, 2, 3], [0, 1, 9, 9], [0, 0, 0, 0], [5, 6, 7, 8]],
+                 [2, 2, 0, 4], [3, 14, 7, 1], id="dead_entries"),
+    pytest.param([[0, 0, 0, 0]] * 4, [0, 0, 0, 0], [1, 4, 9, 16],
+                 id="empty_prefix"),
+]
+
+
+@pytest.mark.parametrize("table,prefix_blocks,tail_len", PAGED_GRID)
+@pytest.mark.parametrize("qn", [0, 3])
+def test_paged_kernel_matches_gather_oracle(table, prefix_blocks, tail_len,
+                                            qn):
+    """Paged attention == gather each slot's blocks out of the arena, then
+    flat attention: single-query ticks and [B, Q, Hq, D] verify panels,
+    slots sharing pages, dead in-range table entries."""
+    b, hkv, g, d, bs, t = 4, 2, 2, 32, 16, 16
+    arena = _arena_case(hkv=hkv, bs=bs, d=d)
+    tbl = jnp.asarray(table, jnp.int32)
+    pl_ = jnp.asarray(prefix_blocks, jnp.int32) * bs
+    tl = jnp.asarray(tail_len, jnp.int32)
+    k_tail = _rand((b, hkv, t, d), 10)
+    v_tail = _rand((b, hkv, t, d), 11)
+    q = (_rand((b, hkv * g, d), 12) if qn == 0
+         else _rand((b, qn, hkv * g, d), 12))
+    if qn:                          # panel query j sees tail_len + j
+        tl = jnp.minimum(tl, t - (qn - 1))
+    sm = 1.0 / d ** 0.5
+    with ops.backend("xla"):
+        o_ref = ops.sparse_decode_attention_paged(
+            q, *arena, tbl, hkv, sm, bs, k_tail, v_tail, tl, pl_)
+    with ops.backend("interpret"):
+        o_k = ops.sparse_decode_attention_paged(
+            q, *arena, tbl, hkv, sm, bs, k_tail, v_tail, tl, pl_)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", ["interpret", "xla"])
+def test_poisoned_arena_blocks_never_read(backend):
+    """Poison every physical page NOT referenced by a live table entry
+    (including the pages dead table entries point at): the output must be
+    bit-identical to the clean arena — the ``n_blocks`` gate, not luck,
+    keeps dead fetches out of the softmax."""
+    b, hkv, g, d, bs, t = 4, 2, 2, 32, 16, 16
+    n_phys = 10
+    arena = _arena_case(n_phys=n_phys, hkv=hkv, bs=bs, d=d)
+    table = jnp.asarray([[0, 1, 2, 3], [0, 1, 9, 9],
+                         [4, 0, 0, 0], [5, 5, 5, 5]], jnp.int32)
+    prefix_blocks = np.asarray([4, 2, 1, 0])
+    live = {int(table[s, i]) for s in range(b)
+            for i in range(prefix_blocks[s])}
+    dead = np.asarray([p not in live for p in range(n_phys)])
+    assert dead.any(), "case must exercise dead pages"
+    poisoned = tuple(
+        jnp.where(dead[:, None, None],
+                  jnp.full(a.shape, ~np.uint32(0))
+                  if a.dtype == jnp.uint32 else jnp.full(a.shape, 1e4),
+                  a).astype(a.dtype)
+        for a in arena)
+    pl_ = jnp.asarray(prefix_blocks, jnp.int32) * bs
+    tl = jnp.asarray([1, 9, 16, 4], jnp.int32)
+    k_tail = _rand((b, hkv, t, d), 20)
+    v_tail = _rand((b, hkv, t, d), 21)
+    q = _rand((b, hkv * g, d), 22)
+    sm = 1.0 / d ** 0.5
+    with ops.backend(backend):
+        o_clean = ops.sparse_decode_attention_paged(
+            q, *arena, table, hkv, sm, bs, k_tail, v_tail, tl, pl_)
+        o_poison = ops.sparse_decode_attention_paged(
+            q, *poisoned, table, hkv, sm, bs, k_tail, v_tail, tl, pl_)
+    np.testing.assert_array_equal(np.asarray(o_clean), np.asarray(o_poison))
+
+
+# ---------------------------------------------------------------------------
+# pool transitions: table / refcount bookkeeping
+# ---------------------------------------------------------------------------
+
+def _paged_pool(slots=3, kv_tail=16, bs=16, max_tokens=64, n_phys=0):
+    cfg = get_config("qwen3-0.6b").reduced()
+    cfg = dataclasses.replace(cfg, kv_k_sparsity=0.0, kv_v_sparsity=0.0,
+                              kv_tail=kv_tail)
+    pool = CachePool.build(cfg, slots=slots, max_tokens=max_tokens, bs=bs,
+                           paged=True, n_phys=n_phys)
+    return cfg, pool
+
+
+def test_paged_build_defaults_and_errors():
+    cfg, pool = _paged_pool(slots=3, max_tokens=64, bs=16)
+    assert pool.paged and pool.n_phys == 3 * pool.max_blocks
+    st0 = pool.init_state()
+    assert st0["table"].shape == (3, pool.max_blocks)
+    assert st0["refcount"].shape == (pool.n_phys,)
+    # the build-time contracts read as errors, not asserts
+    with pytest.raises(ValueError, match="not a multiple"):
+        CachePool.build(cfg, 2, 64, bs=12)
+    with pytest.raises(ValueError, match="cannot serve arch"):
+        CachePool.build(get_config("rwkv6-7b").reduced(), 2, 64)
+
+
+def test_assign_refreeze_release_refcount_bookkeeping():
+    """One shared-prefix lifetime, by hand: slot 0 freezes two pages,
+    slot 1 takes a shared reference (admission hit), slot 1 diverges onto
+    a fresh page (CoW), then a batched release drops both slots and every
+    refcount returns to zero."""
+    cfg, pool = _paged_pool(slots=3, kv_tail=16, bs=16)
+    tb = pool.tail // pool.bs
+    state = pool.init_state()
+
+    # slot 0 fills its tail twice and refreezes onto fresh pages 0, 1
+    for newpage in range(2):
+        fill = jnp.asarray([16, 0, 0], jnp.int32)
+        state = dict(state, tail_len=fill, pos=state["pos"] + fill)
+        ids = np.zeros((pool.slots, tb), np.int32)
+        ids[0] = [newpage]
+        state = jax.jit(pool.refreeze)(state, jnp.asarray(ids))
+    assert np.asarray(state["prefix_blocks"]).tolist() == [2, 0, 0]
+    assert np.asarray(state["table"])[0, :2].tolist() == [0, 1]
+    assert np.asarray(state["refcount"])[:2].tolist() == [1, 1]
+
+    # slot 1 admits on a prefix-cache hit over the same two pages
+    pad = np.zeros(pool.max_blocks, np.int32)
+    pad[:2] = [0, 1]
+    state = jax.jit(pool.assign_blocks)(state, jnp.int32(1),
+                                        jnp.asarray(pad), jnp.int32(2))
+    assert np.asarray(state["refcount"])[:2].tolist() == [2, 2]
+    assert np.asarray(state["pos"]).tolist() == [32, 32, 0]
+    assert np.asarray(state["table"])[1, :2].tolist() == [0, 1]
+
+    # slot 1 diverges: its own tail refreezes onto FRESH page 2 (CoW) —
+    # the shared pages are untouched, only its table row grows
+    before = [np.asarray(state["layers"]["l0"]["kv"][k])[:, :2].copy()
+              for k in ("k_bitmap", "k_values")]
+    fill = jnp.asarray([0, 16, 0], jnp.int32)
+    state = dict(state, tail_len=fill, pos=state["pos"] + fill)
+    ids = np.zeros((pool.slots, tb), np.int32)
+    ids[1] = [2]
+    state = jax.jit(pool.refreeze)(state, jnp.asarray(ids))
+    assert np.asarray(state["table"])[1, :3].tolist() == [0, 1, 2]
+    assert np.asarray(state["table"])[0, :2].tolist() == [0, 1]
+    assert np.asarray(state["refcount"])[:3].tolist() == [2, 2, 1]
+    for b4, key in zip(before, ("k_bitmap", "k_values")):
+        np.testing.assert_array_equal(
+            b4, np.asarray(state["layers"]["l0"]["kv"][key])[:, :2],
+            err_msg=f"CoW wrote shared {key} pages")
+
+    # batched release of both slots in ONE call: the shared pages are
+    # decref'd once per referencing slot (scatter-add), all counts at 0
+    rel = np.full(pool.slots, -1, np.int32)
+    rel[:2] = [0, 1]
+    state = jax.jit(pool.release)(state, jnp.asarray(rel))
+    assert np.asarray(state["refcount"]).sum() == 0
+    assert np.asarray(state["table"]).sum() == 0
+    assert np.asarray(state["pos"]).tolist() == [0, 0, 0]
+
+
+def test_release_vector_matches_scalar_loop():
+    """Batched release == the scalar loop it replaces, flat and paged."""
+    for paged in (False, True):
+        cfg = get_config("qwen3-0.6b").reduced()
+        cfg = dataclasses.replace(cfg, kv_k_sparsity=0.0, kv_v_sparsity=0.0,
+                                  kv_tail=16)
+        pool = CachePool.build(cfg, slots=4, max_tokens=64, paged=paged)
+        state = pool.init_state()
+        state["pos"] = jnp.asarray([5, 9, 3, 7], jnp.int32)
+        state["tail_len"] = jnp.asarray([5, 9, 3, 7], jnp.int32)
+        if paged:
+            state["prefix_blocks"] = jnp.asarray([2, 1, 0, 0], jnp.int32)
+            state["table"] = state["table"].at[0, :2].set(
+                jnp.asarray([3, 4]))
+            state["table"] = state["table"].at[1, :1].set(5)
+            state["refcount"] = state["refcount"].at[
+                jnp.asarray([3, 4, 5])].set(1)
+        vec = jnp.asarray([0, 2, -1, -1], jnp.int32)
+        batched = pool.release(state, vec)
+        looped = pool.release(pool.release(state, jnp.int32(0)),
+                              jnp.int32(2))
+        for a, b in zip(jax.tree_util.tree_leaves(batched),
+                        jax.tree_util.tree_leaves(looped)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=25, deadline=None)
+@given(ops_seq=st.lists(st.integers(min_value=0, max_value=99),
+                        min_size=1, max_size=12))
+def test_refcount_conservation_property(ops_seq):
+    """Any admit / refreeze(CoW) / release walk conserves refcounts:
+    ``sum(refcount) == live table entries`` after every transition, the
+    device vector mirrors the host allocator, nothing double-frees, and
+    the allocator never hands out a page some slot still references."""
+    cfg, pool = _paged_pool(slots=3, kv_tail=16, bs=16, max_tokens=64)
+    tb = pool.tail // pool.bs
+    alloc = BlockAllocator(pool.n_phys)
+    state = pool.init_state()
+    blocks = {}                                   # slot -> [ids]
+
+    refreeze = jax.jit(pool.refreeze)
+    assign = jax.jit(pool.assign_blocks)
+    release = jax.jit(pool.release)
+
+    def check():
+        rc = np.asarray(state["refcount"])
+        live = sum(len(v) for v in blocks.values())
+        assert rc.sum() == live, (rc, blocks)
+        assert rc.min() >= 0
+        for bid in range(pool.n_phys):
+            assert rc[bid] == alloc.refcount(bid), bid
+        held = {b for ids in blocks.values() for b in ids}
+        for bid in held:
+            assert rc[bid] > 0
+
+    for code in ops_seq:
+        op, arg = code % 3, code // 3
+        if op == 0:       # grow a slot: fill tail, refreeze onto fresh page
+            slot = arg % pool.slots
+            if (len(blocks.get(slot, ())) + tb > pool.max_blocks
+                    or alloc.free_blocks() < tb):
+                continue
+            tl = np.zeros(pool.slots, np.int32)
+            tl[slot] = pool.tail
+            fresh = alloc.alloc(tb)
+            ids = np.zeros((pool.slots, tb), np.int32)
+            ids[slot] = fresh
+            state = dict(state, tail_len=jnp.asarray(tl),
+                         pos=state["pos"] + jnp.asarray(tl))
+            state = dict(refreeze(state, jnp.asarray(ids)))
+            blocks.setdefault(slot, []).extend(fresh)
+        elif op == 1:     # admit a free slot on a hit over another's prefix
+            free = [s for s in range(pool.slots) if s not in blocks]
+            donors = [s for s in blocks if blocks[s]]
+            if not free or not donors:
+                continue
+            slot, donor = free[0], donors[arg % len(donors)]
+            n = arg % len(blocks[donor]) + 1
+            hits = blocks[donor][:n]
+            alloc.incref(hits)
+            pad = np.zeros(pool.max_blocks, np.int32)
+            pad[:n] = hits
+            state = dict(assign(state, jnp.int32(slot),
+                                jnp.asarray(pad), jnp.int32(n)))
+            blocks[slot] = list(hits)
+        else:             # release a subset of live slots in one call
+            live_slots = sorted(blocks)
+            if not live_slots:
+                continue
+            picked = live_slots[:arg % len(live_slots) + 1]
+            vec = np.full(pool.slots, -1, np.int32)
+            vec[:len(picked)] = picked
+            state = dict(release(state, jnp.asarray(vec)))
+            for s in picked:
+                alloc.decref(blocks.pop(s))
+        check()
+
+
+# ---------------------------------------------------------------------------
+# host side: allocator + prefix trie
+# ---------------------------------------------------------------------------
+
+def test_block_allocator_lru_eviction_and_revival():
+    evicted = []
+    alloc = BlockAllocator(3, on_evict=evicted.append)
+    a, b, c = alloc.alloc(3)
+    alloc.register(a, 100)
+    alloc.register(b, 200)
+    assert alloc.free_blocks() == 0
+    alloc.decref([a, b])          # both park in the LRU, oldest = a
+    assert alloc.free_blocks() == 2
+    assert alloc.lookup(100) == a and alloc.lookup(200) == b
+    alloc.incref([b])             # revive b out of the LRU
+    [d] = alloc.alloc(1)          # must evict a (cold end), NEVER b or c
+    assert d == a and evicted == [100]
+    assert alloc.lookup(100) is None and alloc.lookup(200) == b
+    alloc.decref([c])             # unregistered: straight to the free list
+    assert alloc.free_blocks() == 1
+    with pytest.raises(AssertionError, match="double free"):
+        alloc.decref([c])
+    with pytest.raises(RuntimeError, match="exhausted"):
+        alloc.alloc(2)            # only 1 reclaimable (b, d live)
+
+
+def test_block_hashes_chain_and_trie_match():
+    bs = 4
+    a = list(range(12))
+    b = list(range(8)) + [99, 98, 97, 96]
+    ha, hb = block_hashes(a, bs), block_hashes(b, bs)
+    assert len(ha) == 3 and ha[:2] == hb[:2] and ha[2] != hb[2]
+    # a trailing partial block is never hashed; chaining => a block's hash
+    # commits to the WHOLE prefix, so equal blocks at different depths
+    # do not collide
+    assert block_hashes(a[:11], bs) == ha[:2]
+    same_block = block_hashes(a[4:8], bs)
+    assert same_block[0] != ha[1]
+    trie = PrefixTrie()
+    for i, h in enumerate(ha):
+        trie.insert(h, i + 10)
+    assert trie.match(hb) == [10, 11]         # longest shared prefix
+    assert trie.match(block_hashes([7] * 8, bs)) == []
+    trie.drop(ha[1])                          # eviction invalidates mid-chain
+    assert trie.match(ha) == [10]
+    assert len(trie) == 2
+
+
+# ---------------------------------------------------------------------------
+# engine: token identity + zero retraces (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def _setup(seed=0, kv_tail=16):
+    cfg = get_config("qwen3-0.6b").reduced()
+    cfg = dataclasses.replace(cfg, kv_k_sparsity=0.3, kv_v_sparsity=0.5,
+                              kv_tail=kv_tail, compute_dtype="float32",
+                              param_dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+def _shared_wave(cfg, seed=0):
+    """Mixed shared/unshared prompts: a 64-token system prefix with unique
+    suffixes (prefix-cache hits), a divergence INSIDE the shared region
+    (copy-on-write at block 2), and an unrelated prompt."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab, (64,)).tolist()
+    return [
+        shared + rng.integers(0, cfg.vocab, (5,)).tolist(),
+        shared + rng.integers(0, cfg.vocab, (9,)).tolist(),
+        shared[:32] + rng.integers(0, cfg.vocab, (20,)).tolist(),
+        rng.integers(0, cfg.vocab, (40,)).tolist(),
+    ]
+
+
+def _drive(eng, prompts, steps=24):
+    rids = [eng.submit(p, SamplingParams(max_new_tokens=steps))
+            for p in prompts]
+    res = eng.run()
+    return [res[r].token_ids for r in rids], res
+
+
+def test_paged_engine_token_identity_and_zero_retraces():
+    """Greedy paged output == flat output on the mixed wave (refreeze:
+    max_new_tokens > kv_tail; CoW divergence; hits), decode/verify traces
+    stay at 1 across a second wave that replays admissions, evictions and
+    prefix-cache hits against a warm trie."""
+    cfg, params = _setup()
+    prompts = _shared_wave(cfg)
+
+    flat = ContinuousEngine(params, cfg, slots=2, max_tokens=128, bs=16,
+                            prefill_chunk=32)
+    out_flat, _ = _drive(flat, prompts)
+
+    eng = ContinuousEngine(params, cfg, slots=2, max_tokens=128, bs=16,
+                           prefill_chunk=32, paged=True)
+    out_paged, res = _drive(eng, prompts)
+    assert out_paged == out_flat
+    warm = eng.trace_counts()
+    assert warm["decode"] == 1 and warm["assign"] >= 1
+
+    # second wave: every shared-prefix request now admits on a trie hit
+    assert len(eng._trie) > 0
+    out2, res2 = _drive(eng, prompts)
+    out_flat2, _ = _drive(flat, prompts)
+    assert out2 == out_flat2
+    after = eng.trace_counts()
+    assert stable_trace_counts(after) == stable_trace_counts(warm), \
+        f"paged engine retraced: {warm} -> {after}"
+    # hit TTFT < miss TTFT: the shared prefill was skipped outright
+    ttft1 = min(o.metrics.ttft for o in res.values())
+    ttft2 = min(o.metrics.ttft for o in res2.values())
+    assert ttft2 < ttft1
+
+
+def test_paged_prefix_hit_skips_prefill_and_shares_pages():
+    cfg, params = _setup()
+    rng = np.random.default_rng(1)
+    shared = rng.integers(0, cfg.vocab, (64,)).tolist()
+    p0 = shared + rng.integers(0, cfg.vocab, (6,)).tolist()
+    p1 = shared + rng.integers(0, cfg.vocab, (3,)).tolist()
+
+    eng = ContinuousEngine(params, cfg, slots=2, max_tokens=128, bs=16,
+                           prefill_chunk=32, paged=True)
+    eng.submit(p0, SamplingParams(max_new_tokens=4))
+    eng.run()
+    assert len(eng._trie) == 4                   # 64 tokens / bs, chunked
+    cached = eng._alloc.free_blocks()
+
+    rid = eng.submit(p1, SamplingParams(max_new_tokens=4))
+    eng.step()                                   # admission tick
+    req = eng.scheduler.active[
+        next(s for s, r in eng.scheduler.active.items() if r.rid == rid)]
+    # the 64-token hit IS the prefill: one tick covers hit + the 3-token
+    # suffix chunk (a cold 67-token prompt at chunk=32 needs 3 ticks)
+    assert req.prefill_done == len(p1)
+    row = eng._blocks[req.slot]
+    assert len(row) >= 4
+    rc = np.asarray(eng.state["refcount"])
+    assert all(rc[b] == 1 for b in row[:4])      # revived from the LRU
+    assert eng._alloc.free_blocks() < cached
+    out = eng.run()
+    assert out[rid].finish_reason == "length"
+
+    # flat engine on the same prompt agrees token-for-token
+    flat = ContinuousEngine(params, cfg, slots=2, max_tokens=128, bs=16,
+                            prefill_chunk=32)
+    fid = flat.submit(p1, SamplingParams(max_new_tokens=4))
+    assert flat.run()[fid].token_ids == out[rid].token_ids
+
+
+def test_paged_eviction_invalidates_trie_and_stays_correct():
+    """A tiny arena: new traffic must LRU-evict the cached shared prefix
+    (trie entries drop), and a later request with that prefix re-prefills
+    and still matches the flat engine."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(2)
+    shared = rng.integers(0, cfg.vocab, (48,)).tolist()
+    p0 = shared + rng.integers(0, cfg.vocab, (4,)).tolist()
+    other = [rng.integers(0, cfg.vocab, (52,)).tolist() for _ in range(2)]
+
+    # arena of 7 pages; each request freezes 3 (and reserves 4), so the
+    # third wave must evict the first's cached pages
+    eng = ContinuousEngine(params, cfg, slots=1, max_tokens=64, bs=16,
+                           prefill_chunk=16, paged=True, phys_blocks=7)
+    sp = SamplingParams(max_new_tokens=8)
+    r0 = eng.submit(p0, sp)
+    first = eng.run()[r0].token_ids
+    trie0 = len(eng._trie)
+    assert trie0 > 0
+    for p in other:                               # churn: forces eviction
+        eng.submit(p, sp)
+        eng.run()
+    assert len(eng._trie) < trie0 + 2 * 3         # evictions really fired
+    r2 = eng.submit(p0, sp)
+    assert eng.run()[r2].token_ids == first
+
+    flat = ContinuousEngine(params, cfg, slots=1, max_tokens=64, bs=16,
+                            prefill_chunk=16)
+    fid = flat.submit(p0, sp)
+    assert flat.run()[fid].token_ids == first
+
+
+def test_paged_spec_decode_token_identity():
+    """Speculative decoding on the paged pool: draft-verify rollback is a
+    pure tail decrement, so paged + spec greedy == flat spec-off greedy on
+    a wave with draft hits (loopy) and misses (random)."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(3)
+    shared = rng.integers(0, cfg.vocab, (32,)).tolist()
+    prompts = [shared + [3, 4, 5] * 4,
+               shared + rng.integers(0, cfg.vocab, (7,)).tolist(),
+               rng.integers(0, cfg.vocab, (20,)).tolist()]
+
+    flat = ContinuousEngine(params, cfg, slots=2, max_tokens=96, bs=16,
+                            prefill_chunk=32)
+    out_flat, _ = _drive(flat, prompts, steps=20)
+
+    eng = ContinuousEngine(params, cfg, slots=2, max_tokens=96, bs=16,
+                           prefill_chunk=32, paged=True,
+                           spec=SpecConfig(k=3))
+    out_spec, _ = _drive(eng, prompts, steps=20)
+    assert out_spec == out_flat
+    assert eng.trace_counts()["verify"] == 1
+    assert eng.spec_hist.sum() > 0
+
+
+def test_paged_interpret_mode_parity():
+    """The paged engine through the actual Pallas kernels (interpret mode)
+    stays token-identical to the flat engine on the same backend — the CI
+    paged-parity bar."""
+    cfg, params = _setup(kv_tail=16)
+    rng = np.random.default_rng(4)
+    shared = rng.integers(0, cfg.vocab, (32,)).tolist()
+    prompts = [shared + rng.integers(0, cfg.vocab, (4,)).tolist(),
+               shared + rng.integers(0, cfg.vocab, (2,)).tolist()]
+    sp = SamplingParams(max_new_tokens=6)
+    with ops.backend("interpret"):
+        flat = ContinuousEngine(params, cfg, slots=2, max_tokens=64, bs=16,
+                                prefill_chunk=32)
+        rf = [flat.submit(p, sp) for p in prompts]
+        out_flat = [flat.run()[r].token_ids for r in rf]
+        eng = ContinuousEngine(params, cfg, slots=2, max_tokens=64, bs=16,
+                               prefill_chunk=32, paged=True)
+        rp = [eng.submit(p, sp) for p in prompts]
+        out_paged = [eng.run()[r].token_ids for r in rp]
+        assert eng.trace_counts()["decode"] == 1
+    assert out_paged == out_flat

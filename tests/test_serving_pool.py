@@ -127,7 +127,7 @@ def test_pool_rejects_unsupported_families():
     time, not silently drop cross-attention / frontend / recurrent state."""
     for arch in ("rwkv6-7b", "jamba-1.5-large-398b", "seamless-m4t-medium",
                  "internvl2-1b"):
-        with pytest.raises(AssertionError):
+        with pytest.raises(ValueError, match="cannot serve arch"):
             CachePool.build(get_config(arch).reduced(), 2, 64)
 
 
