@@ -1,0 +1,32 @@
+"""jitlint: static jit-stability analysis for the serving hot path.
+
+Every performance claim in this repo rests on invariants that used to be
+tribal knowledge: zero retraces per pool geometry, no host<->device sync
+inside the tick loop, static shapes through every pure transition, no
+``jnp.concatenate`` / ``jnp.repeat`` in the per-token path.  This package
+machine-checks them in three layers:
+
+* :mod:`~repro.analysis.lint` — AST rules over ``src/repro`` (banned
+  host-sync calls, bare ``assert`` in jit-reachable code, banned hot-path
+  ops), with an explicit ``# jitlint: disable=<rule>`` pragma for the
+  documented exceptions;
+* :mod:`~repro.analysis.jaxpr_audit` — traces every registered
+  :class:`~repro.serving.engine.ContinuousEngine` entry point under
+  abstract inputs for a small geometry matrix (flat/paged x spec on/off)
+  and walks the closed jaxprs: zero host-callback/transfer primitives, no
+  dynamic shapes, a dtype-promotion report (silent bf16->f32 upcasts), and
+  bounds discipline on block-table gathers against the arena;
+* :mod:`~repro.analysis.manifest` — a committed lockfile
+  (``jit_manifest.lock``) of (entry point, abstract signature, jaxpr
+  structural hash, donation set, transfer count) per geometry.  ``--check``
+  fails CI when a diff introduces a retrace-shaped signature change, a new
+  transfer, or lost donation; ``--update`` regenerates it.
+
+CLI: ``python -m repro.analysis --check`` (CI gate) / ``--update``.
+"""
+from .lint import Finding, lint_file, lint_tree, RULES          # noqa: F401
+from .jaxpr_audit import (AuditFinding, audit_jaxpr,            # noqa: F401
+                          collect_entries, run_audit)
+from .manifest import (build_manifest, check_manifest,          # noqa: F401
+                       fingerprint, render_manifest, write_manifest,
+                       LOCKFILE)

@@ -1,0 +1,122 @@
+"""CLI for the jitlint static-analysis suite.
+
+``python -m repro.analysis``            — same as ``--check`` (the CI gate)
+``python -m repro.analysis --update``   — regenerate jit_manifest.lock,
+                                          print a human-readable diff
+``python -m repro.analysis --report P`` — also write the dtype-promotion
+                                          report (JSON) to P
+
+Exit status: 0 clean, 1 findings/drift, 2 internal error.  All three
+layers run off ONE trace pass per geometry cell — the audit walks each
+closed jaxpr and the manifest fingerprints the same object.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Any, Dict, List
+
+import jax
+
+from .jaxpr_audit import (DEFAULT_GEOMETRIES, AuditFinding,
+                          audit_jaxpr, build_audit_engine)
+from .lint import lint_tree
+from .manifest import (LOCKFILE, _FORMAT, check_manifest, fingerprint,
+                       write_manifest)
+
+
+def _trace_pass(cfg=None):
+    """One trace of every geometry cell's entry points, feeding both the
+    jaxpr audit and the compile manifest."""
+    findings: List[AuditFinding] = []
+    report: List[Dict[str, Any]] = []
+    manifest: Dict[str, Any] = {"_format": _FORMAT}
+    for g in DEFAULT_GEOMETRIES:
+        eng = build_audit_engine(g, cfg=cfg)
+        cell: Dict[str, Any] = {}
+        for name, (fn, args) in sorted(eng.entry_points().items()):
+            closed = jax.make_jaxpr(fn)(*args)
+            fs, sites = audit_jaxpr(closed, name, g, n_phys=eng.pool.n_phys)
+            findings.extend(fs)
+            report.extend(sites)
+            cell[name] = fingerprint(closed, args)
+        manifest[g.name] = cell
+    return findings, report, manifest
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jit-stability static analysis (lint + jaxpr audit "
+                    "+ compile manifest)")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--check", action="store_true",
+                      help="verify the tree against rules and the "
+                           "committed lockfile (default)")
+    mode.add_argument("--update", action="store_true",
+                      help="regenerate jit_manifest.lock and print the "
+                           "diff")
+    ap.add_argument("--report", metavar="PATH", default=None,
+                    help="write the dtype-promotion report (JSON) here")
+    ap.add_argument("--lockfile", metavar="PATH", default=str(LOCKFILE),
+                    help="lockfile location (default: committed one)")
+    args = ap.parse_args(argv)
+
+    failed = False
+
+    # layer 1 — AST lint (cheap; runs first so syntax-level problems
+    # surface before any tracing)
+    lint_findings = lint_tree()
+    for f in lint_findings:
+        print(f"LINT  {f.rule}: {f.path}:{f.line}: {f.message}")
+    if lint_findings:
+        failed = True
+    print(f"lint: {len(lint_findings)} finding(s)")
+
+    # layers 2+3 — one trace pass per geometry cell
+    audit_findings, dtype_report, manifest = _trace_pass()
+    for f in audit_findings:
+        loc = f" [{f.file}:{f.line}]" if f.file else ""
+        print(f"AUDIT {f.rule}: {f.geometry}/{f.entry}: {f.message}{loc}")
+    if audit_findings:
+        failed = True
+    denied = [s for s in dtype_report if not s["allowed"]]
+    print(f"audit: {len(audit_findings)} finding(s), "
+          f"{len(dtype_report)} dtype-widening site(s) "
+          f"({len(denied)} denied)")
+
+    if args.report:
+        with open(args.report, "w") as fh:
+            json.dump(dtype_report, fh, indent=2, sort_keys=True)
+        print(f"dtype report -> {args.report}")
+
+    if args.update:
+        existed = Path(args.lockfile).is_file()
+        diff = write_manifest(manifest, path=args.lockfile)
+        print(diff if diff else
+              "manifest: lockfile unchanged" if existed else
+              "manifest: lockfile created")
+        print(f"manifest -> {args.lockfile}")
+    else:
+        drift = check_manifest(manifest, path=args.lockfile)
+        for msg in drift:
+            print(f"MANIFEST {msg}")
+        if drift:
+            failed = True
+        n = sum(len(v) for k, v in manifest.items()
+                if not k.startswith("_"))
+        print(f"manifest: {n} entry point(s) across "
+              f"{len(manifest) - 1} geometries "
+              f"{'DRIFTED' if drift else 'match the lockfile'}")
+
+    if failed:
+        print("analysis: FAIL")
+        return 1
+    print("analysis: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

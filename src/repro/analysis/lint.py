@@ -1,0 +1,263 @@
+"""Layer 1: repo-specific AST lint over ``src/repro``.
+
+Rules (ids are what the pragma disables):
+
+``host-sync``
+    Calls that force a host<->device round trip — ``.item()``,
+    ``jax.device_get``, ``np.asarray`` / ``np.array``, and ``int()`` /
+    ``float()`` applied to an array-ish expression (an attribute or
+    subscript — ``int(cache.tail_len)`` syncs; ``int(len(xs))`` does not)
+    — inside **jit-reachable** modules.  The engine's host tick loop
+    (``serving/engine.py``, ``serving/scheduler.py``) is the designated
+    sync boundary and is out of scope by construction.
+
+``block-until-ready``
+    ``.block_until_ready()`` anywhere in ``src/repro`` outside the
+    engine's designated sync point (which must carry the pragma).
+
+``bare-assert``
+    ``assert`` statements in jit-reachable code.  Shape/geometry
+    contracts must be build-time ``ValueError`` (they fire identically at
+    trace time and survive ``python -O``); value-dependent invariants
+    belong in the opt-in checkify mode.
+
+``hot-path-op``
+    ``jnp.concatenate`` / ``jnp.repeat`` / ``jnp.sort`` / ``jnp.argsort``
+    in the hot-path packages (``kernels/``, ``models/``, ``serving/``).
+    The per-token decode path eliminated these in PR 3; anything that
+    reintroduces one must carry the pragma with a documented reason
+    (e.g. the exact-sort sampling fallback, prefill/legacy-only paths).
+
+Pragma syntax: ``# jitlint: disable=rule[,rule...]`` (or ``all``) on the
+flagged line, any line the flagged expression spans, or the line
+immediately above it.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+RULES: Dict[str, str] = {
+    "host-sync": "host<->device sync call in a jit-reachable module",
+    "block-until-ready": ".block_until_ready outside the designated "
+                         "sync point",
+    "bare-assert": "bare assert in jit-reachable code (use ValueError "
+                   "or checkify)",
+    "hot-path-op": "banned hot-path op (concatenate/repeat/sort) in "
+                   "kernels/, models/, serving/",
+}
+
+# Modules whose code is traced inside jax.jit (directly or via the model
+# forwards).  Host-side orchestration (serving/engine.py, scheduler.py,
+# spec.py, launch/, data/, checkpoint/, benchmarks) is deliberately out of
+# scope for host-sync/bare-assert: syncing at the tick boundary is its job.
+JIT_MODULES: Sequence[str] = (
+    "core/",
+    "kernels/",
+    "models/",
+    "optim/",
+    "train/",
+    "serving/cache_pool.py",
+    "serving/sampling.py",
+    "distributed/cp_attention.py",
+)
+
+# Packages that contain the serving hot path: per-token decode must never
+# re-grow ops PR 3 eliminated.
+HOT_PATH_MODULES: Sequence[str] = ("kernels/", "models/", "serving/")
+
+_PRAGMA_RE = re.compile(r"#\s*jitlint:\s*disable=([\w,\- ]+)")
+
+_HOT_OPS = {"concatenate", "repeat", "sort", "argsort"}
+_NP_SYNC = {"asarray", "array"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str          # repo-relative (src/repro/...)
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _pragmas(source_lines: Sequence[str]) -> Dict[int, Set[str]]:
+    """1-based line -> set of disabled rule ids."""
+    out: Dict[int, Set[str]] = {}
+    for i, text in enumerate(source_lines, start=1):
+        m = _PRAGMA_RE.search(text)
+        if m:
+            out[i] = {r.strip() for r in m.group(1).split(",") if r.strip()}
+    return out
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` attribute/name chain as a string, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str, jit_reachable: bool, hot_path: bool):
+        self.path = path
+        self.jit_reachable = jit_reachable
+        self.hot_path = hot_path
+        self.raw: List[Finding] = []
+
+    def _add(self, rule: str, node: ast.AST, msg: str) -> None:
+        self.raw.append(Finding(rule, self.path, node.lineno, msg))
+
+    def visit_Assert(self, node: ast.Assert) -> None:
+        if self.jit_reachable:
+            self._add("bare-assert", node,
+                      "bare `assert` in jit-reachable code; raise "
+                      "ValueError at build time or use the checkify mode")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        fn = node.func
+        dotted = _dotted(fn)
+        # .item() / .block_until_ready() on anything
+        if isinstance(fn, ast.Attribute):
+            if fn.attr == "item" and not node.args and not node.keywords:
+                if self.jit_reachable:
+                    self._add("host-sync", node,
+                              "`.item()` forces a device sync")
+            if fn.attr == "block_until_ready":
+                self._add("block-until-ready", node,
+                          "`.block_until_ready()` outside the engine's "
+                          "designated sync point")
+        if dotted is not None:
+            tail = dotted.split(".", 1)
+            if dotted in ("jax.device_get",) and self.jit_reachable:
+                self._add("host-sync", node,
+                          "`jax.device_get` forces a device sync")
+            if (self.jit_reachable and len(tail) == 2
+                    and tail[0] in ("np", "numpy")
+                    and tail[1] in _NP_SYNC):
+                self._add("host-sync", node,
+                          f"`{dotted}` on a traced value forces a device "
+                          "sync (use jnp, or move to the host boundary)")
+            if (self.hot_path and len(tail) == 2 and tail[0] == "jnp"
+                    and tail[1] in _HOT_OPS):
+                self._add("hot-path-op", node,
+                          f"`{dotted}` is banned on the serving hot path "
+                          "(eliminated in PR 3)")
+        if (self.jit_reachable and isinstance(fn, ast.Name)
+                and fn.id in ("int", "float") and len(node.args) == 1
+                and isinstance(node.args[0], (ast.Attribute, ast.Subscript))
+                and not _is_shape_access(node.args[0])):
+            self._add("host-sync", node,
+                      f"`{fn.id}()` on an array expression forces a "
+                      "device sync")
+        self.generic_visit(node)
+
+
+def _is_shape_access(node: ast.AST) -> bool:
+    """``x.shape`` / ``x.shape[i]`` / ``x.ndim`` — Python ints already on
+    the host; ``int()`` on them is not a sync."""
+    if isinstance(node, ast.Subscript):
+        node = node.value
+    return isinstance(node, ast.Attribute) and node.attr in ("shape", "ndim")
+
+
+def _span_lines(tree: ast.AST, finding: Finding) -> range:
+    """Lines a finding's pragma may live on: the node's span plus the
+    line above.  (We re-walk cheaply: pragma resolution only needs the
+    flagged line; multi-line calls keep their pragma on the first line.)
+    """
+    return range(max(finding.line - 1, 1), finding.line + 1)
+
+
+def lint_source(source: str, path: str, jit_reachable: bool,
+                hot_path: bool) -> List[Finding]:
+    """Lint one file's source text with explicit scope flags (the fixture
+    corpus forces both True; :func:`lint_tree` derives them from the
+    path)."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:                      # pragma: no cover
+        return [Finding("parse-error", path, e.lineno or 0, str(e))]
+    v = _Visitor(path, jit_reachable, hot_path)
+    v.visit(tree)
+    lines = source.splitlines()
+    pragmas = _pragmas(lines)
+    out = []
+    for f in v.raw:
+        disabled: Set[str] = set()
+        # the flagged line, every line of a multi-line statement ending at
+        # the flagged line, and the line immediately above
+        for ln in (f.line - 1, f.line):
+            disabled |= pragmas.get(ln, set())
+        # pragma anywhere on the continuation lines of the same statement
+        for ln, rules in pragmas.items():
+            if f.line < ln <= f.line + 4 and _continues(lines, f.line, ln):
+                disabled |= rules
+        if f.rule in disabled or "all" in disabled:
+            continue
+        out.append(f)
+    return out
+
+
+def _continues(lines: Sequence[str], start: int, ln: int) -> bool:
+    """True if line ``ln`` (1-based) is plausibly a continuation of the
+    statement starting at ``start`` (open parens carry over)."""
+    depth = 0
+    for i in range(start - 1, min(ln, len(lines))):
+        text = lines[i].split("#", 1)[0]
+        depth += (text.count("(") + text.count("[")
+                  - text.count(")") - text.count("]"))
+        if depth <= 0 and i >= start - 1 and i + 1 < ln:
+            return False
+    return True
+
+
+def _scope(rel: str) -> Dict[str, bool]:
+    return {
+        "jit_reachable": any(rel.startswith(m) for m in JIT_MODULES),
+        "hot_path": any(rel.startswith(m) for m in HOT_PATH_MODULES),
+    }
+
+
+def lint_file(path: Path, root: Optional[Path] = None,
+              jit_reachable: Optional[bool] = None,
+              hot_path: Optional[bool] = None) -> List[Finding]:
+    """Lint one file.  Scope flags default from the path relative to
+    ``root`` (the ``src/repro`` package dir); pass them explicitly to
+    force (the fixture-corpus tests do)."""
+    path = Path(path)
+    root = Path(root) if root is not None else _default_root()
+    try:
+        rel = str(path.resolve().relative_to(root.resolve()))
+    except ValueError:
+        rel = path.name
+    sc = _scope(rel)
+    if jit_reachable is not None:
+        sc["jit_reachable"] = jit_reachable
+    if hot_path is not None:
+        sc["hot_path"] = hot_path
+    return lint_source(path.read_text(), rel, **sc)
+
+
+def _default_root() -> Path:
+    return Path(__file__).resolve().parent.parent
+
+
+def lint_tree(root: Optional[Path] = None) -> List[Finding]:
+    """Lint every ``.py`` file under the ``repro`` package."""
+    root = Path(root) if root is not None else _default_root()
+    findings: List[Finding] = []
+    for p in sorted(root.rglob("*.py")):
+        findings.extend(lint_file(p, root=root))
+    return findings

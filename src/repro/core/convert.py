@@ -47,8 +47,9 @@ def _pack_leaf(w: jax.Array, sparsity: float, policy: str,
         # stacked experts [E, K, N]: fold E into K; blocks never straddle
         # experts as long as K % bk == 0 (asserted).
         e, k, n = w.shape
-        assert k % block[0] == 0, (
-            f"expert in-dim {k} must be a multiple of bk={block[0]}")
+        if k % block[0] != 0:
+            raise ValueError(
+                f"expert in-dim {k} must be a multiple of bk={block[0]}")
         w = w.reshape(e * k, n)
     mask = make_mask(w, sparsity, policy, block)
     if mode == "int8":

@@ -85,6 +85,7 @@ def make_mask(w: jax.Array, sparsity: float, policy: str = "balanced",
     if policy == "balanced":
         return prune_balanced(w, sparsity, block)
     if policy == "wanda":
-        assert act_norm is not None, "wanda needs per-input-channel act norms"
+        if act_norm is None:
+            raise ValueError("wanda needs per-input-channel act norms")
         return prune_wanda(w, act_norm, sparsity)
     raise ValueError(f"unknown pruning policy {policy!r}")

@@ -115,7 +115,8 @@ class BlockSparseWeight:
 
 def pack_nibbles(v: jax.Array) -> jax.Array:
     """int8 ``[..., C]`` in [-8, 7] -> uint8 ``[..., C//2]`` (lo | hi<<4)."""
-    assert v.shape[-1] % 2 == 0
+    if v.shape[-1] % 2 != 0:
+        raise ValueError(f"nibble packing needs an even channel dim, got {v.shape[-1]}")
     u = v.astype(jnp.uint8) & jnp.uint8(0xF)
     lo, hi = u[..., 0::2], u[..., 1::2]
     return lo | (hi << jnp.uint8(4))
@@ -144,7 +145,8 @@ def pack_bits(mask: jax.Array) -> jax.Array:
     Bit ``b`` of word ``j`` corresponds to flat position ``32*j + b``.
     """
     l = mask.shape[-1]
-    assert l % 32 == 0, f"mask length {l} not a multiple of 32"
+    if l % 32 != 0:
+        raise ValueError(f"mask length {l} not a multiple of 32")
     m = mask.astype(jnp.uint32).reshape(*mask.shape[:-1], l // 32, 32)
     shifts = jnp.arange(32, dtype=jnp.uint32)
     return jnp.sum(m << shifts, axis=-1, dtype=jnp.uint32)
@@ -259,7 +261,8 @@ def pack(w: jax.Array,
       scale: optional per-output-channel scale to carry (int8 mode).
     """
     bk, bn = block
-    assert (bk * bn) % 32 == 0
+    if (bk * bn) % 32 != 0:
+        raise ValueError(f"block {block} must cover a multiple of 32 entries")
     wb = _to_blocks(w, block, pad_to_blocks)              # [Kb, Nb, L]
     mb = _to_blocks(mask.astype(w.dtype), block, pad_to_blocks) > 0
 
@@ -291,7 +294,8 @@ def repack_capacity(sw: BlockSparseWeight, capacity: int) -> BlockSparseWeight:
     engine repack padded values only, which could leave a bitmap claiming
     entries whose values had been truncated away.)
     """
-    assert not sw.packed4, "repack of nibble-packed int4 not supported"
+    if sw.packed4:
+        raise ValueError("repack of nibble-packed int4 not supported")
     cap = int(capacity)
     if cap == sw.capacity:
         return sw

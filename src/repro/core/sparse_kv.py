@@ -79,7 +79,8 @@ def freeze_prefix(k: jax.Array, v: jax.Array,
     decode); False keeps the flat [(B*Hkv*Sb), 1, ...] layout.
     """
     b, hkv, s, d = k.shape
-    assert s % bs == 0, f"prefix length {s} must be a multiple of {bs}"
+    if s % bs != 0:
+        raise ValueError(f"prefix length {s} must be a multiple of {bs}")
     kf = k.reshape(b * hkv * s, d)
     vf = v.reshape(b * hkv * s, d)
     k_sp = pack(kf, prune_kv(kf, k_sparsity), block=(bs, d),
@@ -134,7 +135,8 @@ def refreeze(cache: SparseKVCache,
     """
     b, hkv, t, d = cache.k_tail.shape
     bs = cache.k_sp.block[0]
-    assert t % bs == 0, f"tail {t} not a multiple of block {bs}"
+    if t % bs != 0:
+        raise ValueError(f"tail {t} not a multiple of block {bs}")
     structured = cache.k_sp.bitmap.ndim == 5
     k_pref = unpack(cache.k_sp)
     v_pref = unpack(cache.v_sp)
@@ -155,7 +157,8 @@ def maybe_refreeze(cache: SparseKVCache, k_sparsity: float,
     """Host-side helper: refreeze when the tail is full (static check via
     concrete tail_len; used by the serving engine between jitted steps)."""
     t = cache.k_tail.shape[2]
-    if int(cache.tail_len) >= t:
+    # documented sync: this helper is the host boundary by design
+    if int(cache.tail_len) >= t:  # jitlint: disable=host-sync
         return refreeze(cache, k_sparsity, v_sparsity)
     return cache
 
@@ -186,7 +189,8 @@ def freeze_chunk_blocks(k: jax.Array, v: jax.Array,
     inside a once-compiled ``jax.jit``.
     """
     b, hkv, c, d = k.shape
-    assert c % bs == 0, (c, bs)
+    if c % bs != 0:
+        raise ValueError(f"context {c} not a multiple of block {bs}")
     nb = c // bs
 
     def block_masks(a, sparsity):

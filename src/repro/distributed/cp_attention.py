@@ -63,7 +63,8 @@ def sparse_decode_attention_cp(q: jax.Array, cache: SparseKVCache,
     mesh = ctx.mesh
     b, hq, d = q.shape
     kb = cache.k_sp.bitmap
-    assert kb.ndim == 5, "context-parallel path needs the structured layout"
+    if kb.ndim != 5:
+        raise ValueError("context-parallel path needs the structured layout")
     sb = kb.shape[2]
 
     dp = ctx.rules.get("batch")

@@ -44,7 +44,8 @@ def dense_matmul_pallas(x: jax.Array, w: jax.Array,
     tm, bk, bn = block
     m, k = x.shape
     k2, n = w.shape
-    assert k == k2
+    if k != k2:
+        raise ValueError(f"inner dims disagree: x has K={k}, w has K={k2}")
     mp, kp, np_ = -(-m // tm) * tm, -(-k // bk) * bk, -(-n // bn) * bn
     x = jnp.pad(x, ((0, mp - m), (0, kp - k)))
     w = jnp.pad(w, ((0, kp - k), (0, np_ - n)))

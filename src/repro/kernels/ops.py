@@ -33,7 +33,8 @@ _BACKEND = "tpu" if jax.default_backend() == "tpu" else "xla"
 
 def set_backend(name: str) -> None:
     global _BACKEND
-    assert name in ("tpu", "interpret", "xla"), name
+    if name not in ("tpu", "interpret", "xla"):
+        raise ValueError(f"unknown backend {name!r}")
     _BACKEND = name
 
 
@@ -174,7 +175,8 @@ def sparse_decode_attention(q: jax.Array,
         return o[:, None]
     panel = q.ndim == 4
     if panel:
-        assert has_tail, "query panels append into (and need) a dense tail"
+        if not has_tail:
+            raise ValueError("query panels append into (and need) a dense tail")
     if interp is None:
         if panel:
             return ref.sparse_decode_attention_panel_ref(
@@ -194,7 +196,8 @@ def sparse_decode_attention(q: jax.Array,
         qn = 1
     g = hq // hkv
     bs = k_sp.block[0]
-    assert k_sp.block[1] == d
+    if k_sp.block[1] != d:
+        raise ValueError(f"KV block width {k_sp.block[1]} must equal head dim {d}")
     words = k_sp.bitmap.shape[-1]
     if k_sp.bitmap.ndim == 5:       # structured [B, Hkv, Sb, 1, X]
         sb = k_sp.bitmap.shape[2]

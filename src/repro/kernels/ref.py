@@ -49,8 +49,9 @@ def sparse_matmul_int8_ref(x: jax.Array, sw: BlockSparseWeight,
     int32 accumulation, per-channel rescale.  ``sw.values`` is int8 (or
     nibble-packed int4 — ``unpack`` dequantizes to int8 first, exactly the
     paper's prescription)."""
-    assert (sw.values.dtype == jnp.int8 or sw.packed4) \
-        and sw.scale is not None
+    if not ((sw.values.dtype == jnp.int8 or sw.packed4)
+            and sw.scale is not None):
+        raise ValueError("int path needs int8/int4 values and a scale")
     xq, sx = quantize_act_int8(x)
     w = unpack(sw, trim=False)                       # int8, padded
     kp = w.shape[0]

@@ -277,10 +277,12 @@ def sparse_decode_attention_fused_pallas(
     """
     b, hkv, qg, d = q.shape
     g = group or qg
-    assert qg % g == 0, (qg, g)
+    if qg % g != 0:
+        raise ValueError(f"query panel {qg} not a multiple of group {g}")
     paged = block_table is not None
     if paged:
-        assert k_bitmap.ndim == 3, k_bitmap.shape   # [n_phys, Hkv, X] arena
+        if k_bitmap.ndim != 3:   # [n_phys, Hkv, X] arena
+            raise ValueError(f"paged arena must be rank-3, got {k_bitmap.shape}")
         sb = block_table.shape[1]
         # rank-4 views so the block shapes match the flat layout's
         # (1, 1, 1, X) fetches: physical block axis leads, Hkv second
@@ -290,7 +292,8 @@ def sparse_decode_attention_fused_pallas(
     else:
         sb = k_bitmap.shape[2]
     tp = k_tail.shape[2]
-    assert sb >= 1 and tp >= bs and tp % bs == 0, (sb, tp, bs)
+    if not (sb >= 1 and tp >= bs and tp % bs == 0):
+        raise ValueError(f"bad geometry: sb={sb}, tail={tp}, block={bs}")
     tb = tp // bs
     words = k_bitmap.shape[3]
     ck, cv = k_values.shape[3], v_values.shape[3]

@@ -52,7 +52,8 @@ def sparse_gemv_pallas(x: jax.Array, sw: BlockSparseWeight,
     cap = sw.capacity
     m, k = x.shape
     tm = 8
-    assert m <= tm, f"gemv path is for m<={tm}, got {m}"
+    if m > tm:
+        raise ValueError(f"gemv path is for m<={tm}, got {m}")
     kp = kb * bk
     x = jnp.pad(x, ((0, tm - m), (0, kp - k)))
     out_dtype = out_dtype or x.dtype

@@ -51,7 +51,8 @@ def sparse_matmul_int4_pallas(xq: jax.Array, sx: jax.Array,
                               tm: int = 128, out_dtype=jnp.float32,
                               interpret: bool = True) -> jax.Array:
     """``dequant(xq, sx) @ dequant4(sw)``; xq int8 [M, K], sx f32 [M]."""
-    assert sw.packed4 and sw.scale is not None
+    if not (sw.packed4 and sw.scale is not None):
+        raise ValueError("int4 path needs nibble-packed values and a scale")
     bk, bn = sw.block
     kb, nb, words = sw.bitmap.shape
     cap_packed = sw.values.shape[-1]

@@ -44,7 +44,8 @@ def sparse_matmul_int8_pallas(xq: jax.Array, sx: jax.Array,
                               tm: int = 128, out_dtype=jnp.float32,
                               interpret: bool = True) -> jax.Array:
     """``dequant(xq, sx) @ dequant(sw)``; xq int8 [M, K], sx f32 [M]."""
-    assert sw.values.dtype == jnp.int8 and sw.scale is not None
+    if not (sw.values.dtype == jnp.int8 and sw.scale is not None):
+        raise ValueError("int8 path needs int8 values and a scale")
     bk, bn = sw.block
     kb, nb, words = sw.bitmap.shape
     cap = sw.capacity

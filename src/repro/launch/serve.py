@@ -38,7 +38,7 @@ from repro.distributed import ShardCtx, NULL_CTX, default_rules
 from repro.distributed.convert_plan import convert_concrete
 from repro.models import lm
 from repro.serving import (Engine, ContinuousEngine, SamplingParams,
-                           SpecConfig)
+                           SpecConfig, stable_trace_counts)
 
 
 def main(argv=None):
@@ -87,6 +87,11 @@ def main(argv=None):
                          "shard over the data axis, KV heads over the "
                          "model axis; greedy output is token-identical "
                          "to the unsharded engine")
+    ap.add_argument("--audit", action="store_true",
+                    help="stream mode: retrace audit — serve one warmup "
+                         "request, snapshot stable_trace_counts(), then "
+                         "fail (nonzero exit) if any jitted entry point "
+                         "retraces during the real stream")
     # sampling (0 temperature = greedy; each request gets its own seed)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
@@ -95,6 +100,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.spec_adaptive and not args.spec_k:
         ap.error("--spec-adaptive requires --spec-k >= 1")
+    if args.audit and args.one_shot:
+        ap.error("--audit is stream-mode only (the one-shot engine has no "
+                 "warmup/steady-state split to audit)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -124,10 +132,13 @@ def main(argv=None):
     if not one_shot:
         try:
             lm._attn_kinds(cfg)
-        except AssertionError:
+        except ValueError:
             print(f"[serve] {cfg.family}/frontend={bool(cfg.frontend)} has "
                   "no continuous-batching path yet; falling back to the "
                   "one-shot engine (see --one-shot)")
+            if args.audit:
+                raise SystemExit("[serve] --audit needs the "
+                                 "continuous-batching path")
             one_shot = True
     if one_shot:
         batch = {"tokens": prompts[:args.batch]}
@@ -190,6 +201,18 @@ def main(argv=None):
         kv_key = next(k for k in place if k.endswith("k_values"))
         print(f"[serve] placement: pos={place['pos']} "
               f"kv={ {kv_key: place[kv_key]} }")
+    baseline = None
+    if args.audit:
+        # warmup: one request touches every entry point (submit/prefill/
+        # decode/refreeze/release; verify when --spec-k), populating the
+        # jit caches — steady-state serving must not add a single trace
+        sp0 = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                             top_p=args.top_p, seed=args.seed,
+                             max_new_tokens=max(args.steps, 2))
+        eng.submit(np.asarray(prompts[0][:args.prompt_len]), sp0)
+        eng.run()
+        baseline = stable_trace_counts(eng.trace_counts())
+        print(f"[serve] audit: warmup traces {baseline}")
     rng = np.random.default_rng(0)
     t0 = time.time()
     rids = []
@@ -229,6 +252,14 @@ def main(argv=None):
             print(f"[serve] spec: adaptive proposal histogram "
                   f"{eng.adaptive_hist.tolist()} "
                   f"(index = drafts proposed/tick)")
+    if args.audit:
+        final = stable_trace_counts(eng.trace_counts())
+        drift = {k: (baseline.get(k, 0), v) for k, v in final.items()
+                 if v != baseline.get(k, 0)}
+        if drift:
+            print(f"[serve] audit: RETRACE DRIFT (warmup -> exit): {drift}")
+            return 1
+        print(f"[serve] audit: zero retraces after warmup ({final})")
     return 0
 
 

@@ -85,7 +85,8 @@ def _project_kv(p, x, cfg):
 
 
 def _repeat_kv(k: jax.Array, g: int) -> jax.Array:
-    return jnp.repeat(k, g, axis=1)
+    # train/prefill only; the decode kernels expand groups in-register
+    return jnp.repeat(k, g, axis=1)  # jitlint: disable=hot-path-op
 
 
 # ---------------------------------------------------------------------------
@@ -281,20 +282,25 @@ def pooled_attn_prefill_chunk(p, x: jax.Array, kv: Dict[str, jax.Array],
 
     if table_row is not None:
         # gather the slot's logical blocks out of the shared arena, then
-        # decompress exactly as the flat path would
+        # decompress exactly as the flat path would.  Explicit clip mode:
+        # table entries are clipped in range at write time, and the jaxpr
+        # audit (repro.analysis) rejects PROMISE_IN_BOUNDS arena access
+        arena = lambda a: jnp.take(a, table_row, axis=0, mode="clip")
         view = lambda bm, vl: pooled_view(
-            bm[table_row].transpose(1, 0, 2)[None],
-            vl[table_row].transpose(1, 0, 2)[None], bs, hd)
+            arena(bm).transpose(1, 0, 2)[None],
+            arena(vl).transpose(1, 0, 2)[None], bs, hd)
         k_ctx = unpack(view(kv["k_bitmap"], kv["k_values"]))
         v_ctx = unpack(view(kv["v_bitmap"], kv["v_values"]))
     else:
         k_ctx = unpack(pooled_view(kv["k_bitmap"], kv["k_values"], bs, hd))
         v_ctx = unpack(pooled_view(kv["v_bitmap"], kv["v_values"], bs, hd))
     s_ctx = k_ctx.shape[2]
-    kv_valid = jnp.concatenate(
+    # prefill-chunk path: concat over the static chunk width, not the
+    # per-token decode loop  # jitlint: disable=hot-path-op
+    kv_valid = jnp.concatenate(  # jitlint: disable=hot-path-op
         [jnp.arange(s_ctx) < ctx_len, jnp.ones((c,), bool)])[None, :]
-    kk = _repeat_kv(jnp.concatenate([k_ctx.astype(k.dtype), k], axis=2), g)
-    vv = _repeat_kv(jnp.concatenate([v_ctx.astype(v.dtype), v], axis=2), g)
+    kk = _repeat_kv(jnp.concatenate([k_ctx.astype(k.dtype), k], axis=2), g)  # jitlint: disable=hot-path-op
+    vv = _repeat_kv(jnp.concatenate([v_ctx.astype(v.dtype), v], axis=2), g)  # jitlint: disable=hot-path-op
     sm = 1.0 / hd ** 0.5
     o = full_attention(q, kk, vv, sm, causal=True, kv_valid=kv_valid)
     o = o.transpose(0, 2, 1, 3).reshape(b, c, hq * hd)

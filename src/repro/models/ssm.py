@@ -133,7 +133,8 @@ def mamba_decode(p, x_t: jax.Array, state, cfg) -> Tuple[jax.Array, Any]:
     rank = p["dt_w"].shape[0]
     xz = ops.linear(x_t, p["w_in"])
     x_in, z = jnp.split(xz, 2, axis=-1)                      # [B,di]
-    window = jnp.concatenate(
+    # fixed-width conv window shift (static shapes; ssm is not pooled)
+    window = jnp.concatenate(  # jitlint: disable=hot-path-op
         [state["conv"], x_in.astype(jnp.float32)[:, None]], axis=1)
     xc = jnp.einsum("bcd,cd->bd", window, p["conv_w"]) + p["conv_b"]
     xc = jax.nn.silu(xc)

@@ -46,12 +46,14 @@ vectors it hands out.
 from __future__ import annotations
 
 import dataclasses
+import os
 from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import checkify as _checkify
 
 from repro.core.sparse_format import _ceil_to, LANE
 from repro.core.sparse_kv import append_tail_panel, freeze_chunk_blocks
@@ -75,11 +77,13 @@ class CachePool:
     cap_v: int
     paged: bool = False      # pool-global arena + per-slot block table
     n_phys: int = 0          # physical blocks in the paged arena
+    checkify: bool = False   # opt-in sanitized mode (see ``checkified``)
 
     @classmethod
     def build(cls, cfg, slots: int, max_tokens: int,
               bs: int = 0, capacity_slack: float = 1.25,
-              paged: bool = False, n_phys: int = 0) -> "CachePool":
+              paged: bool = False, n_phys: int = 0,
+              checkify: Optional[bool] = None) -> "CachePool":
         """Size a pool for ``slots`` concurrent requests of up to
         ``max_tokens`` context each.
 
@@ -101,7 +105,7 @@ class CachePool:
         """
         try:
             lm._attn_kinds(cfg)   # ssm/hybrid/encdec/frontend families
-        except AssertionError as e:
+        except ValueError as e:
             raise ValueError(
                 f"CachePool cannot serve arch {cfg.name!r} "
                 f"(family {cfg.family!r}): {e}") from None
@@ -122,10 +126,12 @@ class CachePool:
         max_blocks = max(-(-int(max_tokens) // bs), 1)
         if paged:
             n_phys = n_phys or slots * max_blocks
+        if checkify is None:
+            checkify = os.environ.get("REPRO_CHECKIFY", "0") not in ("", "0")
         return cls(cfg=cfg, slots=slots, max_blocks=max_blocks, bs=bs,
                    tail=cfg.kv_tail, cap_k=cap(cfg.kv_k_sparsity),
                    cap_v=cap(cfg.kv_v_sparsity), paged=paged,
-                   n_phys=n_phys if paged else 0)
+                   n_phys=n_phys if paged else 0, checkify=checkify)
 
     # -- geometry -----------------------------------------------------------
     @property
@@ -142,6 +148,16 @@ class CachePool:
         return sum(int(np.prod(l.shape)) * l.dtype.itemsize
                    for l in jax.tree_util.tree_leaves(
                        jax.eval_shape(self.init_state)))
+
+    # -- sanitized mode -----------------------------------------------------
+    def _check(self, pred, msg: str) -> None:
+        """Emit a checkify invariant when the pool was built with
+        ``checkify=True`` (no-op otherwise, so the default engine path
+        traces zero check primitives).  Eager callers fail immediately
+        with ``JaxRuntimeError``; jitted callers must functionalize via
+        :func:`checkified`."""
+        if self.checkify:
+            _checkify.check(pred, msg)
 
     # -- state --------------------------------------------------------------
     def init_state(self) -> Dict[str, Any]:
@@ -262,12 +278,27 @@ class CachePool:
         full = state["tail_len"] >= t                           # [B]
         pb = state["prefix_blocks"]
         if self.paged:
-            assert new_ids is not None, "paged refreeze needs fresh ids"
+            if new_ids is None:
+                raise ValueError("paged refreeze needs fresh ids")
             # masked flat scatter: non-full slots' rows are re-pointed at
             # id == n_phys, which every mode="drop" scatter discards
             ids = jnp.asarray(new_ids, jnp.int32)               # [B, tb]
             drop_ids = jnp.where(full[:, None], ids,
                                  self.n_phys).reshape(-1)       # [B*tb]
+            if self.checkify:
+                # sanitized mode: ids for full slots must be in-arena AND
+                # unreferenced (fresh pages are what guarantees
+                # copy-on-write); id == n_phys sentinel rows are the
+                # intentional drops.  Guarded so the default path traces
+                # zero extra eqns.
+                live_id = drop_ids < self.n_phys
+                self._check(jnp.all(jnp.where(live_id, drop_ids >= 0,
+                                              True)),
+                            "refreeze: fresh id out of arena range")
+                rc = jnp.take(state["refcount"], drop_ids, mode="clip")
+                self._check(jnp.all(jnp.where(live_id, rc == 0, True)),
+                            "refreeze: fresh id already referenced "
+                            "(copy-on-write violation)")
         new_layers = {}
         for name, leaf in state["layers"].items():
             kv = leaf["kv"]
@@ -308,6 +339,10 @@ class CachePool:
                 "v_values": write(kv["v_values"], v_vl),
             }}
         grow = jnp.where(full, tb, 0).astype(jnp.int32)
+        if self.checkify:
+            self._check(jnp.all(jnp.where(full, pb + tb <= self.max_blocks,
+                                          True)),
+                        "refreeze: full slot would overflow max_blocks")
         out = {**state, "layers": new_layers,
                "prefix_blocks": pb + grow,
                "tail_len": jnp.where(full, 0, state["tail_len"])}
@@ -336,9 +371,18 @@ class CachePool:
         ``slot``/``n`` scalar int32.  Paged pools only.  Pure data motion
         at static shapes: admitting a hit of any length reuses one trace.
         """
-        assert self.paged, "assign_blocks is a paged-pool transition"
+        if not self.paged:
+            raise ValueError("assign_blocks is a paged-pool transition")
         sb = self.max_blocks
         live = jnp.arange(sb) < n
+        if self.checkify:
+            self._check(jnp.all((jnp.asarray(n) >= 0)
+                                & (jnp.asarray(n) <= sb)),
+                        "assign_blocks: n out of range")
+            self._check(jnp.all(jnp.where(live,
+                                          (ids >= 0) & (ids < self.n_phys),
+                                          True)),
+                        "assign_blocks: block id out of arena range")
         row = jnp.where(live, jnp.clip(ids, 0, self.n_phys - 1), 0)
         table = jax.lax.dynamic_update_slice(
             state["table"], row[None].astype(jnp.int32), (slot, 0))
@@ -427,11 +471,53 @@ class CachePool:
         if self.paged:
             live = rel[:, None] & (jnp.arange(self.max_blocks)[None, :]
                                    < state["prefix_blocks"][:, None])
+            if self.checkify:
+                rc = jnp.take(state["refcount"], state["table"],
+                              mode="clip")
+                self._check(jnp.all(jnp.where(live, rc > 0, True)),
+                            "release: refcount underflow (device double "
+                            "free)")
             ids = jnp.where(live, state["table"],
                             self.n_phys).reshape(-1)
             out["refcount"] = state["refcount"].at[ids].add(-1, mode="drop")
             out["table"] = jnp.where(rel[:, None], 0, state["table"])
         return out
+
+
+# errors screened by the sanitized mode: the pool's own checkify.check
+# invariants plus NaN and div-by-zero.  Built-in index OOB checks are
+# deliberately NOT enabled — the pool's ``mode="drop"`` scatters use
+# id == n_phys as an intentional out-of-range sentinel, which the generic
+# OOB screen cannot distinguish from a bug; OOB discipline is covered by
+# the explicit sentinel-aware checks above instead.
+POOL_CHECKS = (_checkify.user_checks | _checkify.nan_checks
+               | _checkify.div_checks)
+
+
+def checkified_raw(fn: Callable) -> Callable:
+    """The jit-composable half of :func:`checkified`: returns the
+    functionalized transition ``(err, out) = fn'(*args)`` without the
+    host-side throw (the engine jits this and throws at its own sync
+    boundary)."""
+    return _checkify.checkify(fn, errors=POOL_CHECKS)
+
+
+def checkified(fn: Callable) -> Callable:
+    """Functionalize a pool transition for the sanitized mode.
+
+    ``CachePool(checkify=True)`` (or env ``REPRO_CHECKIFY=1``) plants
+    ``checkify.check`` invariants in the transitions; those raise eagerly
+    but cannot be traced by a plain ``jax.jit``.  This wrapper runs the
+    transition under :func:`jax.experimental.checkify.checkify` and throws
+    the first accumulated error on the host — usable under jit.
+    """
+    checked = _checkify.checkify(fn, errors=POOL_CHECKS)
+
+    def run(*args, **kwargs):
+        err, out = checked(*args, **kwargs)
+        err.throw()
+        return out
+    return run
 
 
 class BlockAllocator:
@@ -468,7 +554,8 @@ class BlockAllocator:
         return len(self._free) + len(self._cached)
 
     def refcount(self, bid: int) -> int:
-        return int(self._ref[bid])
+        # host numpy bookkeeping array, not a device value
+        return int(self._ref[bid])  # jitlint: disable=host-sync
 
     def lookup(self, h: int) -> Optional[int]:
         """Physical id of the block registered under chained hash ``h``."""
@@ -525,7 +612,8 @@ class BlockAllocator:
         parks in the LRU if its content hash is registered (revivable),
         else returns to the free stack."""
         for bid in ids:
-            assert self._ref[bid] > 0, f"double free of block {bid}"
+            if not self._ref[bid] > 0:
+                raise RuntimeError(f"double free of block {bid}")
             self._ref[bid] -= 1
             if self._ref[bid] == 0:
                 h = next((hh for hh, ii in self._hash2id.items()

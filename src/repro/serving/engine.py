@@ -39,6 +39,7 @@ from repro.models.attention import DenseKVCache
 
 from . import sampling
 from .cache_pool import BlockAllocator, CachePool
+from .cache_pool import checkified_raw as cache_pool_checkified_raw
 from .sampling import RequestOutput, SamplingParams
 from .scheduler import PrefixTrie, Scheduler, block_hashes
 from .spec import AdaptiveDraft, SpecConfig
@@ -294,7 +295,8 @@ class ContinuousEngine:
                  prefill_chunk: Optional[int] = None,
                  spec: Optional[SpecConfig] = None,
                  capacity_slack: float = 1.25,
-                 mesh=None, paged: bool = False, phys_blocks: int = 0):
+                 mesh=None, paged: bool = False, phys_blocks: int = 0,
+                 checkify: Optional[bool] = None):
         if mesh is not None:
             # mesh-sharded serving: slots over the data axes, KV heads over
             # the model axis.  The ctx also constrains activations inside
@@ -317,7 +319,12 @@ class ContinuousEngine:
                       if cfg.kv_tail % d == 0)
         self.pool = CachePool.build(cfg, slots, max_tokens, bs=bs,
                                     capacity_slack=capacity_slack,
-                                    paged=paged, n_phys=phys_blocks)
+                                    paged=paged, n_phys=phys_blocks,
+                                    checkify=checkify)
+        if mesh is not None and self.pool.checkify:
+            raise ValueError("checkify mode is unsharded-only: the "
+                             "functionalized error output has no mesh "
+                             "placement")
         # pool storage + per-slot sampling lanes travel as one state pytree
         # through every jitted transition (the pool ops pass unknown keys
         # through untouched)
@@ -348,6 +355,23 @@ class ContinuousEngine:
 
             def _jit(fn, in_s, out_s):
                 return jax.jit(fn, in_shardings=in_s, out_shardings=out_s)
+        elif self.pool.checkify:
+            # sanitized mode: the pool transitions plant checkify.check
+            # invariants, which a plain jit cannot trace — functionalize
+            # each step and throw the accumulated error at the host
+            # boundary.  trace_counts() keeps working through the
+            # forwarded _cache_size.
+            st_sh = tok_sh = vec_sh = rep = par_sh = None
+
+            def _jit(fn, in_s, out_s):
+                checked = jax.jit(cache_pool_checkified_raw(fn))
+
+                def run(*args):
+                    err, out = checked(*args)
+                    err.throw()
+                    return out
+                run._cache_size = checked._cache_size
+                return run
         else:
             st_sh = tok_sh = vec_sh = rep = par_sh = None
 
@@ -517,6 +541,54 @@ class ContinuousEngine:
         if self._verify is not None:
             counts["verify"] = retrace_count(self._verify)
         return counts
+
+    def entry_points(self, chunk: int = 0):
+        """Every registered jitted transition with abstract example args.
+
+        Returns ``{name: (jitted, args)}`` where ``args`` is a tuple of
+        ``ShapeDtypeStruct`` pytrees matching one representative call from
+        :meth:`step`; the names are exactly :meth:`trace_counts` keys.
+        The static analyzer (:mod:`repro.analysis`) traces each entry
+        under these avals to audit its jaxpr and pin its compile manifest
+        without touching real data.  ``chunk`` is the prefill chunk width
+        to describe (default: one block — each distinct width is its own
+        legitimate shape family, see :func:`stable_trace_counts`).
+        """
+        ab = lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)  # noqa: E731
+        p = jax.tree_util.tree_map(ab, self.params)
+        st = jax.tree_util.tree_map(ab, self.state)
+        b, sb = self.pool.slots, self.pool.max_blocks
+        c = chunk or self.pool.bs
+
+        def i32(*shape):
+            return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+        def f32(*shape):
+            return jax.ShapeDtypeStruct(shape, jnp.float32)
+        boolv = jax.ShapeDtypeStruct((b,), jnp.bool_)
+        scalar_b = jax.ShapeDtypeStruct((), jnp.bool_)
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+        out = {"decode": (self._decode, (p, st, i32(b, 1), boolv)),
+               "release": (self._release, (st, i32(b))),
+               "set_lane": (self._set_lane,
+                            (st, i32(), f32(), i32(), f32(), key))}
+        if self.pool.paged:
+            tb = self.pool.tail // self.pool.bs
+            out["prefill_chunk"] = (
+                self._prefill_chunk,
+                (p, st, i32(1, c), i32(), scalar_b, i32(c // self.pool.bs)))
+            out["refreeze"] = (self._refreeze, (st, i32(b, tb)))
+            out["assign"] = (self._assign, (st, i32(), i32(sb), i32()))
+        else:
+            out["prefill_chunk"] = (
+                self._prefill_chunk, (p, st, i32(1, c), i32(), scalar_b))
+            out["refreeze"] = (self._refreeze, (st,))
+        if self._verify is not None:
+            qn = self._spec.k + 1
+            out["verify"] = (self._verify,
+                             (p, st, i32(b, qn), boolv, i32(b)))
+        return out
 
     @property
     def adaptive_hist(self) -> Optional[np.ndarray]:

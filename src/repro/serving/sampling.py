@@ -244,7 +244,8 @@ def _mask_logits_sorted(scaled: jax.Array, top_k: jax.Array,
     path is tested against (identical samples at equal seed).
     """
     v = scaled.shape[-1]
-    sorted_desc = -jnp.sort(-scaled, axis=-1)                    # [B, V]
+    # documented exact-sort fallback (oracle for the bucketed path)
+    sorted_desc = -jnp.sort(-scaled, axis=-1)  # jitlint: disable=hot-path-op
 
     k = jnp.clip(jnp.where(top_k > 0, top_k, v), 1, v)
     kth = jnp.take_along_axis(sorted_desc, (k - 1)[:, None], axis=-1)
@@ -361,7 +362,9 @@ def sample_step(logits: jax.Array, lanes: Dict[str, jax.Array],
     shaping) — the serving engines surface it on
     :attr:`RequestOutput.logprobs`.
     """
-    logits = logits.astype(jnp.float32)
+    # deliberate widening: sampling math runs at f32 (the bf16 tp>1
+    # greedy-drift caveat in BENCH_mesh.json is why this stays explicit)
+    logits = logits.astype(jnp.float32)  # jitlint: disable=dtype-promote
     temp = lanes["temperature"]
     greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
@@ -415,7 +418,8 @@ def accept_step(logits: jax.Array, tokens: jax.Array, draft_len: jax.Array,
     retraces.
     """
     b, qn, v = logits.shape
-    logits = logits.astype(jnp.float32)
+    # deliberate widening: accept math runs at f32 like sample_step's
+    logits = logits.astype(jnp.float32)  # jitlint: disable=dtype-promote
     temp = lanes["temperature"]
     greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # [B, Qn]
 
@@ -446,8 +450,7 @@ def accept_step(logits: jax.Array, tokens: jax.Array, draft_len: jax.Array,
     # serves both cases: positions with a valid draft (j < draft_len)
     # exclude it (the renormalized residual), later positions draw from
     # the lane's distribution unmodified.
-    dpad = jnp.concatenate(
-        [draft_next, jnp.full((b, 1), -1, draft_next.dtype)], axis=1)
+    dpad = jnp.pad(draft_next, ((0, 0), (0, 1)), constant_values=-1)
     jidx = jnp.arange(qn)[None, :]
     excl = ((jnp.arange(v)[None, None, :] == dpad[..., None])
             & (jidx < draft_len[:, None])[..., None])

@@ -106,7 +106,8 @@ def make_compressed_grads(cfg, ctx, scheme: str = "bf16",
     the DCN-crossing reduce operand in the HLO is bf16/int8, not fp32.
     Requires cfg.fsdp == False (params replicated across DP).
     """
-    assert not cfg.fsdp, "compressed-DP requires DP-replicated params"
+    if cfg.fsdp:
+        raise ValueError("compressed-DP requires DP-replicated params")
     mesh = ctx.mesh
     dp = ctx.rules.get("batch")
     dp = tuple(dp) if isinstance(dp, (tuple, list)) else (dp,)

@@ -1,0 +1,10 @@
+"""Fixture: bare asserts inside a jit-reachable pool transition.
+
+Every violation here must be flagged as `bare-assert` and nothing else.
+"""
+
+
+def refreeze(state, fresh_ids, n_phys):
+    assert fresh_ids.shape[0] > 0
+    assert n_phys > 0, "empty arena"
+    return state

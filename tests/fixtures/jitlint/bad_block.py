@@ -1,0 +1,8 @@
+"""Fixture: `.block_until_ready()` outside the engine's sync point.
+
+Must be flagged as `block-until-ready` and nothing else.
+"""
+
+
+def await_tokens(tokens):
+    return tokens.block_until_ready()

@@ -1,0 +1,13 @@
+"""Fixture: host<->device syncs inside a jit-reachable tick helper.
+
+Every violation here must be flagged as `host-sync` and nothing else.
+"""
+import numpy as np
+
+
+def tick(state, cache):
+    tail = int(cache.tail_len)          # sync: concrete read of a field
+    frac = float(state["occupancy"])    # sync: float() on traced value
+    flag = state["done"].item()         # sync: .item()
+    host = np.asarray(state["tokens"])  # sync: np on a traced value
+    return tail, frac, flag, host

@@ -1,0 +1,12 @@
+"""Fixture: banned per-token ops reintroduced on the serving hot path.
+
+Every violation here must be flagged as `hot-path-op` and nothing else.
+"""
+import jax.numpy as jnp
+
+
+def decode_step(kv, new_kv, logits):
+    kv = jnp.concatenate([kv, new_kv], axis=1)   # per-token realloc
+    kv = jnp.repeat(kv, 2, axis=2)               # GQA expansion by copy
+    order = jnp.argsort(logits, axis=-1)         # full-vocab sort per token
+    return kv, jnp.sort(order)

@@ -1,0 +1,27 @@
+"""Fixture: zero findings expected.
+
+Exercises the negative space of every rule — shape-tuple ints are host
+Python already, pragma'd exceptions are documented escapes, and ops that
+merely *look* like banned ones (method names on other objects) pass.
+"""
+import jax.numpy as jnp
+
+
+def sizes(x):
+    # int() over .shape / .ndim is not a sync: shapes are Python ints
+    return int(x.shape[0]), int(x.ndim)
+
+
+def legacy_prefill(chunks):
+    # documented exception: prefill-only path, not per-token
+    return jnp.concatenate(chunks, axis=1)  # jitlint: disable=hot-path-op
+
+
+def sync_boundary(tokens):
+    # the engine's one designated sync point carries the pragma
+    return tokens.block_until_ready()  # jitlint: disable=block-until-ready
+
+
+def not_the_real_thing(db):
+    # `.repeat`/`.sort` as methods of non-jnp objects are out of scope
+    return db.sort(key=len)

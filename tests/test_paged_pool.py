@@ -338,6 +338,107 @@ def test_refcount_conservation_property(ops_seq):
 
 
 # ---------------------------------------------------------------------------
+# sanitized mode: the same transitions under checkify
+# ---------------------------------------------------------------------------
+
+def _checked_paged_pool():
+    cfg = get_config("qwen3-0.6b").reduced()
+    cfg = dataclasses.replace(cfg, kv_k_sparsity=0.0, kv_v_sparsity=0.0,
+                              kv_tail=16)
+    return CachePool.build(cfg, slots=3, max_tokens=64, bs=16, paged=True,
+                           checkify=True)
+
+
+def _checked(fn):
+    """jit the functionalized transition, throw at the call site — the
+    same composition the engine's checkify mode uses."""
+    from repro.serving.cache_pool import checkified_raw
+    checked = jax.jit(checkified_raw(fn))
+
+    def run(*args):
+        err, out = checked(*args)
+        err.throw()
+        return dict(out)
+    return run
+
+
+def test_checkify_clean_refcount_walk():
+    """The shared-prefix lifetime (freeze twice, admit on a hit, CoW
+    diverge, batched release) runs unchanged under the sanitized mode —
+    every transition carries live checkify invariants and none fires."""
+    pool = _checked_paged_pool()
+    assert pool.checkify
+    tb = pool.tail // pool.bs
+    state = pool.init_state()
+    refreeze = _checked(pool.refreeze)
+    assign = _checked(pool.assign_blocks)
+    release = _checked(pool.release)
+
+    for newpage in range(2):
+        fill = jnp.asarray([16, 0, 0], jnp.int32)
+        state = dict(state, tail_len=fill, pos=state["pos"] + fill)
+        ids = np.zeros((pool.slots, tb), np.int32)
+        ids[0] = [newpage]
+        state = refreeze(state, jnp.asarray(ids))
+    pad = np.zeros(pool.max_blocks, np.int32)
+    pad[:2] = [0, 1]
+    state = assign(state, jnp.int32(1), jnp.asarray(pad), jnp.int32(2))
+    fill = jnp.asarray([0, 16, 0], jnp.int32)
+    state = dict(state, tail_len=fill, pos=state["pos"] + fill)
+    ids = np.zeros((pool.slots, tb), np.int32)
+    ids[1] = [2]
+    state = refreeze(state, jnp.asarray(ids))
+    rel = np.full(pool.slots, -1, np.int32)
+    rel[:2] = [0, 1]
+    state = release(state, jnp.asarray(rel))
+    assert np.asarray(state["refcount"]).sum() == 0
+
+
+def test_checkify_catches_cow_violation():
+    """Refreezing onto a page another slot still references is the
+    copy-on-write violation the sanitized mode exists to catch."""
+    from jax.experimental.checkify import JaxRuntimeError
+    pool = _checked_paged_pool()
+    tb = pool.tail // pool.bs
+    state = pool.init_state()
+    refreeze = _checked(pool.refreeze)
+
+    fill = jnp.asarray([16, 0, 0], jnp.int32)
+    state = dict(state, tail_len=fill, pos=state["pos"] + fill)
+    ids = np.zeros((pool.slots, tb), np.int32)
+    state = refreeze(state, jnp.asarray(ids))       # slot 0 -> page 0
+    fill = jnp.asarray([0, 16, 0], jnp.int32)
+    state = dict(state, tail_len=fill, pos=state["pos"] + fill)
+    ids = np.zeros((pool.slots, tb), np.int32)      # slot 1 -> page 0 again
+    with pytest.raises(JaxRuntimeError, match="already referenced"):
+        refreeze(state, jnp.asarray(ids))
+
+
+def test_checkify_catches_release_underflow():
+    from jax.experimental.checkify import JaxRuntimeError
+    pool = _checked_paged_pool()
+    state = pool.init_state()
+    state["prefix_blocks"] = jnp.asarray([1, 0, 0], jnp.int32)
+    state["table"] = state["table"].at[0, 0].set(3)
+    state["pos"] = jnp.asarray([16, 0, 0], jnp.int32)
+    # refcount[3] left at 0: a device-side double free
+    release = _checked(pool.release)
+    with pytest.raises(JaxRuntimeError, match="underflow"):
+        release(state, jnp.int32(0))
+
+
+def test_checkify_off_traces_no_check_eqns():
+    """The default pool must trace ZERO check primitives — sanitized mode
+    is opt-in, not a tax."""
+    cfg, pool = _paged_pool()
+    assert not pool.checkify
+    state = pool.init_state()
+    ids = jnp.zeros((pool.slots, pool.tail // pool.bs), jnp.int32)
+    jaxpr = str(jax.make_jaxpr(pool.refreeze)(state, ids))
+    assert "check " not in jaxpr and "check[" not in jaxpr
+
+
+# ---------------------------------------------------------------------------
 # host side: allocator + prefix trie
 # ---------------------------------------------------------------------------
 
@@ -357,7 +458,7 @@ def test_block_allocator_lru_eviction_and_revival():
     assert alloc.lookup(100) is None and alloc.lookup(200) == b
     alloc.decref([c])             # unregistered: straight to the free list
     assert alloc.free_blocks() == 1
-    with pytest.raises(AssertionError, match="double free"):
+    with pytest.raises(RuntimeError, match="double free"):
         alloc.decref([c])
     with pytest.raises(RuntimeError, match="exhausted"):
         alloc.alloc(2)            # only 1 reclaimable (b, d live)
