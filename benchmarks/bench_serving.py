@@ -28,15 +28,31 @@ shapes on the available devices (force a host-device count with
 decode trace counts (must stay 1), and greedy-token agreement with the
 1-device engine; written to ``BENCH_mesh.json``.
 
+``--overload`` drives a bounded-queue paged engine with deliberately more
+offered load than capacity (tight deadlines + ``max_queue``) and reports
+*goodput* (tokens from normally-finished requests per second) alongside
+shed/timeout rates, then replays a seeded :class:`FaultPlan` across every
+engine fault site and asserts the run is crash-free with flat steady-state
+traces; written to ``BENCH_faults.json``.
+
+``--restart`` measures what a warm restart is worth: a shared-prefix wave
+freezes pages, ``save_snapshot`` persists them, and a follow-up wave's
+TTFT is compared between a cold fresh engine and a fresh engine that
+``load_snapshot``-ed first (greedy tokens must agree); written to
+``BENCH_restart.json``.
+
   PYTHONPATH=src python -m benchmarks.bench_serving \
-      [--spec] [--spec-k K] [--mesh]
+      [--spec] [--spec-k K] [--mesh] [--shared-prefix] \
+      [--overload] [--restart]
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import tempfile
 import time
+from collections import Counter
 
 import jax
 import jax.numpy as jnp
@@ -44,8 +60,9 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import lm
-from repro.serving import (Engine, ContinuousEngine, SamplingParams,
-                           SpecConfig, retrace_count)
+from repro.serving import (Engine, ContinuousEngine, FaultPlan,
+                           SamplingParams, SpecConfig, retrace_count,
+                           stable_trace_counts)
 
 from .common import emit
 
@@ -87,11 +104,16 @@ def run():
         out = eng.run()
         dt = time.perf_counter() - t0
         ttfts = np.asarray([out[r].metrics.ttft for r in rids])
+        reasons = Counter(out[r].finish_reason for r in rids)
+        n = max(len(rids), 1)
         emit(f"serving/continuous/batch={b}", dt * 1e6,
              f"tok_s={b * STEPS / dt:.1f};"
              f"decode_traces={eng.trace_counts()['decode']};"
              f"ttft_p50={np.percentile(ttfts, 50) * 1e3:.1f}ms;"
-             f"ttft_p99={np.percentile(ttfts, 99) * 1e3:.1f}ms")
+             f"ttft_p99={np.percentile(ttfts, 99) * 1e3:.1f}ms;"
+             f"shed={reasons['shed'] / n:.2f};"
+             f"timeout={reasons['timeout'] / n:.2f};"
+             f"cancelled={reasons['cancelled'] / n:.2f}")
 
     # -- sampled vs greedy decode ticks (one engine, same compiled step) ----
     b = 4
@@ -365,6 +387,202 @@ def run_shared_prefix(n_req: int = 16, steps: int = 32,
     print(f"wrote {out_json}")
 
 
+def run_overload(n_req: int = 24, steps: int = 24,
+                 out_json: str = "BENCH_faults.json"):
+    """Overload shedding + seeded fault-injection benchmark.
+
+    Phase 1 (overload): ``n_req`` requests are thrown at a 4-slot paged
+    engine whose admission queue is capped at 6 and whose requests carry
+    tight wall-clock deadlines — offered load deliberately exceeds
+    capacity, so the engine must shed at submit time and expire queued or
+    slow requests at tick boundaries.  The number that matters is
+    *goodput*: tokens from requests that finished normally, per second —
+    a fault-tolerant engine degrades by rejecting work, not by slowing
+    every accepted request.  The absolute shed/timeout split is
+    machine-speed-dependent; the invariants are (a) every submitted
+    request reaches a terminal finish reason and (b) decode never
+    retraces while the lifecycle churns.
+
+    Phase 2 (fault matrix): a fresh engine replays a seeded
+    :class:`FaultPlan` covering every engine fault site (page exhaustion,
+    drafter failure, cancels mid-prefill and mid-spec-window, double
+    release), with traffic resubmitted until the plan is exhausted.  The
+    run must be crash-free: plan fully fired, queue drained, steady-state
+    traces flat, allocator refcounts back to zero.
+    """
+    slots, bs, chunk = 4, 16, 32
+    cfg = get_config("qwen3-0.6b").reduced()
+    cfg = dataclasses.replace(cfg, kv_k_sparsity=0.3, kv_v_sparsity=0.5,
+                              kv_tail=KV_TAIL)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, (PROMPT,)).tolist()
+               for _ in range(n_req)]
+    max_tokens = PROMPT + steps + KV_TAIL
+
+    def fresh(**kw):
+        return ContinuousEngine(params, cfg, slots=slots,
+                                max_tokens=max_tokens, bs=bs,
+                                prefill_chunk=chunk, paged=True, **kw)
+
+    # -- phase 1: overload --------------------------------------------------
+    eng = fresh(max_queue=6)
+    for p in prompts[:2]:                                       # compile
+        eng.submit(p, SamplingParams(max_new_tokens=3))
+    eng.run()
+    sp = SamplingParams(max_new_tokens=steps, deadline_s=3.0,
+                        ttft_deadline_s=1.5)
+    t0 = time.perf_counter()
+    rids = [eng.submit(p, sp) for p in prompts]
+    out = eng.run()
+    dt = time.perf_counter() - t0
+    reasons = Counter(out[r].finish_reason for r in rids)
+    assert sum(reasons.values()) == n_req, "a request vanished"
+    good = [r for r in rids if out[r].finish_reason in ("length", "stop")]
+    goodput = sum(len(out[r].token_ids) for r in good) / dt
+    traces = stable_trace_counts(eng.trace_counts())
+    assert all(v <= 1 for v in traces.values()), traces
+    overload = {
+        "n_req": n_req, "steps": steps, "slots": slots, "max_queue": 6,
+        "wall_s": dt,
+        "goodput_tok_s": goodput,
+        "finish_reasons": dict(reasons),
+        "shed_rate": reasons["shed"] / n_req,
+        "timeout_rate": reasons["timeout"] / n_req,
+        "stable_traces": traces,
+    }
+    emit("serving/overload", dt * 1e6,
+         f"goodput={goodput:.1f}tok_s;shed={overload['shed_rate']:.2f};"
+         f"timeout={overload['timeout_rate']:.2f};"
+         f"decode_traces={traces['decode']}")
+
+    # -- phase 2: seeded fault matrix ---------------------------------------
+    plan = FaultPlan.generate(seed=0, ticks=30)
+    # speculation on: the cancel-spec and drafter-error sites only become
+    # applicable while a spec window is in flight
+    feng = fresh(faults=plan, max_queue=8, spec=SpecConfig(k=3))
+    t0 = time.perf_counter()
+    guard = 0
+    while (not plan.exhausted() or not feng.scheduler.done()) and guard < 600:
+        guard += 1
+        if feng.scheduler.done():
+            for p in prompts[:4]:
+                feng.submit(p, SamplingParams(max_new_tokens=steps))
+        if feng.scheduler.queue and not feng.scheduler.active:
+            # whole queue backing off after an injected exhaustion:
+            # idle-wait like a real server tick instead of spinning
+            time.sleep(0.005)
+        feng.step()
+    dt = time.perf_counter() - t0
+    crash_free = plan.exhausted() and feng.scheduler.done()
+    assert crash_free, (f"fault plan not drained: pending={plan.pending()} "
+                        f"done={feng.scheduler.done()} guard={guard}")
+    ftraces = stable_trace_counts(feng.trace_counts())
+    assert all(v <= 1 for v in ftraces.values()), ftraces
+    assert not feng._blocks and int(feng._alloc._ref.sum()) == 0
+    faults = {
+        "plan": [list(f) for f in plan.fired],       # (tick, site) pairs
+        "ticks": guard, "wall_s": dt,
+        "fault_counters": {k: v for k, v in feng.fault_counters.items()
+                           if v},
+        "finish_reasons": dict(Counter(
+            r.finish_reason for r in feng.scheduler.finished.values())),
+        "crash_free": crash_free,
+        "stable_traces": ftraces,
+    }
+    emit("serving/fault_matrix", dt * 1e6,
+         f"sites={len(plan.fired)};ticks={guard};crash_free={crash_free};"
+         f"decode_traces={ftraces['decode']}")
+
+    results = {"overload": overload, "fault_matrix": faults}
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_json}")
+
+
+def run_restart(n_req: int = 8, steps: int = 16,
+                out_json: str = "BENCH_restart.json"):
+    """Cold vs warm-restart TTFT on a shared-prefix workload.
+
+    A first engine serves a wave sharing one long prompt prefix, freezing
+    the prefix into the paged arena, then ``save_snapshot``-s.  The same
+    follow-up wave is then timed on (a) a cold fresh engine — full prefill
+    from token 0 — and (b) a fresh engine that ``load_snapshot``-ed first,
+    whose admissions revive the frozen prefix from the trie and prefill
+    only the unique suffix.  Greedy tokens must agree between the two; the
+    headline is the TTFT ratio (how much of the crash-recovery prefill
+    tax the snapshot removes).
+    """
+    bs, chunk, prefix_len, suffix = 16, 64, 192, 8
+    slots = 4
+    cfg = get_config("qwen3-0.6b").reduced()
+    cfg = dataclasses.replace(cfg, kv_k_sparsity=0.3, kv_v_sparsity=0.5,
+                              kv_tail=KV_TAIL)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab, (prefix_len,)).tolist()
+    wave = [shared + rng.integers(0, cfg.vocab, (suffix,)).tolist()
+            for _ in range(n_req)]
+    followup = [shared + rng.integers(0, cfg.vocab, (suffix,)).tolist()
+                for _ in range(slots)]
+    max_tokens = prefix_len + suffix + steps + KV_TAIL
+    sp = SamplingParams(max_new_tokens=steps)
+
+    def fresh():
+        return ContinuousEngine(params, cfg, slots=slots,
+                                max_tokens=max_tokens, bs=bs,
+                                prefill_chunk=chunk, paged=True)
+
+    def timed_wave(eng, prompts):
+        rids = [eng.submit(p, sp) for p in prompts]
+        out = eng.run()
+        ttfts = np.asarray([out[r].metrics.ttft for r in rids])
+        return ([list(out[r].token_ids) for r in rids],
+                float(np.median(ttfts) * 1e3))
+
+    snap_dir = tempfile.mkdtemp(prefix="bench_restart_")
+    first = fresh()
+    timed_wave(first, wave)                 # freeze the shared prefix
+    step = first.save_snapshot(snap_dir)
+
+    # warm each engine's jits on a DISJOINT prompt so the timed follow-up
+    # wave pays real prefill (cold) or real trie revival (warm), not XLA
+    warm_prompt = jnp.asarray(
+        rng.integers(0, cfg.vocab, (1, prefix_len + suffix)), jnp.int32)
+
+    cold_eng = fresh()
+    cold_eng.generate_batch(warm_prompt, SamplingParams(max_new_tokens=3))
+    t0 = time.perf_counter()
+    cold_toks, cold_ttft = timed_wave(cold_eng, followup)
+    cold_dt = time.perf_counter() - t0
+
+    warm_eng = fresh()
+    warm_eng.generate_batch(warm_prompt, SamplingParams(max_new_tokens=3))
+    restored = warm_eng.load_snapshot(snap_dir)
+    t0 = time.perf_counter()
+    warm_toks, warm_ttft = timed_wave(warm_eng, followup)
+    warm_dt = time.perf_counter() - t0
+
+    match = float(np.mean([a == b for a, b in zip(cold_toks, warm_toks)]))
+    results = {
+        "n_req": n_req, "steps": steps, "prefix_len": prefix_len,
+        "suffix": suffix, "snapshot_step": step,
+        "restored_pages": restored,
+        "cold": {"ttft_p50_ms": cold_ttft, "wall_s": cold_dt},
+        "warm": {"ttft_p50_ms": warm_ttft, "wall_s": warm_dt},
+        "ttft_reduction": cold_ttft / warm_ttft if warm_ttft else None,
+        "greedy_match": match,
+    }
+    emit("serving/restart/cold", cold_dt * 1e6,
+         f"ttft_p50={cold_ttft:.1f}ms")
+    emit("serving/restart/warm", warm_dt * 1e6,
+         f"ttft_p50={warm_ttft:.1f}ms;pages={restored};"
+         f"ttft=x{results['ttft_reduction']:.1f};match={match:.3f}")
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_json}")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--spec", action="store_true",
@@ -377,9 +595,18 @@ if __name__ == "__main__":
     ap.add_argument("--shared-prefix", action="store_true",
                     help="flat vs paged pool on a shared-prefix request "
                          "wave at equal pool bytes (BENCH_paged.json)")
+    ap.add_argument("--overload", action="store_true",
+                    help="overload shedding goodput + seeded fault-matrix "
+                         "crash-free run (BENCH_faults.json)")
+    ap.add_argument("--restart", action="store_true",
+                    help="cold vs warm-restart TTFT via snapshot "
+                         "save/load (BENCH_restart.json)")
     args = ap.parse_args()
-    if sum((args.spec, args.mesh, args.shared_prefix)) > 1:
-        ap.error("--spec / --mesh / --shared-prefix are separate modes")
+    modes = (args.spec, args.mesh, args.shared_prefix, args.overload,
+             args.restart)
+    if sum(modes) > 1:
+        ap.error("--spec / --mesh / --shared-prefix / --overload / "
+                 "--restart are separate modes")
     if args.spec:
         if args.spec_k <= 0:
             ap.error("--spec requires --spec-k >= 1")
@@ -388,5 +615,9 @@ if __name__ == "__main__":
         run_mesh()
     elif args.shared_prefix:
         run_shared_prefix()
+    elif args.overload:
+        run_overload()
+    elif args.restart:
+        run_restart()
     else:
         run()

@@ -62,6 +62,10 @@ JIT_MODULES: Sequence[str] = (
     "train/",
     "serving/cache_pool.py",
     "serving/sampling.py",
+    # host-only, but its injection sites run inside the engine tick loop:
+    # it must stay jax-free, assert-free, and sync-free, so hold it to the
+    # same bar as the traced modules
+    "serving/faults.py",
     "distributed/cp_attention.py",
 )
 

@@ -23,6 +23,7 @@ import os
 import shutil
 import threading
 import time
+import zipfile
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -46,7 +47,18 @@ def _unflatten_into(tree: Any, arrays: Dict[str, np.ndarray]) -> Any:
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)
+        if key not in arrays:
+            raise ValueError(
+                f"checkpoint missing array {key!r}: the saved tree does "
+                f"not match the restore template (has "
+                f"{sorted(arrays)[:8]}{'...' if len(arrays) > 8 else ''})")
         arr = arrays[key]
+        want_shape = getattr(leaf, "shape", None)
+        if want_shape is not None and tuple(arr.shape) != tuple(want_shape):
+            raise ValueError(
+                f"checkpoint geometry mismatch at {key!r}: restore "
+                f"template expects shape {tuple(want_shape)}, checkpoint "
+                f"holds {tuple(arr.shape)}")
         want = getattr(leaf, "dtype", None)
         if want is not None and arr.dtype != want:
             # npz round-trips bf16 (ml_dtypes) as raw void bytes: view-cast
@@ -109,20 +121,61 @@ class CheckpointManager:
         s = self.steps()
         return s[-1] if s else None
 
+    def read_manifest(self, step: int) -> Dict:
+        """The manifest alone — cheap pre-restore validation (geometry
+        checks before arrays are even read)."""
+        path = os.path.join(self.dir, f"step_{step:010d}", "manifest.json")
+        try:
+            with open(path) as f:
+                return json.load(f)
+        except FileNotFoundError:
+            raise ValueError(
+                f"checkpoint step {step} has no manifest at {path!r}: "
+                f"not a checkpoint directory (available steps: "
+                f"{self.steps()})") from None
+        except json.JSONDecodeError as e:
+            raise ValueError(
+                f"checkpoint manifest {path!r} is corrupt "
+                f"(truncated or overwritten): {e}") from None
+
     def restore(self, step: int, like: Any,
-                shardings: Any = None) -> Tuple[Any, Dict]:
+                shardings: Any = None,
+                to_device: bool = True) -> Tuple[Any, Dict]:
         """Restore into the structure of ``like``; device_put per-leaf onto
-        ``shardings`` (any mesh — elastic) when given."""
+        ``shardings`` (any mesh — elastic) when given.
+
+        ``to_device=False`` returns plain host ``np.ndarray`` leaves
+        untouched — required for trees carrying values jax would silently
+        mangle (e.g. int64 content hashes truncate to int32 under default
+        x64-disabled jax); the caller owns any device conversion.
+
+        Failure modes are all readable ``ValueError``\\ s naming the
+        problem: a truncated/corrupted ``arrays.npz`` (torn copy, bad
+        disk), a missing array key, or a shape mismatch between the
+        checkpoint and the restore template (which leaf, expected vs
+        found) — never an exception from deep inside tree unflattening,
+        and never a half-applied restore.
+        """
         path = os.path.join(self.dir, f"step_{step:010d}")
-        with np.load(os.path.join(path, "arrays.npz")) as z:
-            arrays = {k: z[k] for k in z.files}
-        with open(os.path.join(path, "manifest.json")) as f:
-            manifest = json.load(f)
+        npz = os.path.join(path, "arrays.npz")
+        try:
+            with np.load(npz) as z:
+                arrays = {k: z[k] for k in z.files}
+        except FileNotFoundError:
+            raise ValueError(
+                f"checkpoint step {step} not found under {self.dir!r} "
+                f"(available steps: {self.steps()})") from None
+        except (zipfile.BadZipFile, EOFError, OSError, ValueError) as e:
+            raise ValueError(
+                f"checkpoint arrays {npz!r} are corrupt (truncated or "
+                f"overwritten — atomic rename means this was damaged "
+                f"after the save): {e}") from None
+        manifest = self.read_manifest(step)
         state = _unflatten_into(like, arrays)
         if shardings is not None:
             state = jax.tree_util.tree_map(
                 lambda a, s: jax.device_put(a, s), state, shardings)
-        else:
+        elif to_device:
             state = jax.tree_util.tree_map(jax.numpy.asarray, state)
         return state, manifest
 

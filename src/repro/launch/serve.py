@@ -17,6 +17,13 @@ shards slots over the data axis and KV heads over the model axis
 output; ``--spec-k K`` adds draft–verify speculation (``--spec-adaptive``
 for per-slot adaptive draft windows).
 
+Fault-tolerant serving knobs: ``--max-queue`` (bounded admission with
+load shedding), ``--deadline`` / ``--ttft-deadline`` (per-request
+wall-clock budgets), ``--degrade-queue`` (drop spec drafting under
+pressure), and ``--snapshot-dir`` (with ``--paged``: restore the prefix
+cache on start, snapshot it when the stream drains — a restarted server
+resumes at full cache-hit rate).
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --requests 8 --slots 4 --prompt-len 64 --steps 16 --sparsity 0.5
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -92,6 +99,28 @@ def main(argv=None):
                          "request, snapshot stable_trace_counts(), then "
                          "fail (nonzero exit) if any jitted entry point "
                          "retraces during the real stream")
+    ap.add_argument("--snapshot-dir", default="",
+                    help="stream mode, with --paged: warm-restart "
+                         "snapshots — restore the prefix cache (arena + "
+                         "trie + allocator) from the newest snapshot on "
+                         "start, and snapshot once the stream drains, so "
+                         "a restarted server resumes at full cache-hit "
+                         "rate")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="stream mode: bounded admission queue — submits "
+                         "past the bound are shed immediately "
+                         "(finish_reason='shed'); 0 = unbounded")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="stream mode: per-request total wall-clock "
+                         "deadline in seconds (finish_reason='timeout' "
+                         "past it); 0 = none")
+    ap.add_argument("--ttft-deadline", type=float, default=0.0,
+                    help="stream mode: per-request first-token deadline "
+                         "in seconds; 0 = none")
+    ap.add_argument("--degrade-queue", type=int, default=0,
+                    help="stream mode, with --spec-k: drop speculative "
+                         "drafting to 0 while the queue holds at least "
+                         "this many requests (pressure relief); 0 = off")
     # sampling (0 temperature = greedy; each request gets its own seed)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
@@ -103,6 +132,12 @@ def main(argv=None):
     if args.audit and args.one_shot:
         ap.error("--audit is stream-mode only (the one-shot engine has no "
                  "warmup/steady-state split to audit)")
+    if args.snapshot_dir and not args.paged:
+        ap.error("--snapshot-dir needs --paged (only the shared-prefix "
+                 "arena + trie persist across restarts)")
+    if args.degrade_queue and not args.spec_k:
+        ap.error("--degrade-queue needs --spec-k (it degrades by dropping "
+                 "the draft window)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -190,11 +225,20 @@ def main(argv=None):
         prefill_chunk=args.prefill_chunk or None,
         spec=SpecConfig(k=args.spec_k, adaptive=args.spec_adaptive)
         if args.spec_k else None,
-        mesh=mesh, paged=args.paged, phys_blocks=args.phys_blocks)
+        mesh=mesh, paged=args.paged, phys_blocks=args.phys_blocks,
+        max_queue=args.max_queue, degrade_queue=args.degrade_queue)
     if args.paged:
         print(f"[serve] paged pool: {eng.pool.n_phys} physical blocks of "
               f"{eng.pool.bs} tokens behind {slots}x{eng.pool.max_blocks} "
               f"block tables")
+    if args.snapshot_dir:
+        try:
+            n = eng.load_snapshot(args.snapshot_dir)
+            print(f"[serve] warm restart: restored {n} prefix pages from "
+                  f"{args.snapshot_dir} (trie holds {len(eng._trie)} "
+                  f"blocks — matching prompts skip their prefill)")
+        except ValueError as e:
+            print(f"[serve] cold start: {e}")
     if mesh is not None:
         from repro.distributed import serving_sharding
         place = serving_sharding.describe(eng.ctx, eng.state, eng.state_axes)
@@ -221,7 +265,9 @@ def main(argv=None):
         steps = int(rng.integers(max(args.steps // 2, 1), args.steps + 1))
         sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                             top_p=args.top_p, seed=args.seed + i,
-                            max_new_tokens=steps)
+                            max_new_tokens=steps,
+                            deadline_s=args.deadline or None,
+                            ttft_deadline_s=args.ttft_deadline or None)
         rids.append(eng.submit(np.asarray(prompts[i][:plen]), sp))
     out = eng.run()
     dt = time.time() - t0
@@ -229,11 +275,22 @@ def main(argv=None):
     print(f"[serve] stream: {n_req} requests, {total} tokens in {dt:.2f}s "
           f"({total/dt:.1f} tok/s) on {slots} slots")
     print(f"[serve] jit traces: {eng.trace_counts()}")
-    ttfts = [o.metrics.ttft for o in out.values()]
-    lats = [o.metrics.e2e_latency for o in out.values()]
-    print(f"[serve] ttft p50={np.median(ttfts)*1e3:.0f}ms "
-          f"max={max(ttfts)*1e3:.0f}ms; e2e p50={np.median(lats)*1e3:.0f}ms; "
-          f"finish: { {o.finish_reason for o in out.values()} }")
+    ttfts = [o.metrics.ttft for o in out.values()
+             if o.metrics.ttft is not None]
+    lats = [o.metrics.e2e_latency for o in out.values()
+            if o.metrics.e2e_latency is not None]
+    if ttfts:
+        print(f"[serve] ttft p50={np.median(ttfts)*1e3:.0f}ms "
+              f"max={max(ttfts)*1e3:.0f}ms; "
+              f"e2e p50={np.median(lats)*1e3:.0f}ms; "
+              f"finish: { {o.finish_reason for o in out.values()} }")
+    reasons = [o.finish_reason for o in out.values()]
+    abnormal = {r: reasons.count(r) for r in ("shed", "timeout", "cancelled")
+                if reasons.count(r)}
+    fc = {k: v for k, v in eng.fault_counters.items() if v}
+    if abnormal or fc:
+        print(f"[serve] lifecycle: {abnormal or 'all normal'}; "
+              f"counters {fc}")
     if args.paged:
         print(f"[serve] paged: prefix trie holds {len(eng._trie)} blocks; "
               f"{eng._alloc.free_blocks()}/{eng.pool.n_phys} reclaimable")
@@ -252,6 +309,10 @@ def main(argv=None):
             print(f"[serve] spec: adaptive proposal histogram "
                   f"{eng.adaptive_hist.tolist()} "
                   f"(index = drafts proposed/tick)")
+    if args.snapshot_dir:
+        step = eng.save_snapshot(args.snapshot_dir)
+        print(f"[serve] snapshot: step {step} -> {args.snapshot_dir} "
+              f"({len(eng._trie)} prefix blocks persisted)")
     if args.audit:
         final = stable_trace_counts(eng.trace_counts())
         drift = {k: (baseline.get(k, 0), v) for k, v in final.items()

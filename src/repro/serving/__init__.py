@@ -1,6 +1,8 @@
 from .engine import (Engine, ContinuousEngine, retrace_count,
                      stable_trace_counts)
-from .cache_pool import BlockAllocator, CachePool
+from .cache_pool import ARENA_KEYS, BlockAllocator, CachePool
+from .faults import (ALL_SITES, ENGINE_SITES, Fault, FaultError, FaultPlan,
+                     corrupt_snapshot)
 from .sampling import RequestMetrics, RequestOutput, SamplingParams
 from .scheduler import PrefixTrie, Request, Scheduler, block_hashes
 from .spec import AdaptiveDraft, Drafter, NGramDrafter, SpecConfig

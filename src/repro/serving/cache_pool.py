@@ -149,6 +149,35 @@ class CachePool:
                    for l in jax.tree_util.tree_leaves(
                        jax.eval_shape(self.init_state)))
 
+    def geometry(self) -> Dict[str, Any]:
+        """Everything a snapshot of the paged arena depends on.
+
+        Two pools can exchange arena bytes + prefix hashes iff these match:
+        block content is a function of the architecture, the block size,
+        the packed capacities, and the compression rule; the arena layout
+        adds ``n_phys`` / head-count / dtype.  ``slots`` is deliberately
+        ABSENT — the arena is ``[P, n_phys, Hkv, X]``, slot-independent,
+        so a restarted server may resize its slot count and still restore
+        a warm cache.  (Content-addressed chained hashes make *stale* data
+        impossible by construction; geometry is the only thing to check.)
+        """
+        cfg = self.cfg
+        return {
+            "arch": cfg.name,
+            "paged": self.paged,
+            "bs": self.bs,
+            "max_blocks": self.max_blocks,
+            "n_phys": self.n_phys,
+            "cap_k": self.cap_k,
+            "cap_v": self.cap_v,
+            "n_kv": cfg.n_kv,
+            "hd": cfg.hd,
+            "n_periods": cfg.n_layers // lm.period_len(cfg),
+            "cdtype": np.dtype(cfg.cdtype).name,
+            "kv_k_sparsity": cfg.kv_k_sparsity,
+            "kv_v_sparsity": cfg.kv_v_sparsity,
+        }
+
     # -- sanitized mode -----------------------------------------------------
     def _check(self, pred, msg: str) -> None:
         """Emit a checkify invariant when the pool was built with
@@ -460,6 +489,15 @@ class CachePool:
         the same page) and its table row resets to 0 — the HOST allocator
         decides what a refcount-0 page becomes (cached for re-hit, or
         free).
+
+        **Idempotent**: releasing an already-free slot is a no-op, not a
+        refcount underflow — its lengths are already 0, so the paged decref
+        mask (gated on ``prefix_blocks``) selects nothing and zeroing the
+        lengths again changes nothing.  Even the sanitized-mode underflow
+        check passes (it screens only live table entries).  The engine
+        counts double releases as warnings (``fault_counters``); the
+        device transition absorbs them — a crashing request-teardown path
+        can retry safely.
         """
         slot = jnp.atleast_1d(jnp.asarray(slot, jnp.int32))     # [R]
         rel = jnp.any(slot[:, None] == jnp.arange(self.slots)[None, :],
@@ -482,6 +520,48 @@ class CachePool:
             out["refcount"] = state["refcount"].at[ids].add(-1, mode="drop")
             out["table"] = jnp.where(rel[:, None], 0, state["table"])
         return out
+
+    # -- snapshot (paged arena <-> host trees) -------------------------------
+    def arena_leaves(self, state: Dict[str, Any]) -> Dict[str, Any]:
+        """The shared-arena storage of a paged pool as a host tree
+        ``{layer: {leaf: np.ndarray}}`` — exactly the leaves a warm-restart
+        snapshot must persist (per-slot tails / tables / occupancy are
+        in-flight request state and deliberately excluded: after a crash
+        there are no in-flight requests, only shareable frozen content).
+        """
+        if not self.paged:
+            raise ValueError("arena_leaves is a paged-pool helper")
+        # host snapshot boundary, never traced
+        return {name: {k: np.asarray(leaf["kv"][k])  # jitlint: disable=host-sync
+                       for k in ARENA_KEYS}
+                for name, leaf in state["layers"].items()}
+
+    def load_arena(self, state: Dict[str, Any],
+                   leaves: Dict[str, Any]) -> Dict[str, Any]:
+        """Inverse of :meth:`arena_leaves`: a fresh state with the arena
+        storage replaced by ``leaves`` (shape/dtype-checked per leaf, with
+        the failing leaf named — restore must never half-apply)."""
+        if not self.paged:
+            raise ValueError("load_arena is a paged-pool helper")
+        new_layers = {}
+        for name, leaf in state["layers"].items():
+            kv = dict(leaf["kv"])
+            for k in ARENA_KEYS:
+                # host restore boundary, never traced
+                have, got = kv[k], np.asarray(leaves[name][k])  # jitlint: disable=host-sync
+                if have.shape != got.shape or have.dtype != got.dtype:
+                    raise ValueError(
+                        f"arena leaf {name}/{k}: pool expects "
+                        f"{have.shape} {have.dtype}, snapshot carries "
+                        f"{got.shape} {got.dtype}")
+                kv[k] = jnp.asarray(got)
+            new_layers[name] = {"kv": kv}
+        return {**state, "layers": new_layers}
+
+
+# the compressed-block storage leaves of one layer's kv tree — the paged
+# arena's persistent content (tails are private in-flight state)
+ARENA_KEYS = ("k_bitmap", "k_values", "v_bitmap", "v_values")
 
 
 # errors screened by the sanitized mode: the pool's own checkify.check
@@ -606,6 +686,45 @@ class BlockAllocator:
             if self._ref[bid] == 0:
                 self._cached.pop(bid, None)
             self._ref[bid] += 1
+
+    # -- snapshot -------------------------------------------------------------
+    def export_registered(self) -> List[tuple]:
+        """``(hash, id)`` pairs of every registered (content-hashed) block,
+        coldest first — the persistent half of the allocator's state.
+
+        Ordering is the restore-side LRU order: cached refcount-0 blocks in
+        their eviction order (cold end first), then live blocks (hottest —
+        they were in active use at snapshot time).  Unregistered live
+        blocks (private pages of in-flight requests) are deliberately
+        absent: after a restart there are no in-flight requests, and an
+        unhashed page can never be revived by a prefix hit.
+        """
+        pairs = list((h, bid) for bid, h in self._cached.items())
+        pairs.extend((h, bid) for h, bid in self._hash2id.items()
+                     if self._ref[bid] > 0)
+        return pairs
+
+    def restore_registered(self, pairs: Sequence[tuple]) -> None:
+        """Reset the allocator to a freshly-restarted warm state: every
+        ``(hash, id)`` pair becomes a cached refcount-0 block (revivable by
+        a prefix hit, evictable from the cold end), everything else is
+        free.  Must be called before any allocation; raises ``ValueError``
+        on ids out of range or duplicated (a corrupt snapshot must not
+        half-apply)."""
+        seen = set()
+        for h, bid in pairs:
+            if not 0 <= bid < self.n_phys:
+                raise ValueError(
+                    f"snapshot block id {bid} outside arena "
+                    f"[0, {self.n_phys})")
+            if bid in seen:
+                raise ValueError(f"snapshot block id {bid} duplicated")
+            seen.add(bid)
+        self._ref = np.zeros(self.n_phys, np.int64)
+        self._free = [i for i in range(self.n_phys - 1, -1, -1)
+                      if i not in seen]
+        self._cached = OrderedDict((bid, h) for h, bid in pairs)
+        self._hash2id = {h: bid for h, bid in pairs}
 
     def decref(self, ids: Sequence[int]) -> None:
         """Drop references (slot release).  A block hitting refcount 0

@@ -40,6 +40,8 @@ from repro.models.attention import DenseKVCache
 from . import sampling
 from .cache_pool import BlockAllocator, CachePool
 from .cache_pool import checkified_raw as cache_pool_checkified_raw
+from .faults import (CANCEL_PREFILL, CANCEL_SPEC, DOUBLE_RELEASE,
+                     DRAFTER_ERROR, PAGE_EXHAUSTION, FaultPlan)
 from .sampling import RequestOutput, SamplingParams
 from .scheduler import PrefixTrie, Scheduler, block_hashes
 from .spec import AdaptiveDraft, SpecConfig
@@ -288,6 +290,20 @@ class ContinuousEngine:
     Admission reserves each request's worst-case page demand up front, so
     device-side allocation can never fail mid-flight.  The table and
     refcount are data: decode still never retraces.
+
+    **Fault-tolerant lifecycle** (all host-side control flow — the jitted
+    transitions and their compile manifest are untouched): per-request
+    deadlines (``SamplingParams.deadline_s`` / ``ttft_deadline_s``)
+    enforced at tick start, :meth:`cancel` for any live request, bounded
+    admission with load shedding (``max_queue``; rejected requests finish
+    ``"shed"`` at submit time), exponential-backoff requeue when paged
+    admission can't reserve pages, and an optional degraded mode
+    (``degrade_queue``) that drops speculative drafting to zero under
+    queue pressure.  ``fault_counters`` tallies every abnormal event.  A
+    seeded :class:`~repro.serving.faults.FaultPlan` (``faults=``) injects
+    failures at the named host sites for the fault-injection harness.
+    :meth:`save_snapshot` / :meth:`load_snapshot` persist the paged
+    arena + prefix index for crash-safe warm restarts.
     """
 
     def __init__(self, params, cfg, ctx=NULL_CTX, slots: int = 4,
@@ -296,7 +312,9 @@ class ContinuousEngine:
                  spec: Optional[SpecConfig] = None,
                  capacity_slack: float = 1.25,
                  mesh=None, paged: bool = False, phys_blocks: int = 0,
-                 checkify: Optional[bool] = None):
+                 checkify: Optional[bool] = None,
+                 max_queue: int = 0, degrade_queue: int = 0,
+                 faults: Optional[FaultPlan] = None, clock=None):
         if mesh is not None:
             # mesh-sharded serving: slots over the data axes, KV heads over
             # the model axis.  The ctx also constrains activations inside
@@ -330,8 +348,10 @@ class ContinuousEngine:
         # through untouched)
         self.state = {**self.pool.init_state(),
                       "sample": sampling.init_lanes(slots)}
+        sch_kw = {} if clock is None else {"clock": clock}
         self.scheduler = Scheduler(slots, self.pool.capacity_tokens,
-                                   self.pool.bs, chunk=prefill_chunk)
+                                   self.pool.bs, chunk=prefill_chunk,
+                                   max_queue=max_queue, **sch_kw)
         bs_ = self.pool.bs
 
         # mesh placement: every jitted step below is pinned with explicit
@@ -473,6 +493,23 @@ class ContinuousEngine:
         self._callbacks: Dict[int, Callable[[RequestOutput], None]] = {}
         self._pending_release: List[int] = []         # flushed once per tick
 
+        # fault-tolerant lifecycle: deadline/cancel/shed accounting, the
+        # seeded fault plan (None in production), and the degraded-mode
+        # queue threshold (queue >= degrade_queue drops spec drafting to 0
+        # so verify ticks commit exactly one token — pressure relief
+        # without a shape change).  _slot_live mirrors which slots hold
+        # admitted device state so a double release is detected host-side
+        # as a warning, never acted on twice.
+        self._faults = faults
+        self._degrade_queue = degrade_queue
+        self._tick_no = 0
+        self._in_tick = False
+        self._slot_live = np.zeros(slots, bool)
+        self.fault_counters: Dict[str, int] = {
+            "shed": 0, "timeout": 0, "cancelled": 0, "double_release": 0,
+            "drafter_error": 0, "deferred": 0, "degraded_ticks": 0,
+            "injected_page_exhaustion": 0}
+
         # paged pool: host-side id lifecycle + prefix index.  Sharing needs
         # deterministic block content, which needs deterministic chunk
         # boundaries — the trie only indexes blocks frozen by full-width
@@ -495,12 +532,81 @@ class ContinuousEngine:
         every token window this request commits — one token per tick on
         the non-speculative path, up to ``spec.k + 1`` tokens per verify
         tick under speculation (the last snapshot has ``finished``).
+
+        Under load shedding (``max_queue`` set, queue full) the request is
+        rejected immediately: ``on_token`` fires exactly once with a final
+        ``finish_reason="shed"`` snapshot and nothing is registered — the
+        shed costs no slot, no pages, and no tick work.
         """
         rid = self.scheduler.submit([int(t) for t in np.asarray(prompt)],
                                     params)
+        req = self.scheduler.finished.get(rid)
+        if req is not None and req.finish_reason == "shed":
+            self.fault_counters["shed"] += 1
+            if on_token is not None:
+                on_token(req.output())
+            return rid
         if on_token is not None:
             self._callbacks[rid] = on_token
         return rid
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request wherever it lives (queued / prefilling /
+        decoding).  Returns whether anything was cancelled — a rid that
+        already finished (or was never submitted) is a quiet ``False``,
+        so cancellation racing normal completion is safe to lose.
+
+        An active request's slot is released through the same batched
+        release path normal completion uses (paged blocks decref'd, LRU
+        retains revivable prefixes); co-tenant slots are untouched — their
+        token streams are bit-identical to a run where the cancelled
+        request never existed past its release tick.  The final
+        ``finish_reason="cancelled"`` snapshot fires the request's
+        ``on_token`` callback once.
+        """
+        return self._cancel_inner(rid) is not None
+
+    def _cancel_inner(self, rid: int) -> Optional[RequestOutput]:
+        req = self.scheduler.cancel(rid)
+        if req is None:
+            return None
+        self.fault_counters["cancelled"] += 1
+        if req.slot >= 0:
+            self._abort_slot(req.slot)
+        out = req.output()
+        cb = self._callbacks.pop(rid, None)
+        if cb is not None:
+            cb(out)
+        return out
+
+    def _abort_slot(self, slot: int) -> None:
+        """Tear down an active slot outside the normal finish path (cancel
+        or deadline expiry): queue its batched release and reset the host
+        mirrors.  Outside a tick the release flushes immediately (a caller
+        cancelling between ticks must not leave pages pinned)."""
+        self._pending_release.append(slot)
+        self._tail_len[slot] = 0
+        self._last_tok.pop(slot, None)
+        if self._adaptive is not None:
+            self._adaptive.reset(slot)
+        if not self._in_tick:
+            self._flush_releases()
+
+    def _expire_deadlines(self, now: float,
+                          events: List[RequestOutput]) -> None:
+        """Finish every request past its deadline (``finish_reason=
+        "timeout"``), releasing the slots of active ones.  Runs at tick
+        start — BEFORE this tick's decode — so a stop committed last tick
+        has already won; a deadline can never retract emitted output."""
+        for req in self.scheduler.expire(now):
+            self.fault_counters["timeout"] += 1
+            if req.slot >= 0:
+                self._abort_slot(req.slot)
+            out = req.output()
+            events.append(out)
+            cb = self._callbacks.pop(req.rid, None)
+            if cb is not None:
+                cb(out)
 
     def run(self) -> Dict[int, RequestOutput]:
         """Tick until every submitted request finished; returns
@@ -597,33 +703,160 @@ class ContinuousEngine:
         for verification that tick); ``None`` when adaptive K is off."""
         return None if self._adaptive is None else self._adaptive.hist
 
+    # -- crash-safe warm restart --------------------------------------------
+    def _snapshot_guard(self, what: str) -> None:
+        if self._alloc is None:
+            raise ValueError(f"{what} needs the paged pool: only the "
+                             "shared arena + prefix index persist "
+                             "(build the engine with paged=True)")
+        if self.mesh is not None:
+            raise ValueError(f"{what} is unsharded-only: arena leaves are "
+                             "persisted as full host tensors")
+
+    def save_snapshot(self, directory: str) -> int:
+        """Persist the warm-restart state of the paged pool under
+        ``directory`` (atomic write-temp-then-rename via
+        :class:`~repro.checkpoint.manager.CheckpointManager`): the shared
+        arena leaves, the chained-hash -> physical-page pairs of the
+        prefix index, and the allocator's registered population.  In-flight
+        request state (tails, tables, occupancy) is deliberately NOT
+        saved — after a crash there are no in-flight requests; what
+        survives is exactly the shareable frozen content a restarted
+        server can hit on.  Returns the step number written.
+        """
+        self._snapshot_guard("save_snapshot")
+        from repro.checkpoint.manager import CheckpointManager
+        pairs = self._alloc.export_registered()
+        tree = {"arena": self.pool.arena_leaves(self.state),
+                "hashes": np.asarray([h for h, _ in pairs], np.int64),
+                "ids": np.asarray([b for _, b in pairs], np.int32)}
+        mgr = CheckpointManager(directory, keep=2)
+        step = (mgr.latest_step() or 0) + 1
+        mgr.save(step, tree,
+                 meta={"kind": "serving-prefix-cache",
+                       "geometry": self.pool.geometry(),
+                       "n_registered": len(pairs)},
+                 blocking=True)
+        return step
+
+    def load_snapshot(self, directory: str) -> int:
+        """Warm-restart from the newest snapshot under ``directory``:
+        reload the arena leaves, rebuild the prefix trie and the
+        allocator's cached population (every restored page enters at
+        refcount 0, revivable by a prefix hit, evictable from the LRU's
+        cold end in snapshot order).  The next admission of a prompt whose
+        prefix was frozen before the crash skips its prefill entirely.
+
+        Idle-only (restore before serving traffic) and geometry-checked:
+        a snapshot from a different pool geometry raises a ``ValueError``
+        naming every mismatched field — never a half-restore.  Content-
+        addressed hash chains make *stale* content impossible, so geometry
+        is the only validation needed; the slot count may freely differ
+        (the arena is slot-independent).  Returns the number of restored
+        pages.
+        """
+        self._snapshot_guard("load_snapshot")
+        if self.scheduler.active or self.scheduler.queue or self._blocks:
+            raise ValueError("load_snapshot on a busy engine: restore "
+                             "before submitting traffic")
+        from repro.checkpoint.manager import CheckpointManager
+        mgr = CheckpointManager(directory, keep=2)
+        step = mgr.latest_step()
+        if step is None:
+            raise ValueError(f"no snapshot under {directory!r}")
+        manifest = mgr.read_manifest(step)
+        if manifest.get("kind") != "serving-prefix-cache":
+            raise ValueError(
+                f"snapshot step {step} under {directory!r} is not a "
+                f"serving prefix cache (kind={manifest.get('kind')!r})")
+        mine, theirs = self.pool.geometry(), manifest.get("geometry") or {}
+        bad = [f"{k}: engine has {mine[k]!r}, snapshot has "
+               f"{theirs.get(k)!r}" for k in mine if theirs.get(k) != mine[k]]
+        if bad:
+            raise ValueError("snapshot geometry mismatch — "
+                             + "; ".join(bad))
+        n = int(manifest["n_registered"])
+        # to_device=False: the int64 hash chain must come back exactly
+        # (jnp.asarray would truncate it to int32 under x64-disabled jax)
+        like = {"arena": self.pool.arena_leaves(self.pool.init_state()),
+                "hashes": np.zeros(n, np.int64),
+                "ids": np.zeros(n, np.int32)}
+        tree, _ = mgr.restore(step, like, to_device=False)
+        pairs = list(zip((int(h) for h in tree["hashes"]),
+                         (int(b) for b in tree["ids"])))
+        self._alloc.restore_registered(pairs)     # validates ids first
+        self._trie.reload(pairs)
+        self.state = self.pool.load_arena(self.state, tree["arena"])
+        return len(pairs)
+
     # -- one tick -----------------------------------------------------------
     def step(self) -> List[RequestOutput]:
         """Advance the engine one tick; returns a snapshot per token emitted
         (empty while the pool is still prefilling).  Slots freed this tick
         are recycled in ONE batched release at the end (host-padded
         ``[slots]`` vector — a tick finishing many requests costs one
-        jitted call, not one per slot)."""
+        jitted call, not one per slot).
+
+        Tick order is the fault-tolerance contract: deadline expiry and the
+        release flush run FIRST (inside :meth:`_step_inner`), so a slot
+        freed by a timeout is re-admittable the same tick but a request
+        admitted this tick can never land in a slot whose release is still
+        pending from an expiry — admission only sees fully-released slots.
+        """
+        self._tick_no += 1
+        self._in_tick = True
         try:
             return self._step_inner()
         finally:
+            if self._faults is not None:
+                # double-release fault: push an already-freed slot through
+                # the release path again.  The flush must absorb it as a
+                # counted warning (and the device transition as a no-op).
+                cand = (list(self._pending_release)
+                        or [s for s in range(self.pool.slots)
+                            if s not in self.scheduler.active])
+                if cand and self._faults.take(DOUBLE_RELEASE, self._tick_no):
+                    self._pending_release.append(self._faults.choose(cand))
             self._flush_releases()
+            self._in_tick = False
 
     def _flush_releases(self) -> None:
+        """Recycle every pending slot in one batched device release.
+
+        Idempotent at both layers: a slot appearing twice (or pushed again
+        after an earlier flush) is detected against the ``_slot_live``
+        mirror and counted as a ``double_release`` warning — its allocator
+        decref is skipped (host refcounts stay exact) while the device
+        release vector, which is naturally idempotent on a free slot,
+        still runs once per unique slot.
+        """
         if not self._pending_release:
             return
+        seen = list(dict.fromkeys(self._pending_release))   # ordered unique
+        doubles = len(self._pending_release) - len(seen)
+        live = []
+        for s in seen:
+            if self._slot_live[s]:
+                self._slot_live[s] = False
+                live.append(s)
+            else:
+                doubles += 1
+        self._pending_release = []
+        self.fault_counters["double_release"] += doubles
+        # the whole unique set goes to the device — releasing an already
+        # free slot there is a masked no-op (even under checkify), which is
+        # exactly the property the double-release fault site exercises
         vec = np.full(self.pool.slots, -1, np.int32)
-        vec[:len(self._pending_release)] = self._pending_release
+        vec[:len(seen)] = seen
         self.state = self._release(self.state, jnp.asarray(vec))
         if self._alloc is not None:
-            for s in self._pending_release:
+            for s in live:
                 ids = self._blocks.pop(s, [])
                 if ids:
                     self._alloc.decref(ids)
                 self._reserved.pop(s, None)
-        self._pending_release = []
 
-    def _admit_paged(self):
+    def _admit_paged(self, now: float):
         """Reservation + prefix-hit admission for the queue's head.
 
         Returns the admitted :class:`~.scheduler.Request`, or None (leaving
@@ -649,9 +882,19 @@ class ContinuousEngine:
         revived = sum(1 for i in hits if alloc.refcount(i) == 0)
         need = -(-(plen + nxt.params.max_new_tokens) // bs) - len(hits)
         outstanding = sum(self._reserved.values())
-        if need + revived + outstanding > alloc.free_blocks():
+        exhausted = need + revived + outstanding > alloc.free_blocks()
+        if (not exhausted and self._faults is not None
+                and self._faults.take(PAGE_EXHAUSTION, self._tick_no)):
+            # injected arena pressure: behave exactly as if no physical
+            # blocks were free, driving the backoff-requeue path
+            self.fault_counters["injected_page_exhaustion"] += 1
+            exhausted = True
+        if exhausted:
+            # defer with exponential backoff (head-of-line: FIFO preserved)
+            sch.defer_admission(now)
+            self.fault_counters["deferred"] += 1
             return None
-        req = sch.admit()
+        req = sch.admit(now)
         self._reserved[req.slot] = need
         self._blocks[req.slot] = list(hits)
         if hits:
@@ -668,11 +911,21 @@ class ContinuousEngine:
     def _step_inner(self) -> List[RequestOutput]:
         events: List[RequestOutput] = []
         sch = self.scheduler
+        # deadline expiry, then the release flush, THEN admission: slots
+        # freed by a timeout (or by a between-tick cancel) are fully
+        # released before any new request can be admitted into them — a
+        # pending release must never fire on a slot a fresh tenant just
+        # claimed.
+        now = sch.clock()
+        self._expire_deadlines(now, events)
+        self._flush_releases()
         # admission: fill every free slot from the queue, writing each new
         # request's sampling lane into device state
         while sch.queue and sch.free_slots():
-            req = (sch.admit() if self._alloc is None
-                   else self._admit_paged())
+            if sch.queue[0].next_admit > now:
+                break                          # head backing off: FIFO waits
+            req = (sch.admit(now) if self._alloc is None
+                   else self._admit_paged(now))
             if req is None:
                 break                          # arena full: wait for releases
             p = req.params
@@ -680,6 +933,18 @@ class ContinuousEngine:
                 self.state, jnp.int32(req.slot),
                 jnp.float32(p.temperature), jnp.int32(p.top_k),
                 jnp.float32(p.top_p), sampling.request_key(p))
+            self._slot_live[req.slot] = True
+
+        # cancellation-mid-prefill fault: kill a partially-prefilled
+        # request between its chunks — its pages must come back (at tick
+        # end) without perturbing co-tenant streams
+        if self._faults is not None:
+            mid = [r for r in sch.active.values()
+                   if 0 < r.prefill_done < len(r.prompt)]
+            if mid and self._faults.take(CANCEL_PREFILL, self._tick_no):
+                out = self._cancel_inner(self._faults.choose(mid).rid)
+                if out is not None:
+                    events.append(out)
 
         # refreeze before decode appends: any slot with a full tail (only
         # decoding slots can fill one; the host list must mirror the
@@ -757,6 +1022,9 @@ class ContinuousEngine:
             self.params, self.state, jnp.asarray(tokens), jnp.asarray(mask))
         picked, logps = np.asarray(tok), np.asarray(logp)
         for s in slots:
+            if s not in sch.active:
+                continue      # cancelled mid-tick (reentrant callback):
+                              # the sampled token dies with the slot
             self._tail_len[s] += 1
             self._emit(s, [int(picked[s])], [float(logps[s])], events)
         return events
@@ -775,6 +1043,14 @@ class ContinuousEngine:
         """
         sch = self.scheduler
         b, k = self.pool.slots, self._spec.k
+        # degraded mode: under queue pressure drop the draft window to 0 —
+        # every verify tick commits exactly one token, shrinking per-tick
+        # latency so live slots finish (and free) sooner.  Host data only:
+        # the [slots, K+1] panel shape never changes, so no retrace.
+        degraded = (self._degrade_queue > 0
+                    and len(sch.queue) >= self._degrade_queue)
+        if degraded:
+            self.fault_counters["degraded_ticks"] += 1
         tokens = np.zeros((b, k + 1), np.int32)
         mask = np.zeros((b,), bool)
         dlen = np.zeros((b,), np.int32)
@@ -783,23 +1059,46 @@ class ContinuousEngine:
             tokens[s, 0] = self._last_tok[s]
             mask[s] = True
             room = self.pool.tail - 1 - int(self._tail_len[s])
-            cap = min(k, room)
-            if self._adaptive is not None:
+            cap = 0 if degraded else min(k, room)
+            if self._adaptive is not None and not degraded:
                 # per-slot adaptive K: a slot whose drafts keep getting
                 # rejected speculates less (host-side data only — the
                 # [slots, K+1] panel shape, and hence the trace, is fixed)
                 cap = min(cap, self._adaptive.draft_len(s))
             if cap > 0:
-                drafts = self.drafter.propose(
-                    req.prompt + req.generated, cap)
+                try:
+                    if (self._faults is not None
+                            and self._faults.take(DRAFTER_ERROR,
+                                                  self._tick_no)):
+                        self._faults.raise_fault(DRAFTER_ERROR)
+                    drafts = self.drafter.propose(
+                        req.prompt + req.generated, cap)
+                except Exception:
+                    # a crashing drafter degrades its slot to a draftless
+                    # tick (one committed token) — never the engine
+                    self.fault_counters["drafter_error"] += 1
+                    drafts = []
                 dlen[s] = len(drafts)
                 tokens[s, 1:1 + len(drafts)] = drafts
         tok, logp, ncommit, self.state = self._verify(
             self.params, self.state, jnp.asarray(tokens),
             jnp.asarray(mask), jnp.asarray(dlen))
+        # cancellation-mid-spec-window fault: the victim's drafts were
+        # built into the panel and verified, but the window has not
+        # committed — the verified tokens must be discarded with the slot
+        if self._faults is not None:
+            alive = [s for s in slots if s in sch.active]
+            if alive and self._faults.take(CANCEL_SPEC, self._tick_no):
+                out = self._cancel_inner(
+                    sch.active[self._faults.choose(alive)].rid)
+                if out is not None:
+                    events.append(out)
         picked, logps = np.asarray(tok), np.asarray(logp)
         ncs = np.asarray(ncommit)
         for s in slots:
+            if s not in sch.active:
+                continue      # cancelled inside the window: its verified
+                              # tokens are never committed
             nc = int(ncs[s])
             self._tail_len[s] += nc          # t0 + accepted stay appended
             self.spec_hist[nc - 1] += 1      # nc - 1 = accepted drafts
@@ -830,5 +1129,8 @@ class ContinuousEngine:
             self._last_tok.pop(slot, None)
             if self._adaptive is not None:
                 self._adaptive.reset(slot)   # next tenant starts fresh
-        else:
+        elif req.finish_reason is None:
+            # (a reentrant cancel from this request's own callback leaves
+            # finish_reason "cancelled" — _abort_slot already reset the
+            # slot mirrors, so only a still-live request updates them)
             self._last_tok[slot] = req.generated[-1]

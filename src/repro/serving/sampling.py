@@ -57,6 +57,14 @@ class SamplingParams:
     stop_ids: stop *sequences* — each entry is a token-id tuple (a bare int
       means a 1-token sequence); generation finishes when the generated
       tail matches one.  Stop tokens are included in the output.
+    deadline_s: total wall-clock budget from arrival (None = unbounded).
+      Enforced host-side at tick boundaries; an expired request finishes
+      with ``finish_reason="timeout"``.  A stop committed before the
+      deadline check always wins (output already produced is never
+      retroactively timed out).
+    ttft_deadline_s: first-token budget from arrival (None = unbounded) —
+      fires only while the request has produced no token, so a request
+      that started streaming is governed by ``deadline_s`` alone.
     """
 
     temperature: float = 0.0
@@ -66,8 +74,15 @@ class SamplingParams:
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
     stop_ids: Tuple[Tuple[int, ...], ...] = ()
+    deadline_s: Optional[float] = None
+    ttft_deadline_s: Optional[float] = None
 
     def __post_init__(self):
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0: {self.deadline_s}")
+        if self.ttft_deadline_s is not None and self.ttft_deadline_s <= 0:
+            raise ValueError(
+                f"ttft_deadline_s must be > 0: {self.ttft_deadline_s}")
         if self.temperature < 0:
             raise ValueError(f"temperature must be >= 0: {self.temperature}")
         if self.top_k < 0:
@@ -158,7 +173,9 @@ class RequestOutput:
     request_id: int
     prompt_token_ids: Tuple[int, ...]
     token_ids: Tuple[int, ...]
-    finish_reason: Optional[str]          # None | "stop" | "length"
+    # None while running; "stop" | "length" on normal completion;
+    # "shed" | "timeout" | "cancelled" on the fault-tolerant exits
+    finish_reason: Optional[str]
     metrics: RequestMetrics
     logprobs: Tuple[Optional[float], ...] = ()
 

@@ -17,6 +17,25 @@ Admission control: a request is only admitted when a slot is free AND its
 worst-case context (prompt + max_new_tokens) fits the pool's per-slot
 token capacity — the refreeze scatter is unguarded on device, so the
 scheduler is the component that makes overflow impossible.
+
+Fault tolerance (PR 8) adds three lifecycle exits that are *not* normal
+completion, all host-side:
+
+* **shed** — ``max_queue`` bounds the admission queue; a submit past the
+  bound is rejected immediately with ``finish_reason="shed"`` (reject-new
+  before degrading live traffic — the request never holds a slot or page).
+* **timeout** — per-request deadlines (``SamplingParams.deadline_s`` /
+  ``ttft_deadline_s``) are enforced by :meth:`expire` at tick boundaries;
+  an expired request finishes with ``finish_reason="timeout"``.  A stop
+  committed by :meth:`record_tokens` always beats a *later* deadline
+  check — deadlines only fire on still-unfinished requests.
+* **cancelled** — :meth:`cancel` removes a request wherever it lives
+  (queued / prefilling / decoding) with ``finish_reason="cancelled"``.
+
+Deferred admissions (paged-pool reservation failure) requeue with
+exponential backoff: :meth:`defer_admission` stamps the queue head's
+``next_admit``, and :meth:`admit` refuses to admit it early.  Backoff is
+head-of-line only, so FIFO order is preserved.
 """
 from __future__ import annotations
 
@@ -39,11 +58,14 @@ class Request:
     prefill_done: int = 0            # prompt tokens already chunk-prefilled
     generated: List[int] = dataclasses.field(default_factory=list)
     logprobs: List[Optional[float]] = dataclasses.field(default_factory=list)
-    finish_reason: Optional[str] = None        # None | "stop" | "length"
+    # None | "stop" | "length" | "shed" | "timeout" | "cancelled"
+    finish_reason: Optional[str] = None
     arrival_time: float = 0.0
     first_token_time: Optional[float] = None
     finished_time: Optional[float] = None
     decode_ticks: int = 0            # engine decode steps consumed
+    next_admit: float = 0.0          # earliest admit time (backoff requeue)
+    backoff_s: float = 0.0           # current backoff interval
 
     @property
     def finished(self) -> bool:
@@ -116,6 +138,15 @@ class PrefixTrie:
     def drop(self, h: int) -> None:
         self._map.pop(h, None)
 
+    def reload(self, items) -> None:
+        """Replace the whole index (warm-restart restore).  In place, so
+        bound callbacks (the allocator's ``on_evict``) keep pointing at
+        the live object."""
+        self._map = dict(items)
+
+    def items(self):
+        return self._map.items()
+
     def __len__(self) -> int:
         return len(self._map)
 
@@ -134,18 +165,26 @@ class Scheduler:
     ``chunk`` is the max prompt tokens prefill processes per engine tick
     (rounded down to a block multiple for every chunk but the last, so the
     pool's frozen prefix stays block-aligned).  ``capacity_tokens`` is the
-    pool's per-slot limit used for admission.
+    pool's per-slot limit used for admission.  ``max_queue`` bounds the
+    admission queue (0 = unbounded): a submit past the bound is shed.
+    ``backoff_base`` / ``backoff_cap`` shape the exponential requeue delay
+    applied by :meth:`defer_admission`.
     """
 
     def __init__(self, slots: int, capacity_tokens: int, bs: int,
                  chunk: Optional[int] = None,
-                 clock=time.monotonic):
-        assert chunk is None or chunk >= bs, (chunk, bs)
+                 clock=time.monotonic, max_queue: int = 0,
+                 backoff_base: float = 0.005, backoff_cap: float = 0.25):
+        if chunk is not None and chunk < bs:
+            raise ValueError(f"prefill chunk {chunk} < block size {bs}")
         self.slots = slots
         self.capacity_tokens = capacity_tokens
         self.bs = bs
         self.chunk = (chunk // bs * bs) if chunk else None
         self.clock = clock
+        self.max_queue = max_queue
+        self.backoff_base = backoff_base
+        self.backoff_cap = backoff_cap
         self.queue: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}          # slot -> request
         self.finished: Dict[int, Request] = {}        # rid -> request
@@ -154,7 +193,15 @@ class Scheduler:
     # -- submission ---------------------------------------------------------
     def submit(self, prompt: List[int],
                params: Optional[SamplingParams] = None) -> int:
-        """Queue a request; returns its id.  Raises if it can never fit."""
+        """Queue a request; returns its id.  Raises if it can never fit.
+
+        With ``max_queue`` set and the queue full, the request is **shed**:
+        it goes straight to ``finished`` with ``finish_reason="shed"``,
+        holding no slot, no pages, and no queue position — load shedding
+        rejects new work before it can degrade live traffic.  Callers
+        distinguish the outcome by the returned request's finish reason,
+        not by an exception (shedding is a normal overload response).
+        """
         params = params if params is not None else SamplingParams()
         if not prompt:
             raise ValueError("empty prompt")
@@ -165,17 +212,30 @@ class Scheduler:
                 f"{self.capacity_tokens}")
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, list(prompt), params,
-                                  arrival_time=self.clock()))
+        now = self.clock()
+        req = Request(rid, list(prompt), params, arrival_time=now)
+        if self.max_queue and len(self.queue) >= self.max_queue:
+            req.finish_reason = "shed"
+            req.finished_time = now
+            self.finished[rid] = req
+        else:
+            self.queue.append(req)
         return rid
 
     # -- per-tick queries ---------------------------------------------------
     def free_slots(self) -> List[int]:
         return [s for s in range(self.slots) if s not in self.active]
 
-    def admit(self) -> Optional[Request]:
-        """Move the oldest queued request into a free slot (if any)."""
+    def admit(self, now: Optional[float] = None) -> Optional[Request]:
+        """Move the oldest queued request into a free slot (if any).
+
+        A head backing off after :meth:`defer_admission` is not admitted
+        before its ``next_admit`` time — and, to keep FIFO order, nothing
+        behind it is either.
+        """
         if not self.queue:
+            return None
+        if self.queue[0].next_admit > (self.clock() if now is None else now):
             return None
         free = self.free_slots()
         if not free:
@@ -184,6 +244,87 @@ class Scheduler:
         req.slot = free[0]
         self.active[req.slot] = req
         return req
+
+    def defer_admission(self, now: Optional[float] = None) -> float:
+        """Back off the queue head after a failed admission attempt (paged
+        page-reservation shortfall).  Doubles the head's backoff interval
+        (from ``backoff_base`` up to ``backoff_cap``) and stamps its
+        ``next_admit``; returns the interval.  Head-of-line only — FIFO
+        order is preserved, later requests simply wait behind the head.
+        """
+        now = self.clock() if now is None else now
+        req = self.queue[0]
+        req.backoff_s = min(self.backoff_cap,
+                            max(self.backoff_base, req.backoff_s * 2))
+        req.next_admit = now + req.backoff_s
+        return req.backoff_s
+
+    # -- lifecycle exits ----------------------------------------------------
+    def _finish_abnormal(self, req: Request, reason: str,
+                         now: float) -> None:
+        req.finish_reason = reason
+        req.finished_time = now
+        self.finished[req.rid] = req
+
+    def cancel(self, rid: int, now: Optional[float] = None
+               ) -> Optional[Request]:
+        """Cancel a request wherever it lives; returns it if state changed.
+
+        Queued: removed from the queue.  Active (prefilling or decoding):
+        removed from ``active`` — the caller owns releasing its slot
+        (``req.slot >= 0`` distinguishes this case).  Already finished
+        (or unknown rid): no-op, returns ``None`` — cancellation racing
+        normal completion loses quietly.
+        """
+        now = self.clock() if now is None else now
+        for req in self.queue:
+            if req.rid == rid:
+                self.queue.remove(req)
+                self._finish_abnormal(req, "cancelled", now)
+                return req
+        for slot, req in list(self.active.items()):
+            if req.rid == rid:
+                del self.active[slot]
+                self._finish_abnormal(req, "cancelled", now)
+                return req
+        return None
+
+    def expire(self, now: Optional[float] = None) -> List[Request]:
+        """Finish every request whose deadline has passed with
+        ``finish_reason="timeout"``; returns them (callers release the
+        slots of those with ``req.slot >= 0``).
+
+        Two deadlines per request, both measured from arrival:
+        ``params.ttft_deadline_s`` fires only while no token has been
+        produced; ``params.deadline_s`` bounds total wall clock.  Queued
+        requests expire too (a request that waited out its whole deadline
+        in the queue never deserves a slot).  Runs at tick *start*, so a
+        stop committed last tick already finished the request — committed
+        output always beats a later deadline check.
+        """
+        now = self.clock() if now is None else now
+        expired: List[Request] = []
+        for slot, req in list(self.active.items()):
+            if self._deadline_passed(req, now):
+                del self.active[slot]
+                self._finish_abnormal(req, "timeout", now)
+                expired.append(req)
+        for req in list(self.queue):
+            if self._deadline_passed(req, now):
+                self.queue.remove(req)
+                self._finish_abnormal(req, "timeout", now)
+                expired.append(req)
+        return expired
+
+    @staticmethod
+    def _deadline_passed(req: Request, now: float) -> bool:
+        p = req.params
+        waited = now - req.arrival_time
+        if p.deadline_s is not None and waited >= p.deadline_s:
+            return True
+        return (p.ttft_deadline_s is not None
+                and req.first_token_time is None
+                and waited >= p.ttft_deadline_s)
 
     def next_prefill(self) -> Optional[Request]:
         """The request owed a prefill chunk this tick (oldest first)."""

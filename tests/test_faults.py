@@ -1,0 +1,648 @@
+"""Fault-tolerant serving: the lifecycle + crash-recovery acceptance bar.
+
+What this file pins down:
+
+* **Load shedding** — a bounded admission queue rejects overflow at
+  submit time (``finish_reason="shed"``): no slot, no pages, one final
+  ``on_token`` snapshot, live traffic untouched.
+* **Deadlines** — ``ttft_deadline_s`` fires only before the first token;
+  ``deadline_s`` bounds total wall clock (queued requests expire too);
+  and the precedence rule: a stop committed last tick beats a later
+  deadline check, so a deadline can never retract emitted output.
+  Driven by an injected clock — no real sleeping.
+* **Cancellation** — ``cancel(rid)`` works queued / prefilling /
+  decoding, releases the slot through the normal batched path, and the
+  co-tenants' token streams are bit-identical to a run where the victim
+  never existed.
+* **Backoff requeue** — a deferred queue head doubles its backoff up to
+  the cap and nothing admits around it (FIFO preserved).
+* **Seeded fault matrix** — a :class:`FaultPlan` covering every engine
+  site (page exhaustion, drafter error, cancels mid-prefill and
+  mid-spec-window, double release) replayed against a paged+speculative
+  engine until the plan drains: every request terminal, zero steady-state
+  retraces, allocator refcounts conserved, untouched requests
+  token-identical to a fault-free run.  CI runs this under
+  ``REPRO_CHECKIFY=1`` so the device-side refcount invariants are live.
+* **Warm restart** — snapshot save/load round-trips the paged arena +
+  prefix index (follow-up wave token-identical, trie hits preserved);
+  geometry mismatches and corrupt snapshot files raise readable
+  ``ValueError``\\ s and never half-restore; the crash parity test
+  (subprocess, ``-k restart``) hard-exits after saving and proves a new
+  process resumes with identical greedy output.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serving import (BlockAllocator, CachePool, ContinuousEngine,
+                           Fault, FaultError, FaultPlan, PrefixTrie,
+                           SamplingParams, Scheduler, SpecConfig,
+                           corrupt_snapshot, stable_trace_counts)
+from repro.serving.faults import (DOUBLE_RELEASE, DRAFTER_ERROR,
+                                  ENGINE_SITES, PAGE_EXHAUSTION)
+
+WORKER = os.path.join(os.path.dirname(__file__), "workers",
+                      "restart_worker.py")
+
+
+class FakeClock:
+    """Injected monotonic clock: tests advance time, nothing sleeps."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# fault plan: seeded, replayable, must drain
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_seeded_replay_take_and_exhaustion():
+    a = FaultPlan.generate(seed=7, ticks=20)
+    b = FaultPlan.generate(seed=7, ticks=20)
+    assert a.pending() == b.pending()
+    assert {f.site for f in a.pending()} == set(ENGINE_SITES)
+    # a fault is not due before its tick, fires at the first tick >= it,
+    # and fires exactly once
+    plan = FaultPlan([Fault(DOUBLE_RELEASE, 5), Fault(DOUBLE_RELEASE, 2)])
+    assert not plan.take(DOUBLE_RELEASE, 1)
+    assert plan.take(DOUBLE_RELEASE, 3)          # oldest (tick 2) pops first
+    assert not plan.take(PAGE_EXHAUSTION, 99)    # wrong site never matches
+    assert not plan.exhausted()
+    assert plan.take(DOUBLE_RELEASE, 7)
+    assert plan.exhausted() and plan.fired == [(3, DOUBLE_RELEASE),
+                                               (7, DOUBLE_RELEASE)]
+    # seeded victim selection replays
+    p1, p2 = FaultPlan(seed=3), FaultPlan(seed=3)
+    picks1 = [p1.choose(list(range(10))) for _ in range(8)]
+    picks2 = [p2.choose(list(range(10))) for _ in range(8)]
+    assert picks1 == picks2
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        Fault("frobnicate", 1)
+    with pytest.raises(ValueError, match="tick"):
+        Fault(DOUBLE_RELEASE, -1)
+    with pytest.raises(ValueError, match="at least one option"):
+        FaultPlan().choose([])
+    with pytest.raises(FaultError, match="injected fault"):
+        FaultPlan(seed=4).raise_fault(DRAFTER_ERROR)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: shed / backoff / deadlines (host-only, injected clock)
+# ---------------------------------------------------------------------------
+
+def test_scheduler_sheds_past_queue_bound():
+    clk = FakeClock()
+    sch = Scheduler(slots=1, capacity_tokens=64, bs=16, clock=clk,
+                    max_queue=2)
+    r1 = sch.submit([1, 2, 3])
+    r2 = sch.submit([4, 5, 6])
+    r3 = sch.submit([7, 8, 9])                   # queue full -> shed
+    assert len(sch.queue) == 2
+    shed = sch.finished[r3]
+    assert shed.finish_reason == "shed" and shed.finished_time == clk.t
+    assert r1 not in sch.finished and r2 not in sch.finished
+    # an unbounded scheduler never sheds
+    free = Scheduler(slots=1, capacity_tokens=64, bs=16, clock=clk)
+    for _ in range(10):
+        free.submit([1])
+    assert not free.finished
+
+
+def test_scheduler_backoff_doubles_and_preserves_fifo():
+    clk = FakeClock()
+    sch = Scheduler(slots=2, capacity_tokens=64, bs=16, clock=clk,
+                    backoff_base=0.01, backoff_cap=0.03)
+    ra = sch.submit([1, 2])
+    rb = sch.submit([3, 4])
+    b1 = sch.defer_admission()
+    assert b1 == 0.01
+    assert sch.admit() is None                   # head backing off
+    b2 = sch.defer_admission()
+    assert b2 == 2 * b1
+    b3 = sch.defer_admission()
+    assert b3 == 0.03                            # capped
+    # nothing admits around the backing-off head: FIFO holds
+    clk.t = 0.02
+    assert sch.admit() is None
+    clk.t = 0.05
+    first = sch.admit()
+    assert first.rid == ra
+    assert sch.admit().rid == rb                 # rb never jumped the line
+
+
+def test_scheduler_deadlines_ttft_vs_total():
+    clk = FakeClock()
+    sch = Scheduler(slots=2, capacity_tokens=64, bs=16, clock=clk)
+    ra = sch.submit([1, 2], SamplingParams(max_new_tokens=4,
+                                           ttft_deadline_s=1.0))
+    rb = sch.submit([3, 4], SamplingParams(max_new_tokens=4,
+                                           deadline_s=2.0))
+    a, b = sch.admit(), sch.admit()
+    assert (a.rid, b.rid) == (ra, rb)
+    # first token in time: the ttft deadline disarms
+    clk.t = 0.5
+    sch.record_token(a.slot, 11)
+    clk.t = 1.5
+    assert sch.expire() == []                    # ra produced in time
+    # the total deadline fires even mid-stream
+    sch.record_token(b.slot, 22)
+    clk.t = 2.5
+    expired = sch.expire()
+    assert [r.rid for r in expired] == [rb]
+    assert expired[0].finish_reason == "timeout" and expired[0].slot >= 0
+    # queued requests expire without ever taking a slot
+    rq = sch.submit([5], SamplingParams(max_new_tokens=1,
+                                        ttft_deadline_s=0.1))
+    clk.t = 3.0
+    (gone,) = sch.expire()
+    assert gone.rid == rq and gone.slot == -1
+    assert gone.finish_reason == "timeout"
+
+
+def test_scheduler_cancel_everywhere_and_validation():
+    clk = FakeClock()
+    sch = Scheduler(slots=1, capacity_tokens=64, bs=16, clock=clk)
+    ra = sch.submit([1, 2])
+    rb = sch.submit([3, 4])
+    sch.admit()
+    queued = sch.cancel(rb)
+    assert queued.finish_reason == "cancelled" and queued.slot == -1
+    active = sch.cancel(ra)
+    assert active.finish_reason == "cancelled" and active.slot == 0
+    assert not sch.active
+    assert sch.cancel(ra) is None                # already finished: no-op
+    assert sch.cancel(999) is None               # unknown rid: no-op
+
+
+def test_prefix_trie_reload_keeps_bound_callbacks():
+    """``reload`` mutates the trie in place, so the allocator's bound
+    ``on_evict=trie.drop`` keeps pointing at the live index — an eviction
+    after a warm restart must invalidate the RESTORED hash."""
+    trie = PrefixTrie()
+    alloc = BlockAllocator(1, on_evict=trie.drop)
+    trie.insert(111, 0)
+    trie.reload([(222, 0)])                      # restart: new population
+    assert dict(trie.items()) == {222: 0}
+    alloc.restore_registered([(222, 0)])
+    alloc.alloc(1)                               # forces the LRU eviction
+    assert len(trie) == 0                        # drop hit the same object
+
+
+# ---------------------------------------------------------------------------
+# checkpoint manager: corrupt / mismatched restores fail readably
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_restore_errors_are_readable(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+    mgr.save(1, tree, blocking=True)
+
+    with pytest.raises(ValueError, match="not found.*available"):
+        mgr.restore(7, tree)
+    with pytest.raises(ValueError, match=r"available steps: \[1\]"):
+        mgr.read_manifest(7)
+    with pytest.raises(ValueError, match="missing array"):
+        mgr.restore(1, {"w": tree["w"], "extra": np.zeros(2)})
+    with pytest.raises(ValueError, match="expects shape"):
+        mgr.restore(1, {"w": np.zeros((3, 2), np.float32)})
+
+    # a torn file (truncated npz) must answer with the corruption message,
+    # not a raw zipfile traceback
+    corrupt_snapshot(str(tmp_path), mode="truncate")
+    with pytest.raises(ValueError, match="corrupt"):
+        mgr.restore(1, tree)
+
+
+def test_corrupt_snapshot_modes(tmp_path):
+    with pytest.raises(ValueError, match="no snapshot steps"):
+        corrupt_snapshot(str(tmp_path))
+    from repro.checkpoint.manager import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(1, {"w": np.zeros(64, np.float32)}, blocking=True)
+    path = corrupt_snapshot(str(tmp_path), mode="garbage", seed=1)
+    assert path.endswith("arrays.npz")
+    with pytest.raises(ValueError, match="corrupt"):
+        mgr.restore(1, {"w": np.zeros(64, np.float32)})
+    with pytest.raises(ValueError, match="unknown corruption mode"):
+        corrupt_snapshot(str(tmp_path), mode="eat")
+
+
+# ---------------------------------------------------------------------------
+# pool: release is a masked no-op on an already-free slot (checkify live)
+# ---------------------------------------------------------------------------
+
+def test_release_idempotent_under_checkify():
+    """Releasing a slot twice must NOT fire the refcount-underflow check:
+    the live mask is gated on ``prefix_blocks``, so the second release sees
+    an empty prefix and decrements nothing — the device half of the
+    double-release fault site."""
+    cfg = get_config("qwen3-0.6b").reduced()
+    cfg = dataclasses.replace(cfg, kv_k_sparsity=0.0, kv_v_sparsity=0.0,
+                              kv_tail=16)
+    pool = CachePool.build(cfg, slots=3, max_tokens=64, bs=16, paged=True,
+                           checkify=True)
+    from repro.serving.cache_pool import checkified_raw
+    checked = jax.jit(checkified_raw(pool.release))
+
+    def release(state, vec):
+        err, out = checked(state, jnp.asarray(vec, jnp.int32))
+        err.throw()
+        return dict(out)
+
+    tb = pool.tail // pool.bs
+    state = pool.init_state()
+    fill = jnp.asarray([16, 0, 0], jnp.int32)
+    state = dict(state, tail_len=fill, pos=state["pos"] + fill)
+    ids = np.zeros((pool.slots, tb), np.int32)
+    state = jax.jit(checkified_raw(pool.refreeze))(
+        state, jnp.asarray(ids))[1]
+    state = dict(state)
+    assert int(np.asarray(state["refcount"]).sum()) == 1
+
+    rel = np.full(pool.slots, -1, np.int32)
+    rel[0] = 0
+    state = release(state, rel)
+    assert int(np.asarray(state["refcount"]).sum()) == 0
+    # second release of the same slot: masked no-op, no checkify error
+    again = release(state, rel)
+    assert int(np.asarray(again["refcount"]).sum()) == 0
+    assert np.asarray(again["prefix_blocks"]).tolist() == [0, 0, 0]
+
+
+# ---------------------------------------------------------------------------
+# engine: shed / deadlines / cancellation (injected clock, flat pool)
+# ---------------------------------------------------------------------------
+
+def _setup(seed=0):
+    cfg = get_config("qwen3-0.6b").reduced()
+    cfg = dataclasses.replace(cfg, kv_k_sparsity=0.3, kv_v_sparsity=0.5,
+                              kv_tail=16, compute_dtype="float32",
+                              param_dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+def test_engine_shed_deadline_and_eos_precedence():
+    cfg, params = _setup()
+    clk = FakeClock()
+    eng = ContinuousEngine(params, cfg, slots=2, max_tokens=96, bs=16,
+                           prefill_chunk=32, max_queue=2, clock=clk)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, (20,)).tolist() for _ in range(4)]
+
+    # shed: 2 queued fills the bound; the third submit is rejected at the
+    # door with exactly one final callback and no registration
+    snaps = []
+    r1 = eng.submit(prompts[0], SamplingParams(max_new_tokens=6))
+    r2 = eng.submit(prompts[1], SamplingParams(max_new_tokens=6))
+    r3 = eng.submit(prompts[2], SamplingParams(max_new_tokens=6),
+                    on_token=snaps.append)
+    assert [s.finish_reason for s in snaps] == ["shed"]
+    assert eng.fault_counters["shed"] == 1 and r3 not in eng._callbacks
+    out = eng.run()
+    assert out[r1].finish_reason == "length" and len(out[r1].token_ids) == 6
+    assert out[r2].finish_reason == "length"
+    baseline = list(out[r1].token_ids)
+
+    # deadline mid-stream: advance the clock past deadline_s after a few
+    # ticks — partial output survives, finish_reason flips to timeout, and
+    # the co-tenant (no deadline) is token-identical to the clean run
+    ra = eng.submit(prompts[0], SamplingParams(max_new_tokens=6))
+    rb = eng.submit(prompts[3], SamplingParams(max_new_tokens=6,
+                                               deadline_s=5.0))
+    got = {}
+    while not eng.scheduler.done():
+        eng.step()
+        vb = eng.scheduler.active or {}
+        if any(r.rid == rb and len(r.generated) >= 2
+               for r in vb.values()):
+            clk.t += 10.0                        # blow rb's deadline
+    res = {rid: req.output() for rid, req in eng.scheduler.finished.items()}
+    assert res[rb].finish_reason == "timeout"
+    assert 2 <= len(res[rb].token_ids) < 6       # partial output retained
+    assert res[ra].finish_reason == "length"
+    assert list(res[ra].token_ids) == baseline
+    assert eng.fault_counters["timeout"] == 1
+    assert not eng._blocks and not eng.scheduler.active
+
+    # precedence: the deadline passes AFTER the final token committed —
+    # the committed stop must win (deadline never retracts output)
+    rc = eng.submit(prompts[1], SamplingParams(max_new_tokens=3,
+                                               deadline_s=50.0))
+    while not eng.scheduler.done():
+        eng.step()
+    clk.t += 100.0                               # now > deadline, too late
+    eng.step()                                   # expiry pass sees finished
+    outc = eng.scheduler.finished[rc].output()
+    assert outc.finish_reason == "length" and len(outc.token_ids) == 3
+    assert eng.fault_counters["timeout"] == 1    # unchanged
+
+    # ttft deadline: a queued request that never got a slot in time
+    eng.submit(prompts[0], SamplingParams(max_new_tokens=6))
+    eng.submit(prompts[1], SamplingParams(max_new_tokens=6))
+    eng.step()                                   # admit both into the slots
+    rq = eng.submit(prompts[2], SamplingParams(max_new_tokens=6,
+                                               ttft_deadline_s=1.0))
+    eng.step()                                   # both slots busy, rq queued
+    clk.t += 2.0
+    eng.run()
+    assert eng.scheduler.finished[rq].output().finish_reason == "timeout"
+
+
+def test_cancellation_token_identity():
+    """Cancelling one request leaves the co-tenants' token streams
+    bit-identical to a run where the victim never existed, the slot is
+    recycled, and nothing retraces."""
+    cfg, params = _setup()
+    eng = ContinuousEngine(params, cfg, slots=2, max_tokens=96, bs=16,
+                           prefill_chunk=32)
+    rng = np.random.default_rng(1)
+    pa = rng.integers(0, cfg.vocab, (20,)).tolist()
+    pb = rng.integers(0, cfg.vocab, (24,)).tolist()
+    sp = SamplingParams(max_new_tokens=8)
+
+    ra = eng.submit(pa, sp)
+    solo = list(eng.run()[ra].token_ids)
+    warm = eng.trace_counts()
+
+    # cancel mid-decode: victim keeps its partial tokens, survivor matches
+    ra = eng.submit(pa, sp)
+    snaps = []
+    rv = eng.submit(pb, sp, on_token=snaps.append)
+    while not any(s.request_id == rv and len(s.token_ids) >= 2
+                  for s in snaps):
+        eng.step()
+    assert eng.cancel(rv) is True
+    assert eng.cancel(rv) is False               # second cancel: quiet no-op
+    assert snaps[-1].finish_reason == "cancelled"
+    out = eng.run()
+    assert list(out[ra].token_ids) == solo
+    assert out[rv].finish_reason == "cancelled"
+    assert eng.fault_counters["cancelled"] == 1
+
+    # cancel while still queued: never takes a slot, survivors unaffected
+    ra = eng.submit(pa, sp)
+    rb = eng.submit(pb, sp)
+    rq = eng.submit(pa, sp)                      # 3rd request, 2 slots
+    assert eng.cancel(rq) is True
+    out = eng.run()
+    assert list(out[ra].token_ids) == solo
+    assert out[rq].finish_reason == "cancelled"
+    assert len(out[rq].token_ids) == 0
+    after = eng.trace_counts()
+    assert stable_trace_counts(after) == stable_trace_counts(warm), \
+        f"cancellation retraced: {warm} -> {after}"
+    assert not eng.scheduler.active and not eng._blocks
+
+
+# ---------------------------------------------------------------------------
+# engine: the seeded fault matrix (paged + speculative)
+# ---------------------------------------------------------------------------
+
+def _fault_wave(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab, (32,)).tolist()
+    return [shared + rng.integers(0, cfg.vocab, (4,)).tolist(),
+            shared + rng.integers(0, cfg.vocab, (7,)).tolist(),
+            rng.integers(0, cfg.vocab, (40,)).tolist(),
+            rng.integers(0, cfg.vocab, (12,)).tolist()]
+
+
+def _drive_matrix(eng, prompts, plan=None, max_ticks=400):
+    """Keep the engine under traffic until the plan drains (or one wave
+    finishes, fault-free); returns {(wave, prompt index): Request}."""
+    sp = SamplingParams(max_new_tokens=10)
+    done = {}
+    wave = 0
+    rids = {eng.submit(p, sp): (wave, i) for i, p in enumerate(prompts)}
+    for _ in range(max_ticks):
+        if eng.scheduler.queue and not eng.scheduler.active:
+            # whole queue backing off (injected page exhaustion): idle-wait
+            # like a real server tick instead of spinning past the backoff
+            time.sleep(0.005)
+        eng.step()
+        if eng.scheduler.done():
+            for rid, key in rids.items():
+                done[key] = eng.scheduler.finished[rid]
+            if plan is None or plan.exhausted():
+                break
+            wave += 1
+            rids = {eng.submit(p, sp): (wave, i)
+                    for i, p in enumerate(prompts)}
+    assert eng.scheduler.done(), "matrix run did not drain"
+    return done
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_fault_matrix_engine_survives(seed):
+    """Every engine fault site fires (seeded schedule); the engine ends
+    drained and conserves refcounts, steady-state traces stay flat, and
+    every request the plan didn't cancel is token-identical to the
+    fault-free run."""
+    cfg, params = _setup()
+    prompts = _fault_wave(cfg)
+    kw = dict(slots=2, max_tokens=96, bs=16, prefill_chunk=32, paged=True,
+              spec=SpecConfig(k=3))
+
+    base_eng = ContinuousEngine(params, cfg, **kw)
+    base = _drive_matrix(base_eng, prompts)
+    base_toks = {i: list(req.output().token_ids)
+                 for (_, i), req in base.items()}
+
+    plan = FaultPlan.generate(seed=seed, ticks=16)
+    eng = ContinuousEngine(params, cfg, **kw, faults=plan, max_queue=8)
+    done = _drive_matrix(eng, prompts, plan=plan)
+    assert plan.exhausted(), f"plan stuck: {plan.pending()}"
+    assert len(plan.fired) == len(ENGINE_SITES)
+
+    # the sites left their fingerprints
+    fc = eng.fault_counters
+    assert fc["cancelled"] >= 2                  # prefill + spec cancels
+    assert fc["drafter_error"] == 1
+    assert fc["injected_page_exhaustion"] == 1 and fc["deferred"] >= 1
+    assert fc["double_release"] == 1
+
+    # zero steady-state retraces across the whole faulted run
+    traces = stable_trace_counts(eng.trace_counts())
+    assert all(v <= 1 for v in traces.values()), traces
+
+    # every request terminal; non-victims token-identical to fault-free
+    reasons = {req.finish_reason for req in done.values()}
+    assert reasons <= {"length", "stop", "cancelled"}
+    victims = 0
+    for (_, i), req in done.items():
+        if req.finish_reason == "cancelled":
+            victims += 1
+            continue
+        assert list(req.output().token_ids) == base_toks[i], \
+            f"prompt {i} perturbed by faults (seed {seed})"
+    assert victims == fc["cancelled"]
+
+    # conservation: all slots released, all refcounts back to zero
+    assert not eng._blocks and not eng._reserved
+    assert not eng._slot_live.any()
+    assert int(eng._alloc._ref.sum()) == 0
+    assert int(np.asarray(eng.state["refcount"]).sum()) == 0
+
+
+def test_double_release_is_counted_not_fatal():
+    """The engine-level half of the double-release bar: an already-free
+    slot pushed through the release path is absorbed as a counted warning
+    (allocator untouched, device no-op) and the engine keeps serving."""
+    cfg, params = _setup()
+    plan = FaultPlan([Fault(DOUBLE_RELEASE, 1)], seed=0)
+    eng = ContinuousEngine(params, cfg, slots=2, max_tokens=96, bs=16,
+                           prefill_chunk=32, paged=True, faults=plan)
+    prompts = _fault_wave(cfg)[:2]
+    out = {}
+    rids = [eng.submit(p, SamplingParams(max_new_tokens=6))
+            for p in prompts]
+    while not eng.scheduler.done():
+        eng.step()
+    assert plan.exhausted()
+    assert eng.fault_counters["double_release"] >= 1
+    for r in rids:
+        out[r] = eng.scheduler.finished[r].output()
+        assert out[r].finish_reason == "length"
+    assert int(eng._alloc._ref.sum()) == 0
+    assert int(np.asarray(eng.state["refcount"]).sum()) == 0
+
+
+# ---------------------------------------------------------------------------
+# engine: snapshot round-trip + failure modes
+# ---------------------------------------------------------------------------
+
+def _paged_engine(params, cfg, **kw):
+    return ContinuousEngine(params, cfg, slots=2, max_tokens=96, bs=16,
+                            prefill_chunk=32, paged=True, **kw)
+
+
+def test_snapshot_roundtrip_and_failure_modes(tmp_path):
+    cfg, params = _setup()
+    rng = np.random.default_rng(2)
+    shared = rng.integers(0, cfg.vocab, (48,)).tolist()
+    wave = [shared + rng.integers(0, cfg.vocab, (4,)).tolist()
+            for _ in range(2)]
+    followup = [shared + rng.integers(0, cfg.vocab, (6,)).tolist()
+                for _ in range(2)]
+    sp = SamplingParams(max_new_tokens=6)
+    snap = str(tmp_path / "snap")
+
+    saver = _paged_engine(params, cfg)
+    for p in wave:
+        saver.submit(p, sp)
+    saver.run()
+    n_pages = len(saver._trie)
+    assert n_pages > 0
+    step = saver.save_snapshot(snap)
+    assert step == 1
+    rids = [saver.submit(p, sp) for p in followup]
+    res = saver.run()
+    base_follow = [list(res[r].token_ids) for r in rids]
+
+    # busy-engine guard, then the round-trip on the same engine: a fresh
+    # engine resumes with the trie populated and the follow-up wave
+    # token-identical to the never-restarted engine
+    loader = _paged_engine(params, cfg)
+    loader.submit(wave[0], sp)
+    with pytest.raises(ValueError, match="busy"):
+        loader.load_snapshot(snap)
+    loader.run()                                 # drain; trie gets replaced
+    restored = loader.load_snapshot(snap)
+    assert restored == n_pages and len(loader._trie) == n_pages
+    rids = [loader.submit(p, sp) for p in followup]
+    res = loader.run()
+    assert [list(res[r].token_ids) for r in rids] == base_follow
+
+    # loading from an empty directory is a readable error
+    os.makedirs(str(tmp_path / "void"))
+    strict = _paged_engine(params, cfg)
+    with pytest.raises(ValueError, match="no snapshot"):
+        strict.load_snapshot(str(tmp_path / "void"))
+
+    # geometry mismatch: rewrite the manifest's geometry in place — every
+    # differing field is named, nothing half-applies
+    man = os.path.join(snap, f"step_{step:010d}", "manifest.json")
+    with open(man) as f:
+        manifest = json.load(f)
+    manifest["geometry"]["n_phys"] = 999
+    manifest["geometry"]["bs"] = 8
+    with open(man, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(ValueError) as ei:
+        strict.load_snapshot(snap)
+    msg = str(ei.value)
+    assert "geometry mismatch" in msg
+    assert "n_phys" in msg and "999" in msg and "bs" in msg
+    assert len(strict._trie) == 0                # nothing half-applied
+
+    # corrupt arrays: readable error, engine stays cold but serviceable
+    with open(man, "w") as f:
+        json.dump({**manifest,
+                   "geometry": saver.pool.geometry()}, f)
+    corrupt_snapshot(snap, mode="truncate")
+    cold = _paged_engine(params, cfg)
+    with pytest.raises(ValueError, match="corrupt"):
+        cold.load_snapshot(snap)
+    assert len(cold._trie) == 0
+    assert cold._alloc.free_blocks() == cold.pool.n_phys
+    rids = [cold.submit(p, sp) for p in followup]
+    res = cold.run()                             # cold but fully functional
+    assert [list(res[r].token_ids) for r in rids] == base_follow
+
+
+def test_snapshot_guards_need_paged_pool():
+    cfg, params = _setup()
+    flat = ContinuousEngine(params, cfg, slots=2, max_tokens=96, bs=16,
+                            prefill_chunk=32)
+    with pytest.raises(ValueError, match="paged"):
+        flat.save_snapshot("/tmp/nope")
+    with pytest.raises(ValueError, match="paged"):
+        flat.load_snapshot("/tmp/nope")
+
+
+# ---------------------------------------------------------------------------
+# crash-restart parity (subprocess; CI runs this under -k restart)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_crash_restart_parity(tmp_path):
+    """Process A serves, snapshots, then HARD-exits (os._exit — no
+    graceful teardown).  Process B starts fresh, warm-restarts from the
+    snapshot, and must (a) restore every frozen page, (b) admit the
+    follow-up wave on trie hits, and (c) emit greedy output identical to
+    the never-restarted engine (printed by A before it died)."""
+    snap = str(tmp_path / "snap")
+
+    def run_worker(phase):
+        out = subprocess.run([sys.executable, WORKER, phase, snap],
+                             capture_output=True, text=True, timeout=900)
+        assert out.returncode == 0, out.stderr[-3000:]
+        return json.loads(out.stdout.strip().splitlines()[-1])
+
+    a = run_worker("save")
+    assert a["n_pages"] > 0 and a["crash"] == "os._exit"
+    b = run_worker("restore")
+    assert b["restored"] == a["n_pages"]
+    assert b["trie_len"] == a["n_pages"]
+    assert b["followup_tokens"] == a["followup_tokens"], \
+        "warm-restarted output diverged from the never-restarted engine"
+    assert b["prefill_skipped"], \
+        "restored trie produced no prefix hit on the follow-up wave"

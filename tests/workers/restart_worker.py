@@ -1,0 +1,93 @@
+"""Subprocess worker: crash-safe warm-restart parity.
+
+Two phases, each its own process (argv: ``phase snapshot_dir``), printing
+one JSON line on stdout:
+
+* ``save`` — serve a shared-prefix wave on a paged engine (freezing the
+  prefix pages), ``save_snapshot``, then run the follow-up wave on the
+  SAME never-restarted engine (the parity reference) and **hard-exit via
+  ``os._exit(0)``** — no atexit hooks, no interpreter teardown, the
+  closest a test can get to dying right after the snapshot rename.
+* ``restore`` — a fresh process builds a fresh engine, ``load_snapshot``s,
+  serves the same follow-up wave, and reports its tokens plus whether the
+  restored trie let admission skip the shared prefill.
+
+The parent test asserts restore's follow-up tokens are identical to
+save's, the restored page count matches, and a prefix hit actually
+happened.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..",
+                                "src"))
+
+import dataclasses
+import json
+
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serving import ContinuousEngine, SamplingParams
+
+
+def _setup():
+    cfg = get_config("qwen3-0.6b").reduced()
+    cfg = dataclasses.replace(cfg, kv_k_sparsity=0.3, kv_v_sparsity=0.5,
+                              kv_tail=16, compute_dtype="float32",
+                              param_dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab, (48,)).tolist()
+    wave = [shared + rng.integers(0, cfg.vocab, (4,)).tolist()
+            for _ in range(2)]
+    followup = [shared + rng.integers(0, cfg.vocab, (6,)).tolist()
+                for _ in range(2)]
+    eng = ContinuousEngine(params, cfg, slots=2, max_tokens=96, bs=16,
+                           prefill_chunk=32, paged=True)
+    return eng, wave, followup
+
+
+def _serve(eng, prompts):
+    sp = SamplingParams(max_new_tokens=6)
+    rids = [eng.submit(p, sp) for p in prompts]
+    res = eng.run()
+    return [list(res[r].token_ids) for r in rids]
+
+
+def main():
+    phase, snap = sys.argv[1], sys.argv[2]
+    eng, wave, followup = _setup()
+    if phase == "save":
+        _serve(eng, wave)
+        n_pages = len(eng._trie)
+        eng.save_snapshot(snap)
+        follow_toks = _serve(eng, followup)
+        print(json.dumps({"n_pages": n_pages,
+                          "followup_tokens": follow_toks,
+                          "crash": "os._exit"}))
+        sys.stdout.flush()
+        os._exit(0)                    # die hard: no teardown after save
+    elif phase == "restore":
+        restored = eng.load_snapshot(snap)
+        trie_len = len(eng._trie)
+        sp = SamplingParams(max_new_tokens=6)
+        rids = [eng.submit(p, sp) for p in followup]
+        eng.step()                     # admission tick
+        # a trie hit admits with the restored 48-token shared prefix
+        # already marked prefilled; a cold admission's first chunk is <= 32
+        skipped = any(r.prefill_done >= 48
+                      for r in eng.scheduler.active.values())
+        res = eng.run()
+        follow_toks = [list(res[r].token_ids) for r in rids]
+        print(json.dumps({"restored": restored, "trie_len": trie_len,
+                          "followup_tokens": follow_toks,
+                          "prefill_skipped": skipped}))
+    else:
+        raise SystemExit(f"unknown phase {phase!r}")
+
+
+if __name__ == "__main__":
+    main()
