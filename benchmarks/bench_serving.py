@@ -41,9 +41,17 @@ TTFT is compared between a cold fresh engine and a fresh engine that
 ``load_snapshot``-ed first (greedy tokens must agree); written to
 ``BENCH_restart.json``.
 
+``--traffic`` is the SLO benchmark: an open-loop traffic generator with
+Poisson and bursty arrivals and mixed prompt/output lengths sweeps
+offered load (0.5x/1x/2x an estimated closed-loop capacity) against a
+bounded-queue paged engine with per-request deadlines, reporting p50/p99
+TTFT, p50/p99 TPOT (time per output token), goodput
+(normally-finished tokens per second), and shed/timeout rates at every
+operating point; written to ``BENCH_traffic.json``.
+
   PYTHONPATH=src python -m benchmarks.bench_serving \
       [--spec] [--spec-k K] [--mesh] [--shared-prefix] \
-      [--overload] [--restart]
+      [--overload] [--restart] [--traffic [--traffic-requests N]]
 """
 from __future__ import annotations
 
@@ -60,6 +68,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import lm
+from repro.obs import percentile_summary
 from repro.serving import (Engine, ContinuousEngine, FaultPlan,
                            SamplingParams, SpecConfig, retrace_count,
                            stable_trace_counts)
@@ -103,14 +112,15 @@ def run():
                 for row in np.asarray(toks)]
         out = eng.run()
         dt = time.perf_counter() - t0
-        ttfts = np.asarray([out[r].metrics.ttft for r in rids])
+        ttft = percentile_summary([out[r].metrics.ttft for r in rids],
+                                  qs=(50, 99), scale=1e3)
         reasons = Counter(out[r].finish_reason for r in rids)
         n = max(len(rids), 1)
         emit(f"serving/continuous/batch={b}", dt * 1e6,
              f"tok_s={b * STEPS / dt:.1f};"
              f"decode_traces={eng.trace_counts()['decode']};"
-             f"ttft_p50={np.percentile(ttfts, 50) * 1e3:.1f}ms;"
-             f"ttft_p99={np.percentile(ttfts, 99) * 1e3:.1f}ms;"
+             f"ttft_p50={ttft['p50']:.1f}ms;"
+             f"ttft_p99={ttft['p99']:.1f}ms;"
              f"shed={reasons['shed'] / n:.2f};"
              f"timeout={reasons['timeout'] / n:.2f};"
              f"cancelled={reasons['cancelled'] / n:.2f}")
@@ -328,15 +338,17 @@ def run_shared_prefix(n_req: int = 16, steps: int = 32,
             conc = max(conc, len(eng.scheduler.active))
         dt = time.perf_counter() - t0
         out = {r: eng.scheduler.finished[r].output() for r in rids}
-        ttfts = np.asarray([out[r].metrics.ttft for r in rids])
+        ttft = percentile_summary([out[r].metrics.ttft for r in rids],
+                                  qs=(50, 99), scale=1e3)
         r2 = [eng.submit(p, sp) for p in followup]
         out2 = eng.run()
-        hit = np.asarray([out2[r].metrics.ttft for r in r2])
+        hit = percentile_summary([out2[r].metrics.ttft for r in r2],
+                                 qs=(50,), scale=1e3)
         return {"tok_s": n_req * steps / dt, "wall_s": dt,
                 "concurrency": conc,
-                "ttft_p50_ms": float(np.percentile(ttfts, 50) * 1e3),
-                "ttft_p99_ms": float(np.percentile(ttfts, 99) * 1e3),
-                "hit_ttft_ms": float(np.median(hit) * 1e3),
+                "ttft_p50_ms": ttft["p50"],
+                "ttft_p99_ms": ttft["p99"],
+                "hit_ttft_ms": hit["p50"],
                 "tokens": [list(out[r].token_ids) for r in rids]}
 
     flat_eng = ContinuousEngine(params, cfg, slots=flat_slots,
@@ -446,6 +458,8 @@ def run_overload(n_req: int = 24, steps: int = 24,
         "n_req": n_req, "steps": steps, "slots": slots, "max_queue": 6,
         "wall_s": dt,
         "goodput_tok_s": goodput,
+        "ttft_ms": percentile_summary(
+            [out[r].metrics.ttft for r in good], qs=(50, 99), scale=1e3),
         "finish_reasons": dict(reasons),
         "shed_rate": reasons["shed"] / n_req,
         "timeout_rate": reasons["timeout"] / n_req,
@@ -536,9 +550,9 @@ def run_restart(n_req: int = 8, steps: int = 16,
     def timed_wave(eng, prompts):
         rids = [eng.submit(p, sp) for p in prompts]
         out = eng.run()
-        ttfts = np.asarray([out[r].metrics.ttft for r in rids])
-        return ([list(out[r].token_ids) for r in rids],
-                float(np.median(ttfts) * 1e3))
+        ttft = percentile_summary([out[r].metrics.ttft for r in rids],
+                                  qs=(50,), scale=1e3)
+        return ([list(out[r].token_ids) for r in rids], ttft["p50"])
 
     snap_dir = tempfile.mkdtemp(prefix="bench_restart_")
     first = fresh()
@@ -583,6 +597,142 @@ def run_restart(n_req: int = 8, steps: int = 16,
     print(f"wrote {out_json}")
 
 
+def run_traffic(n_req: int = 32, out_json: str = "BENCH_traffic.json"):
+    """Open-loop SLO traffic benchmark: goodput vs offered load.
+
+    A closed-loop wave first estimates the engine's capacity (tok/s and
+    the request rate that saturates it).  Then, for each arrival pattern
+    (``poisson``: i.i.d. exponential gaps; ``bursty``: bursts of 4
+    back-to-back arrivals at Poisson burst times) and each offered load
+    (0.5x/1x/2x capacity), an open-loop generator submits ``n_req``
+    requests with mixed prompt lengths (PROMPT/2..PROMPT) and output
+    lengths at the scheduled wall-clock instants — it never waits for the
+    engine, which is what makes overload real.  The engine carries PR 8's
+    protections (bounded queue, TTFT + total deadlines), so past the knee
+    it degrades by shedding and expiring, not by stretching every
+    request.  Per operating point: p50/p99 TTFT, p50/p99 TPOT, goodput
+    (tokens from normally-finished requests per second), and
+    shed/timeout rates.
+    """
+    slots, bs, chunk, steps_max = 4, 16, 32, 24
+    cfg = get_config("qwen3-0.6b").reduced()
+    cfg = dataclasses.replace(cfg, kv_k_sparsity=0.3, kv_v_sparsity=0.5,
+                              kv_tail=KV_TAIL)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    max_tokens = PROMPT + steps_max + KV_TAIL
+    # one fixed mixed-length workload, reused at every operating point so
+    # the sweep varies arrival times only
+    plens = rng.integers(PROMPT // 2, PROMPT + 1, n_req)
+    steps = rng.integers(steps_max // 2, steps_max + 1, n_req)
+    prompts = [rng.integers(0, cfg.vocab, (int(p),)).tolist()
+               for p in plens]
+
+    def fresh():
+        return ContinuousEngine(params, cfg, slots=slots,
+                                max_tokens=max_tokens, bs=bs,
+                                prefill_chunk=chunk, paged=True,
+                                max_queue=2 * slots)
+
+    # -- capacity estimate: closed-loop (everything offered at t=0) ---------
+    eng = fresh()
+    for p in prompts[:2]:                                       # compile
+        eng.submit(p, SamplingParams(max_new_tokens=3))
+    eng.run()
+    n_cal = min(n_req, 2 * slots)
+    t0 = time.perf_counter()
+    rids = [eng.submit(prompts[i],
+                       SamplingParams(max_new_tokens=int(steps[i])))
+            for i in range(n_cal)]
+    out = eng.run()
+    cal_dt = time.perf_counter() - t0
+    cal_toks = sum(len(out[r].token_ids) for r in rids)
+    capacity_tok_s = cal_toks / cal_dt
+    mean_out = float(np.mean(steps[:n_cal]))
+    capacity_rps = capacity_tok_s / mean_out
+
+    def arrivals(pattern, rate, rng):
+        if pattern == "poisson":
+            return np.cumsum(rng.exponential(1.0 / rate, n_req))
+        burst = 4                       # bursty: B back-to-back arrivals
+        n_bursts = -(-n_req // burst)   # at Poisson burst times, same
+        t = np.cumsum(rng.exponential(burst / rate, n_bursts))  # mean rate
+        return np.repeat(t, burst)[:n_req]
+
+    def drive(sched):
+        eng = fresh()
+        for p in prompts[:2]:                                   # compile
+            eng.submit(p, SamplingParams(max_new_tokens=3))
+        eng.run()
+        rids = [None] * n_req
+        i = 0
+        t_start = time.perf_counter()
+        while i < n_req or not eng.scheduler.done():
+            now = time.perf_counter() - t_start
+            while i < n_req and sched[i] <= now:
+                sp = SamplingParams(max_new_tokens=int(steps[i]),
+                                    deadline_s=8.0, ttft_deadline_s=4.0)
+                rids[i] = eng.submit(prompts[i], sp)
+                i += 1
+            if eng.scheduler.done():
+                # open loop gone idle: sleep until the next arrival
+                time.sleep(min(max(sched[i] - now, 0.0), 0.05))
+                continue
+            eng.step()
+        dt = time.perf_counter() - t_start
+        out = {r: eng.scheduler.finished[r].output() for r in rids}
+        reasons = Counter(out[r].finish_reason for r in rids)
+        good = [r for r in rids
+                if out[r].finish_reason in ("length", "stop")]
+        return {
+            "wall_s": dt,
+            "ttft_ms": percentile_summary(
+                [out[r].metrics.ttft for r in good],
+                qs=(50, 99), scale=1e3),
+            "tpot_ms": percentile_summary(
+                [out[r].metrics.tpot for r in good],
+                qs=(50, 99), scale=1e3),
+            "goodput_tok_s": sum(len(out[r].token_ids)
+                                 for r in good) / dt,
+            "finish_reasons": dict(reasons),
+            "shed_rate": reasons["shed"] / n_req,
+            "timeout_rate": reasons["timeout"] / n_req,
+            "decode_traces": eng.trace_counts()["decode"],
+        }
+
+    loads = (0.5, 1.0, 2.0)
+    results = {
+        "n_req": n_req, "slots": slots, "steps_max": steps_max,
+        "prompt_max": PROMPT, "max_queue": 2 * slots,
+        "deadline_s": 8.0, "ttft_deadline_s": 4.0,
+        "capacity_tok_s": capacity_tok_s, "capacity_rps": capacity_rps,
+        "loads": list(loads), "patterns": {},
+    }
+    for pattern in ("poisson", "bursty"):
+        rows = {}
+        for load in loads:
+            rate = capacity_rps * load
+            row = drive(arrivals(pattern, rate, np.random.default_rng(1)))
+            row["offered_rps"] = rate
+            row["offered_load"] = load
+            rows[str(load)] = row
+            ttft, tpot = row["ttft_ms"], row["tpot_ms"]
+            emit(f"serving/traffic/{pattern}/load={load}",
+                 row["wall_s"] * 1e6,
+                 f"goodput={row['goodput_tok_s']:.1f}tok_s;"
+                 f"ttft_p50={ttft['p50']:.0f}ms;ttft_p99={ttft['p99']:.0f}ms;"
+                 f"tpot_p50={tpot['p50']:.0f}ms;tpot_p99={tpot['p99']:.0f}ms;"
+                 f"shed={row['shed_rate']:.2f};"
+                 f"timeout={row['timeout_rate']:.2f}"
+                 if ttft["count"] else
+                 f"goodput=0;shed={row['shed_rate']:.2f};"
+                 f"timeout={row['timeout_rate']:.2f}")
+        results["patterns"][pattern] = rows
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_json}")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--spec", action="store_true",
@@ -601,12 +751,20 @@ if __name__ == "__main__":
     ap.add_argument("--restart", action="store_true",
                     help="cold vs warm-restart TTFT via snapshot "
                          "save/load (BENCH_restart.json)")
+    ap.add_argument("--traffic", action="store_true",
+                    help="open-loop SLO traffic sweep: Poisson + bursty "
+                         "arrivals at 0.5x/1x/2x capacity, p50/p99 "
+                         "TTFT/TPOT + goodput per operating point "
+                         "(BENCH_traffic.json)")
+    ap.add_argument("--traffic-requests", type=int, default=32,
+                    help="with --traffic: requests per operating point "
+                         "(smaller = faster smoke run)")
     args = ap.parse_args()
     modes = (args.spec, args.mesh, args.shared_prefix, args.overload,
-             args.restart)
+             args.restart, args.traffic)
     if sum(modes) > 1:
         ap.error("--spec / --mesh / --shared-prefix / --overload / "
-                 "--restart are separate modes")
+                 "--restart / --traffic are separate modes")
     if args.spec:
         if args.spec_k <= 0:
             ap.error("--spec requires --spec-k >= 1")
@@ -619,5 +777,7 @@ if __name__ == "__main__":
         run_overload()
     elif args.restart:
         run_restart()
+    elif args.traffic:
+        run_traffic(n_req=args.traffic_requests)
     else:
         run()

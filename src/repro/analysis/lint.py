@@ -66,6 +66,10 @@ JIT_MODULES: Sequence[str] = (
     # it must stay jax-free, assert-free, and sync-free, so hold it to the
     # same bar as the traced modules
     "serving/faults.py",
+    # same reasoning: the observability layer is fed from the tick loop
+    # and must never grow a device sync of its own (it is pure stdlib —
+    # no numpy, no jax — and the host-sync rules keep it that way)
+    "obs/",
     "distributed/cp_attention.py",
 )
 

@@ -121,6 +121,32 @@ def main(argv=None):
                     help="stream mode, with --spec-k: drop speculative "
                          "drafting to 0 while the queue holds at least "
                          "this many requests (pressure relief); 0 = off")
+    # observability (stream mode): all host-side, all jit-invisible —
+    # the engine feeds repro.obs at its tick-boundary sync point only
+    ap.add_argument("--metrics-port", type=int, default=-1,
+                    help="stream mode: serve Prometheus text exposition "
+                         "on http://127.0.0.1:PORT/metrics from a "
+                         "background thread (0 = pick a free port; "
+                         "-1 = off)")
+    ap.add_argument("--trace-file", default="",
+                    help="stream mode: write request-lifecycle spans "
+                         "(submit/queued/prefill/decode/finish, fault "
+                         "firings, snapshot save/load) as a Chrome "
+                         "trace-event JSON — load it in chrome://tracing "
+                         "or https://ui.perfetto.dev")
+    ap.add_argument("--log-json", action="store_true",
+                    help="stream mode: one structured JSON line per "
+                         "finished request (id, finish_reason, ttft, "
+                         "tpot, queue/prefill/decode breakdown) instead "
+                         "of the free-form result prints")
+    ap.add_argument("--profile-dir", default="",
+                    help="stream mode: wrap the serving stream in "
+                         "jax.profiler.trace(DIR) — inspect the XLA/"
+                         "device timeline in TensorBoard or Perfetto")
+    ap.add_argument("--report-every", type=float, default=0.0,
+                    help="stream mode: print a one-line metrics report "
+                         "(ticks, tok/s rolling median, queue, shed/"
+                         "timeout) every N seconds of serving; 0 = off")
     # sampling (0 temperature = greedy; each request gets its own seed)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
@@ -129,6 +155,12 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.spec_adaptive and not args.spec_k:
         ap.error("--spec-adaptive requires --spec-k >= 1")
+    if args.one_shot and (args.metrics_port >= 0 or args.trace_file
+                          or args.log_json or args.profile_dir
+                          or args.report_every):
+        ap.error("observability flags (--metrics-port/--trace-file/"
+                 "--log-json/--profile-dir/--report-every) are "
+                 "stream-mode only")
     if args.audit and args.one_shot:
         ap.error("--audit is stream-mode only (the one-shot engine has no "
                  "warmup/steady-state split to audit)")
@@ -219,6 +251,16 @@ def main(argv=None):
         mesh = make_mesh((dp, tp), ("data", "model"))
         print(f"[serve] mesh {dp}x{tp} (data x model): {slots} slots over "
               f"data, {cfg.n_kv} KV heads over model")
+    obs = None
+    metrics_server = None
+    if args.metrics_port >= 0 or args.trace_file or args.report_every:
+        from repro.obs import MetricsServer, Observability
+        obs = Observability(trace_path=args.trace_file or None,
+                            report_every=args.report_every)
+        if args.metrics_port >= 0:
+            metrics_server = MetricsServer(obs.registry,
+                                           port=args.metrics_port).start()
+            print(f"[serve] metrics: {metrics_server.url}")
     eng = ContinuousEngine(
         params, cfg, slots=slots,
         max_tokens=args.prompt_len + args.steps + cfg.kv_tail,
@@ -226,7 +268,8 @@ def main(argv=None):
         spec=SpecConfig(k=args.spec_k, adaptive=args.spec_adaptive)
         if args.spec_k else None,
         mesh=mesh, paged=args.paged, phys_blocks=args.phys_blocks,
-        max_queue=args.max_queue, degrade_queue=args.degrade_queue)
+        max_queue=args.max_queue, degrade_queue=args.degrade_queue,
+        obs=obs)
     if args.paged:
         print(f"[serve] paged pool: {eng.pool.n_phys} physical blocks of "
               f"{eng.pool.bs} tokens behind {slots}x{eng.pool.max_blocks} "
@@ -257,47 +300,99 @@ def main(argv=None):
         eng.run()
         baseline = stable_trace_counts(eng.trace_counts())
         print(f"[serve] audit: warmup traces {baseline}")
+    on_token = None
+    if args.log_json:
+        import json as _json
+
+        def on_token(o):
+            """One structured line per *finished* request (streaming
+            snapshots pass through silently)."""
+            if not o.finished:
+                return
+            m = o.metrics
+            print(_json.dumps({
+                "event": "request", "id": o.request_id,
+                "finish_reason": o.finish_reason,
+                "prompt_tokens": len(o.prompt_token_ids),
+                "tokens": len(o.token_ids),
+                "ttft_s": m.ttft, "tpot_s": m.tpot,
+                "queue_s": m.queue_time, "prefill_s": m.prefill_time,
+                "decode_s": m.decode_time, "e2e_s": m.e2e_latency,
+            }))
+
+    import contextlib
+    profile_ctx = (jax.profiler.trace(args.profile_dir)
+                   if args.profile_dir else contextlib.nullcontext())
     rng = np.random.default_rng(0)
     t0 = time.time()
     rids = []
-    for i in range(n_req):
-        plen = int(rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1))
-        steps = int(rng.integers(max(args.steps // 2, 1), args.steps + 1))
-        sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
-                            top_p=args.top_p, seed=args.seed + i,
-                            max_new_tokens=steps,
-                            deadline_s=args.deadline or None,
-                            ttft_deadline_s=args.ttft_deadline or None)
-        rids.append(eng.submit(np.asarray(prompts[i][:plen]), sp))
-    out = eng.run()
+    with profile_ctx:
+        for i in range(n_req):
+            plen = int(rng.integers(max(args.prompt_len // 2, 1),
+                                    args.prompt_len + 1))
+            steps = int(rng.integers(max(args.steps // 2, 1),
+                                     args.steps + 1))
+            sp = SamplingParams(
+                temperature=args.temperature, top_k=args.top_k,
+                top_p=args.top_p, seed=args.seed + i,
+                max_new_tokens=steps,
+                deadline_s=args.deadline or None,
+                ttft_deadline_s=args.ttft_deadline or None)
+            rids.append(eng.submit(np.asarray(prompts[i][:plen]), sp,
+                                   on_token=on_token))
+        out = eng.run()
     dt = time.time() - t0
     total = sum(len(o.token_ids) for o in out.values())
-    print(f"[serve] stream: {n_req} requests, {total} tokens in {dt:.2f}s "
-          f"({total/dt:.1f} tok/s) on {slots} slots")
-    print(f"[serve] jit traces: {eng.trace_counts()}")
-    ttfts = [o.metrics.ttft for o in out.values()
-             if o.metrics.ttft is not None]
-    lats = [o.metrics.e2e_latency for o in out.values()
-            if o.metrics.e2e_latency is not None]
-    if ttfts:
-        print(f"[serve] ttft p50={np.median(ttfts)*1e3:.0f}ms "
-              f"max={max(ttfts)*1e3:.0f}ms; "
-              f"e2e p50={np.median(lats)*1e3:.0f}ms; "
-              f"finish: { {o.finish_reason for o in out.values()} }")
     reasons = [o.finish_reason for o in out.values()]
     abnormal = {r: reasons.count(r) for r in ("shed", "timeout", "cancelled")
                 if reasons.count(r)}
-    fc = {k: v for k, v in eng.fault_counters.items() if v}
-    if abnormal or fc:
-        print(f"[serve] lifecycle: {abnormal or 'all normal'}; "
-              f"counters {fc}")
-    if args.paged:
-        print(f"[serve] paged: prefix trie holds {len(eng._trie)} blocks; "
-              f"{eng._alloc.free_blocks()}/{eng.pool.n_phys} reclaimable")
-    print("[serve] sample:", list(out[rids[0]].token_ids[:16]))
-    lps = [lp for o in out.values() for lp in o.logprobs if lp is not None]
-    print(f"[serve] mean chosen-token logprob: {np.mean(lps):.3f} "
-          f"({len(lps)} tokens)")
+    if args.log_json:
+        import json as _json
+        print(_json.dumps({
+            "event": "summary", "requests": n_req, "tokens": total,
+            "wall_s": dt, "tok_s": total / dt if dt > 0 else None,
+            "slots": slots,
+            "finish_reasons": {r: reasons.count(r) for r in set(reasons)},
+        }))
+    else:
+        print(f"[serve] stream: {n_req} requests, {total} tokens in "
+              f"{dt:.2f}s ({total/dt:.1f} tok/s) on {slots} slots")
+        print(f"[serve] jit traces: {eng.trace_counts()}")
+        ttfts = [o.metrics.ttft for o in out.values()
+                 if o.metrics.ttft is not None]
+        lats = [o.metrics.e2e_latency for o in out.values()
+                if o.metrics.e2e_latency is not None]
+        if ttfts:
+            print(f"[serve] ttft p50={np.median(ttfts)*1e3:.0f}ms "
+                  f"max={max(ttfts)*1e3:.0f}ms; "
+                  f"e2e p50={np.median(lats)*1e3:.0f}ms; "
+                  f"finish: { {o.finish_reason for o in out.values()} }")
+        fc = {k: v for k, v in eng.fault_counters.items() if v}
+        if abnormal or fc:
+            print(f"[serve] lifecycle: {abnormal or 'all normal'}; "
+                  f"counters {fc}")
+        if args.paged:
+            print(f"[serve] paged: prefix trie holds {len(eng._trie)} "
+                  f"blocks; {eng._alloc.free_blocks()}/{eng.pool.n_phys} "
+                  "reclaimable")
+        print("[serve] sample:", list(out[rids[0]].token_ids[:16]))
+        lps = [lp for o in out.values() for lp in o.logprobs
+               if lp is not None]
+        print(f"[serve] mean chosen-token logprob: {np.mean(lps):.3f} "
+              f"({len(lps)} tokens)")
+    if obs is not None:
+        if not args.log_json:
+            print(obs.report_line())
+        obs.close()
+        if args.trace_file:
+            print(f"[serve] trace: {args.trace_file} "
+                  f"({obs.trace.events_written} events — load in "
+                  "chrome://tracing or ui.perfetto.dev)")
+    if metrics_server is not None:
+        metrics_server.close()
+    if args.profile_dir:
+        print(f"[serve] profile: {args.profile_dir} (tensorboard "
+              "--logdir or Perfetto)")
     if args.spec_k:
         apt = [o.metrics.accepted_per_tick for o in out.values()
                if o.metrics.accepted_per_tick is not None]

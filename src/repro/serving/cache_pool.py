@@ -623,6 +623,7 @@ class BlockAllocator:
                  on_evict: Optional[Callable[[int], None]] = None):
         self.n_phys = n_phys
         self.on_evict = on_evict
+        self.evictions = 0               # lifetime LRU evictions (telemetry)
         self._free: List[int] = list(range(n_phys - 1, -1, -1))
         self._ref = np.zeros(n_phys, np.int64)
         self._cached: "OrderedDict[int, int]" = OrderedDict()  # id -> hash
@@ -658,6 +659,7 @@ class BlockAllocator:
                         "must cover every alloc")
                 bid, h = self._cached.popitem(last=False)      # LRU evict
                 del self._hash2id[h]
+                self.evictions += 1
                 if self.on_evict is not None:
                     self.on_evict(h)
             self._ref[bid] = 1

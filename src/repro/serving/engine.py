@@ -314,7 +314,8 @@ class ContinuousEngine:
                  mesh=None, paged: bool = False, phys_blocks: int = 0,
                  checkify: Optional[bool] = None,
                  max_queue: int = 0, degrade_queue: int = 0,
-                 faults: Optional[FaultPlan] = None, clock=None):
+                 faults: Optional[FaultPlan] = None, clock=None,
+                 obs=None):
         if mesh is not None:
             # mesh-sharded serving: slots over the data axes, KV heads over
             # the model axis.  The ctx also constrains activations inside
@@ -510,6 +511,20 @@ class ContinuousEngine:
             "drafter_error": 0, "deferred": 0, "degraded_ticks": 0,
             "injected_page_exhaustion": 0}
 
+        # observability (repro.obs.Observability or None): a host-only
+        # telemetry sink fed exclusively at the tick-boundary sync point
+        # and on the host-side submit/cancel paths.  Every call site is
+        # guarded on `self._obs is not None`, no jitted function knows it
+        # exists, and it receives plain ints/floats/lists — the obs-on
+        # engine is token-identical and retrace-identical to obs-off
+        # (tests/test_obs.py pins all three properties).
+        self._obs = obs
+        self._tick_committed = 0          # tokens committed this tick
+        if obs is not None and faults is not None:
+            faults.on_fire = (
+                lambda site, tick: obs.fault(site, tick,
+                                             self.scheduler.clock()))
+
         # paged pool: host-side id lifecycle + prefix index.  Sharing needs
         # deterministic block content, which needs deterministic chunk
         # boundaries — the trie only indexes blocks frozen by full-width
@@ -538,13 +553,19 @@ class ContinuousEngine:
         ``finish_reason="shed"`` snapshot and nothing is registered — the
         shed costs no slot, no pages, and no tick work.
         """
-        rid = self.scheduler.submit([int(t) for t in np.asarray(prompt)],
-                                    params)
+        toks = [int(t) for t in np.asarray(prompt)]
+        rid = self.scheduler.submit(toks, params)
+        if self._obs is not None:
+            self._obs.request_submitted(rid, len(toks),
+                                        self.scheduler.clock())
         req = self.scheduler.finished.get(rid)
         if req is not None and req.finish_reason == "shed":
             self.fault_counters["shed"] += 1
+            out = req.output()
+            if self._obs is not None:
+                self._obs.request_finished(out, self.scheduler.clock())
             if on_token is not None:
-                on_token(req.output())
+                on_token(out)
             return rid
         if on_token is not None:
             self._callbacks[rid] = on_token
@@ -574,6 +595,8 @@ class ContinuousEngine:
         if req.slot >= 0:
             self._abort_slot(req.slot)
         out = req.output()
+        if self._obs is not None:
+            self._obs.request_finished(out, self.scheduler.clock())
         cb = self._callbacks.pop(rid, None)
         if cb is not None:
             cb(out)
@@ -603,6 +626,8 @@ class ContinuousEngine:
             if req.slot >= 0:
                 self._abort_slot(req.slot)
             out = req.output()
+            if self._obs is not None:
+                self._obs.request_finished(out, now)
             events.append(out)
             cb = self._callbacks.pop(req.rid, None)
             if cb is not None:
@@ -726,6 +751,7 @@ class ContinuousEngine:
         """
         self._snapshot_guard("save_snapshot")
         from repro.checkpoint.manager import CheckpointManager
+        t0 = self.scheduler.clock() if self._obs is not None else 0.0
         pairs = self._alloc.export_registered()
         tree = {"arena": self.pool.arena_leaves(self.state),
                 "hashes": np.asarray([h for h, _ in pairs], np.int64),
@@ -737,6 +763,10 @@ class ContinuousEngine:
                        "geometry": self.pool.geometry(),
                        "n_registered": len(pairs)},
                  blocking=True)
+        if self._obs is not None:
+            self._obs.snapshot_event("save", t0,
+                                     self.scheduler.clock() - t0,
+                                     len(pairs))
         return step
 
     def load_snapshot(self, directory: str) -> int:
@@ -756,6 +786,7 @@ class ContinuousEngine:
         pages.
         """
         self._snapshot_guard("load_snapshot")
+        t0 = self.scheduler.clock() if self._obs is not None else 0.0
         if self.scheduler.active or self.scheduler.queue or self._blocks:
             raise ValueError("load_snapshot on a busy engine: restore "
                              "before submitting traffic")
@@ -787,6 +818,10 @@ class ContinuousEngine:
         self._alloc.restore_registered(pairs)     # validates ids first
         self._trie.reload(pairs)
         self.state = self.pool.load_arena(self.state, tree["arena"])
+        if self._obs is not None:
+            self._obs.snapshot_event("load", t0,
+                                     self.scheduler.clock() - t0,
+                                     len(pairs))
         return len(pairs)
 
     # -- one tick -----------------------------------------------------------
@@ -803,8 +838,11 @@ class ContinuousEngine:
         admitted this tick can never land in a slot whose release is still
         pending from an expiry — admission only sees fully-released slots.
         """
+        obs = self._obs
+        t_start = self.scheduler.clock() if obs is not None else 0.0
         self._tick_no += 1
         self._in_tick = True
+        self._tick_committed = 0
         try:
             return self._step_inner()
         finally:
@@ -819,6 +857,23 @@ class ContinuousEngine:
                     self._pending_release.append(self._faults.choose(cand))
             self._flush_releases()
             self._in_tick = False
+            if obs is not None:
+                sch = self.scheduler
+                obs.tick(
+                    start=t_start, now=sch.clock(), tick_no=self._tick_no,
+                    committed=self._tick_committed,
+                    queue_depth=len(sch.queue), active=len(sch.active),
+                    slots=self.pool.slots, counters=self.fault_counters,
+                    free_blocks=(self._alloc.free_blocks()
+                                 if self._alloc is not None else None),
+                    n_phys=(self.pool.n_phys
+                            if self._alloc is not None else 0),
+                    evictions=(self._alloc.evictions
+                               if self._alloc is not None else 0),
+                    trie_blocks=(len(self._trie)
+                                 if self._trie is not None else 0),
+                    spec_hist=(self.spec_hist.tolist()
+                               if self._spec is not None else None))
 
     def _flush_releases(self) -> None:
         """Recycle every pending slot in one batched device release.
@@ -895,6 +950,8 @@ class ContinuousEngine:
             self.fault_counters["deferred"] += 1
             return None
         req = sch.admit(now)
+        if self._obs is not None and sch.chunk is not None:
+            self._obs.prefix_match(len(hits), plen // bs)
         self._reserved[req.slot] = need
         self._blocks[req.slot] = list(hits)
         if hits:
@@ -970,6 +1027,7 @@ class ContinuousEngine:
         # one prefill chunk for the oldest request still owed prompt work
         req = sch.next_prefill()
         if req is not None:
+            t_pf = sch.clock() if self._obs is not None else 0.0
             off0 = req.prefill_done
             chunk = sch.prefill_chunk(req)
             final = req.prefill_done >= len(req.prompt)
@@ -1005,6 +1063,12 @@ class ContinuousEngine:
                 self._emit(req.slot, [int(np.asarray(tok)[0])],
                            [float(np.asarray(logp)[0])], events,
                            prefill=True)
+            if self._obs is not None:
+                # non-final chunks are async dispatch wall time; the final
+                # chunk's span includes the first-token sync above
+                self._obs.prefill_chunk(req.rid, req.slot, t_pf,
+                                        sch.clock() - t_pf, len(chunk),
+                                        final)
 
         # decode tick for every slot with a live request past prefill
         slots = sch.decoding_slots()
@@ -1013,6 +1077,7 @@ class ContinuousEngine:
         if self._spec is not None:
             return self._spec_tick(slots, events)
         b = self.pool.slots
+        t_dec = sch.clock() if self._obs is not None else 0.0
         tokens = np.zeros((b, 1), np.int32)
         mask = np.zeros((b,), bool)
         for s in slots:
@@ -1021,6 +1086,11 @@ class ContinuousEngine:
         tok, logp, self.state = self._decode(
             self.params, self.state, jnp.asarray(tokens), jnp.asarray(mask))
         picked, logps = np.asarray(tok), np.asarray(logp)
+        if self._obs is not None:
+            # span covers dispatch through the np.asarray token sync — the
+            # tick's designated host<->device boundary
+            self._obs.decode_tick(t_dec, sch.clock() - t_dec, len(slots),
+                                  spec=False)
         for s in slots:
             if s not in sch.active:
                 continue      # cancelled mid-tick (reentrant callback):
@@ -1042,6 +1112,7 @@ class ContinuousEngine:
         stop scanning inside it.
         """
         sch = self.scheduler
+        t_dec = sch.clock() if self._obs is not None else 0.0
         b, k = self.pool.slots, self._spec.k
         # degraded mode: under queue pressure drop the draft window to 0 —
         # every verify tick commits exactly one token, shrinking per-tick
@@ -1095,6 +1166,10 @@ class ContinuousEngine:
                     events.append(out)
         picked, logps = np.asarray(tok), np.asarray(logp)
         ncs = np.asarray(ncommit)
+        if self._obs is not None:
+            # draft + verify dispatch through the window sync
+            self._obs.decode_tick(t_dec, sch.clock() - t_dec, len(slots),
+                                  spec=True)
         for s in slots:
             if s not in sch.active:
                 continue      # cancelled inside the window: its verified
@@ -1115,14 +1190,20 @@ class ContinuousEngine:
         ``on_token`` callback) is emitted per window — per token on the
         non-speculative path, per accepted window under speculation."""
         req = self.scheduler.active[slot]
+        before = len(req.generated)
         finished = self.scheduler.record_tokens(
             slot, toks, logprobs, decode_tick=not prefill) is not None
+        # a stop inside a speculative window truncates the commit, so count
+        # what actually landed, not what the tick offered
+        self._tick_committed += len(req.generated) - before
         out = req.output()
         events.append(out)
         cb = self._callbacks.get(req.rid)
         if cb is not None:
             cb(out)
         if finished:
+            if self._obs is not None:
+                self._obs.request_finished(out, self.scheduler.clock())
             self._callbacks.pop(req.rid, None)
             self._pending_release.append(slot)   # batched flush at tick end
             self._tail_len[slot] = 0

@@ -99,6 +99,11 @@ class FaultPlan:
     an identical (seed, wave) pair replays identical faults.  ``fired``
     records ``(tick, site)`` for every fault that actually landed —
     the test harness asserts the plan drained (:meth:`exhausted`).
+
+    ``on_fire`` is an optional ``(site, tick) -> None`` observer invoked
+    on every firing — the engine points it at the observability layer so
+    injected faults land on the request-lifecycle trace timeline.  It
+    must stay a pure observer: the plan's decisions never depend on it.
     """
 
     def __init__(self, faults: Sequence[Fault] = (), seed: int = 0):
@@ -106,6 +111,7 @@ class FaultPlan:
         self._rng = np.random.default_rng(seed)
         self._pending: List[Fault] = sorted(faults, key=lambda f: f.tick)
         self.fired: List[Tuple[int, str]] = []
+        self.on_fire = None              # set by the engine when obs is on
 
     @classmethod
     def generate(cls, seed: int, ticks: int = 24,
@@ -128,6 +134,8 @@ class FaultPlan:
             if f.site == site and f.tick <= tick:
                 del self._pending[i]
                 self.fired.append((tick, site))
+                if self.on_fire is not None:
+                    self.on_fire(site, tick)
                 return True
         return False
 

@@ -114,12 +114,20 @@ class RequestMetrics:
     commits a whole accepted window, so throughput must be derived from
     tokens committed, never from ticks (the old one-token-per-tick
     assumption undercounts spec runs by the acceptance factor).
+
+    ``admitted_time`` is when the scheduler moved the request from the
+    queue into a pool slot — every timestamp here is observable at the
+    engine's tick-boundary sync point, so the TTFT splits cleanly into
+    ``queue_time`` (submit → slot) and ``prefill_time`` (slot → first
+    token) with no extra device traffic.  Requests that die in the queue
+    (shed, queued-timeout) leave it ``None``.
     """
     arrival_time: float
     first_token_time: Optional[float]
     finished_time: Optional[float]
     decode_ticks: int = 0
     num_generated: int = 0
+    admitted_time: Optional[float] = None
 
     @property
     def ttft(self) -> Optional[float]:
@@ -127,6 +135,37 @@ class RequestMetrics:
         if self.first_token_time is None:
             return None
         return self.first_token_time - self.arrival_time
+
+    @property
+    def queue_time(self) -> Optional[float]:
+        """Submit → slot admission."""
+        if self.admitted_time is None:
+            return None
+        return self.admitted_time - self.arrival_time
+
+    @property
+    def prefill_time(self) -> Optional[float]:
+        """Slot admission → first token (chunked prefill wall time)."""
+        if self.admitted_time is None or self.first_token_time is None:
+            return None
+        return self.first_token_time - self.admitted_time
+
+    @property
+    def decode_time(self) -> Optional[float]:
+        """First token → finish."""
+        if self.first_token_time is None or self.finished_time is None:
+            return None
+        return self.finished_time - self.first_token_time
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Per-output-token latency after the first token (the SLO
+        counterpart of :attr:`decode_tok_s`)."""
+        if (self.finished_time is None or self.first_token_time is None
+                or self.num_generated <= 1):
+            return None
+        return ((self.finished_time - self.first_token_time)
+                / (self.num_generated - 1))
 
     @property
     def e2e_latency(self) -> Optional[float]:

@@ -61,6 +61,7 @@ class Request:
     # None | "stop" | "length" | "shed" | "timeout" | "cancelled"
     finish_reason: Optional[str] = None
     arrival_time: float = 0.0
+    admitted_time: Optional[float] = None    # queue -> pool slot
     first_token_time: Optional[float] = None
     finished_time: Optional[float] = None
     decode_ticks: int = 0            # engine decode steps consumed
@@ -86,7 +87,8 @@ class Request:
             metrics=RequestMetrics(self.arrival_time, self.first_token_time,
                                    self.finished_time,
                                    decode_ticks=self.decode_ticks,
-                                   num_generated=len(self.generated)),
+                                   num_generated=len(self.generated),
+                                   admitted_time=self.admitted_time),
             logprobs=tuple(self.logprobs))
 
 
@@ -233,15 +235,17 @@ class Scheduler:
         before its ``next_admit`` time — and, to keep FIFO order, nothing
         behind it is either.
         """
+        now = self.clock() if now is None else now
         if not self.queue:
             return None
-        if self.queue[0].next_admit > (self.clock() if now is None else now):
+        if self.queue[0].next_admit > now:
             return None
         free = self.free_slots()
         if not free:
             return None
         req = self.queue.popleft()
         req.slot = free[0]
+        req.admitted_time = now
         self.active[req.slot] = req
         return req
 

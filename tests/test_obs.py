@@ -1,0 +1,371 @@
+"""Observability: exactness, export formats, and the zero-overhead bar.
+
+Three layers of guarantees:
+
+* **Primitives** — the pure-Python :func:`repro.obs.percentile`
+  reproduces ``numpy.percentile`` bit-for-bit (it is the shared helper
+  every ``bench_serving`` mode reports through); histogram buckets use
+  Prometheus ``le`` edge semantics; the rolling median matches a sorted
+  reference.
+* **Exporters** — ``registry.snapshot()``, the Prometheus text
+  exposition (``_bucket`` series cumulative, ``+Inf`` == ``_count``),
+  a live ``MetricsServer`` scrape over HTTP, and the trace sink's
+  Chrome trace-event JSON all round-trip real values.
+* **Zero overhead** — the acceptance bar from the PR: a greedy engine
+  run with observability on is token-identical to the same run with it
+  off, steady-state trace counts stay flat, and the tokens-committed
+  counter agrees exactly with the tokens actually emitted.  Fault
+  firings and snapshot save/load show up in the trace.
+"""
+import dataclasses
+import json
+import math
+import urllib.request
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.obs import (DEFAULT_LATENCY_BUCKETS, Histogram, MetricsRegistry,
+                       MetricsServer, Observability, RollingWindow,
+                       TraceSink, percentile, percentile_summary, render)
+from repro.serving import (ContinuousEngine, Fault, FaultPlan,
+                           SamplingParams, stable_trace_counts)
+from repro.serving.faults import PAGE_EXHAUSTION
+from repro.serving.sampling import RequestMetrics
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# percentile: exact NumPy parity
+# ---------------------------------------------------------------------------
+
+def test_percentile_matches_numpy_reference():
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 3, 7, 100, 101):
+        vals = rng.normal(size=n).tolist()
+        for q in (0, 1, 25, 50, 75, 90, 99, 99.9, 100):
+            assert percentile(vals, q) == pytest.approx(
+                float(np.percentile(vals, q)), rel=0, abs=0), (n, q)
+
+
+def test_percentile_edge_cases():
+    with pytest.raises(ValueError):
+        percentile([], 50)
+    with pytest.raises(ValueError):
+        percentile([1.0], 101)
+    with pytest.raises(ValueError):
+        percentile([1.0], -1)
+    assert percentile([3.0], 99) == 3.0          # single sample: any q
+    assert percentile([1.0, 2.0], 50) == 1.5     # exact midpoint interp
+
+
+def test_percentile_summary_filters_none_and_scales():
+    s = percentile_summary([0.1, None, 0.3, None, 0.2], qs=(50,), scale=1e3)
+    assert s == {"count": 3, "p50": pytest.approx(200.0)}
+    empty = percentile_summary([None, None])
+    assert empty["count"] == 0
+    assert empty["p50"] is None and empty["p99"] is None
+
+
+# ---------------------------------------------------------------------------
+# histogram: le edge semantics + exact percentiles
+# ---------------------------------------------------------------------------
+
+def test_histogram_bucket_edges_use_le_semantics():
+    h = Histogram(buckets=(1.0, 2.0))
+    for v in (0.5, 1.0, 1.5, 2.0, 99.0):
+        h.observe(v)
+    # le=1.0 owns {0.5, 1.0}; le=2.0 adds {1.5, 2.0}; +Inf adds {99.0}
+    assert h.cumulative_buckets() == [(1.0, 2), (2.0, 4), (math.inf, 5)]
+    assert h.count == 5
+    assert h.sum == pytest.approx(0.5 + 1.0 + 1.5 + 2.0 + 99.0)
+
+
+def test_histogram_percentiles_exact_vs_numpy():
+    rng = np.random.default_rng(1)
+    vals = rng.exponential(0.05, size=500)
+    h = Histogram()
+    for v in vals:
+        h.observe(float(v))
+    assert h.exact
+    for q in (50, 90, 99):
+        assert h.percentile(q) == pytest.approx(
+            float(np.percentile(vals, q)), rel=1e-12)
+    assert Histogram().percentile(50) is None    # empty: soft None
+    snap = h.snapshot()
+    assert snap["count"] == 500 and snap["p50"] == h.percentile(50)
+
+
+def test_histogram_validation():
+    with pytest.raises(ValueError):
+        Histogram(buckets=())
+    with pytest.raises(ValueError):
+        Histogram(buckets=(2.0, 1.0))
+    with pytest.raises(ValueError):
+        Histogram(buckets=(1.0, 1.0))
+
+
+def test_histogram_reservoir_is_deterministic_and_bounded():
+    a = Histogram(buckets=(1.0,), max_samples=16, seed=3)
+    b = Histogram(buckets=(1.0,), max_samples=16, seed=3)
+    for i in range(200):
+        a.observe(i * 0.01)
+        b.observe(i * 0.01)
+    assert not a.exact and len(a._samples) == 16
+    assert a._samples == b._samples              # seeded: replayable
+    assert a.count == 200                        # buckets never degrade
+
+
+def test_rolling_window_median_and_eviction():
+    w = RollingWindow(size=3)
+    assert w.median() is None and w.mean() is None
+    w.push(10.0)
+    assert w.median() == 10.0
+    w.push(30.0)
+    assert w.median() == 20.0                    # even count: midpoint
+    w.push(20.0)
+    assert w.median() == 20.0
+    w.push(1000.0)                               # evicts the 10.0
+    assert w.median() == 30.0
+    assert len(w) == 3
+
+
+# ---------------------------------------------------------------------------
+# registry + exporters
+# ---------------------------------------------------------------------------
+
+def test_registry_get_or_create_and_kind_conflict():
+    r = MetricsRegistry()
+    c1 = r.counter("x_total", "help", reason="stop")
+    c2 = r.counter("x_total", reason="stop")
+    assert c1 is c2                              # same name+labels
+    c3 = r.counter("x_total", reason="shed")
+    assert c3 is not c1                          # distinct series
+    with pytest.raises(ValueError):
+        r.gauge("x_total")                       # kind conflict
+    with pytest.raises(ValueError):
+        r.counter("bad name")
+    with pytest.raises(ValueError):
+        r.counter("ok_total", **{"bad-label": 1})
+    with pytest.raises(ValueError):
+        c1.inc(-1)                               # counters are monotonic
+
+
+def test_registry_snapshot_keys():
+    r = MetricsRegistry()
+    r.counter("a_total").inc(3)
+    r.gauge("g").set(7)
+    r.histogram("h_seconds").observe(0.2)
+    s = r.snapshot()
+    assert s["a_total"] == 3.0
+    assert s["g"] == 7.0
+    assert s["h_seconds"]["count"] == 1
+    r.counter("lbl_total", reason="stop").inc()
+    assert r.snapshot()['lbl_total{reason="stop"}'] == 1.0
+
+
+def test_prometheus_render_format():
+    r = MetricsRegistry()
+    r.counter("req_total", "requests", reason="stop").inc(4)
+    h = r.histogram("lat_seconds", "latency", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(5.0)
+    text = render(r)
+    assert "# TYPE req_total counter" in text
+    assert '# HELP req_total requests' in text
+    assert 'req_total{reason="stop"} 4' in text
+    assert 'lat_seconds_bucket{le="0.1"} 1' in text
+    assert 'lat_seconds_bucket{le="1"} 2' in text
+    assert 'lat_seconds_bucket{le="+Inf"} 3' in text   # == _count
+    assert "lat_seconds_count 3" in text
+    assert text.endswith("\n")
+
+
+def test_metrics_server_live_scrape():
+    r = MetricsRegistry()
+    r.counter("up_total").inc(2)
+    srv = MetricsServer(r, port=0).start()
+    try:
+        with urllib.request.urlopen(srv.url, timeout=5) as resp:
+            body = resp.read().decode()
+            assert resp.headers["Content-Type"].startswith("text/plain")
+        assert "up_total 2" in body
+        r.counter("up_total").inc()              # live: next scrape moves
+        with urllib.request.urlopen(srv.url, timeout=5) as resp:
+            assert "up_total 3" in resp.read().decode()
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(
+                f"http://{srv.host}:{srv.port}/nope", timeout=5)
+    finally:
+        srv.close()
+
+
+def test_trace_sink_writes_valid_chrome_trace(tmp_path):
+    p = tmp_path / "trace.json"
+    t = TraceSink(str(p))
+    t.process_name(0, "engine")
+    t.complete("tick", 10.0, 0.25, tid=0, args={"n": 1})
+    t.instant("fault:x", 10.1, tid=0)
+    t.counter("load", 10.2, {"queue": 3})
+    t.close()
+    t.close()                                    # idempotent
+    evs = json.loads(p.read_text())
+    assert [e["ph"] for e in evs] == ["M", "X", "i", "C"]
+    tick = evs[1]
+    assert tick["ts"] == 0.0                     # rebased to first stamp
+    assert tick["dur"] == pytest.approx(0.25e6)  # seconds -> us
+    assert evs[2]["ts"] == pytest.approx(0.1e6)
+    assert t.events_written == 4
+
+
+# ---------------------------------------------------------------------------
+# RequestMetrics derived timings
+# ---------------------------------------------------------------------------
+
+def test_request_metrics_ttft_split_and_tpot():
+    m = RequestMetrics(arrival_time=1.0, first_token_time=4.0,
+                       finished_time=10.0, decode_ticks=6,
+                       num_generated=7, admitted_time=3.0)
+    assert m.queue_time == pytest.approx(2.0)    # submit -> slot
+    assert m.prefill_time == pytest.approx(1.0)  # slot -> first token
+    assert m.ttft == pytest.approx(3.0)          # their sum
+    assert m.decode_time == pytest.approx(6.0)
+    assert m.tpot == pytest.approx(1.0)          # 6s / (7 - 1) tokens
+    assert m.e2e_latency == pytest.approx(9.0)
+
+
+def test_request_metrics_none_propagation():
+    # died in the queue: no admission, no first token
+    m = RequestMetrics(arrival_time=1.0, first_token_time=None,
+                       finished_time=2.0)
+    assert m.queue_time is None and m.prefill_time is None
+    assert m.decode_time is None and m.tpot is None
+    # one generated token: tpot undefined (no inter-token gap)
+    m1 = RequestMetrics(arrival_time=0.0, first_token_time=1.0,
+                        finished_time=2.0, num_generated=1,
+                        admitted_time=0.5)
+    assert m1.tpot is None
+    assert m1.prefill_time == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# Observability facade (clock-driven, no engine)
+# ---------------------------------------------------------------------------
+
+def test_observability_delta_sync_and_report():
+    obs = Observability()
+    counters = {"shed": 0, "timeout": 0}
+    obs.tick(start=0.0, now=0.1, tick_no=1, committed=3, queue_depth=2,
+             active=1, slots=4, counters=counters, spec_hist=[0, 2, 0])
+    counters["shed"] = 2
+    obs.tick(start=0.1, now=0.2, tick_no=2, committed=1, queue_depth=0,
+             active=1, slots=4, counters=counters, spec_hist=[0, 2, 1])
+    s = obs.snapshot()
+    assert s["repro_engine_ticks_total"] == 2.0
+    assert s["repro_tokens_committed_total"] == 4.0
+    assert s['repro_lifecycle_events_total{event="shed"}'] == 2.0
+    # spec histogram synced by delta, not re-added
+    assert s['repro_spec_windows_total{accepted="1"}'] == 2.0
+    assert s['repro_spec_windows_total{accepted="2"}'] == 1.0
+    line = obs.report_line()
+    assert line.startswith("[obs]") and "ticks=2" in line and "shed=2" in line
+
+
+def test_observability_periodic_report_fires_on_interval():
+    lines = []
+    obs = Observability(report_every=1.0, report_fn=lines.append)
+    for i in range(5):
+        obs.tick(start=i * 0.4, now=i * 0.4 + 0.1, tick_no=i, committed=1,
+                 queue_depth=0, active=1, slots=1, counters={})
+    # now stamps: 0.1, 0.5, 0.9, 1.3, 1.7 -> fires at 0.1 (first tick)
+    # and 1.3 (first tick >= one interval later), nothing in between
+    assert len(lines) == 2 and all(l.startswith("[obs]") for l in lines)
+
+
+# ---------------------------------------------------------------------------
+# the zero-overhead bar: engine integration
+# ---------------------------------------------------------------------------
+
+def _setup(kv_tail=32):
+    cfg = get_config("qwen3-0.6b").reduced()
+    cfg = dataclasses.replace(cfg, kv_k_sparsity=0.0, kv_v_sparsity=0.0,
+                              kv_tail=kv_tail)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_obs_on_is_token_identical_and_flat(tmp_path):
+    cfg, params = _setup()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, (24,)).tolist() for _ in range(4)]
+    sp = SamplingParams(max_new_tokens=8)
+
+    def serve(obs):
+        eng = ContinuousEngine(params, cfg, slots=2, max_tokens=80,
+                               prefill_chunk=16, obs=obs)
+        rids = [eng.submit(p, sp) for p in prompts]
+        out = eng.run()
+        return eng, {r: list(out[r].token_ids) for r in rids}
+
+    _, base = serve(None)
+    obs = Observability(trace_path=str(tmp_path / "t.json"))
+    eng, toks = serve(obs)
+
+    assert toks == base                          # token-identical
+    traces = stable_trace_counts(eng.trace_counts())
+    assert all(v <= 1 for v in traces.values()), traces
+
+    s = obs.snapshot()
+    total = sum(len(t) for t in toks.values())
+    assert s["repro_tokens_committed_total"] == float(total)
+    assert s['repro_requests_finished_total{reason="length"}'] == 4.0
+    assert s["repro_ttft_seconds"]["count"] == 4
+    assert s["repro_tpot_seconds"]["count"] == 4
+    assert s["repro_queue_time_seconds"]["count"] == 4
+
+    obs.close()
+    evs = json.loads((tmp_path / "t.json").read_text())
+    names = {e["name"] for e in evs}
+    assert {"tick", "decode", "prefill_chunk", "queued", "prefill",
+            "submit", "finish:length", "engine_load"} <= names
+
+
+def test_obs_traces_faults_and_snapshots(tmp_path):
+    cfg, params = _setup()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, (32,)).tolist() for _ in range(3)]
+    plan = FaultPlan([Fault(PAGE_EXHAUSTION, 2)])
+    obs = Observability(trace_path=str(tmp_path / "t.json"))
+    eng = ContinuousEngine(params, cfg, slots=2, max_tokens=96, bs=16,
+                           prefill_chunk=16, paged=True, faults=plan,
+                           obs=obs)
+    for p in prompts:
+        eng.submit(p, SamplingParams(max_new_tokens=4))
+    eng.run()
+    eng.save_snapshot(str(tmp_path / "snap"))
+
+    eng2 = ContinuousEngine(params, cfg, slots=2, max_tokens=96, bs=16,
+                            prefill_chunk=16, paged=True, obs=obs)
+    assert eng2.load_snapshot(str(tmp_path / "snap")) > 0
+    obs.close()
+
+    s = obs.snapshot()
+    assert s['repro_fault_injections_total{site="page-exhaustion"}'] == 1.0
+    assert s['repro_snapshots_total{kind="save"}'] == 1.0
+    assert s['repro_snapshots_total{kind="load"}'] == 1.0
+    assert s["repro_trie_lookup_blocks_total"] > 0
+    names = {e["name"] for e in
+             json.loads((tmp_path / "t.json").read_text())}
+    assert {"fault:page-exhaustion", "snapshot:save",
+            "snapshot:load"} <= names
