@@ -134,7 +134,12 @@ def build_audit_engine(geometry: Geometry, cfg=None):
     """An engine over abstract params for one geometry cell.
 
     ``jax.eval_shape`` of the initializer means no parameter memory is
-    ever allocated; the pool state is real but tiny (reduced config)."""
+    ever allocated; the pool state is real but tiny (reduced config).
+    Built with ``overlap=True``: the overlapped engine's entry-point set
+    is a strict superset of the serial one (every serial transition plus
+    the chained ``decode_chain`` dispatch), so every geometry cell audits
+    the pipelined path too — the in-flight tick cannot smuggle a host
+    transfer past the matrix."""
     from repro.models import lm
     from repro.serving.engine import ContinuousEngine
     from repro.serving.spec import SpecConfig
@@ -146,7 +151,7 @@ def build_audit_engine(geometry: Geometry, cfg=None):
         paged=geometry.paged,
         phys_blocks=AUDIT_PHYS_BLOCKS if geometry.paged else 0,
         spec=SpecConfig(k=2) if geometry.spec else None,
-        checkify=False)
+        checkify=False, overlap=True)
 
 
 def collect_entries(geometry: Geometry, cfg=None

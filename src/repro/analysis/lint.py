@@ -12,8 +12,14 @@ Rules (ids are what the pragma disables):
     sync boundary and is out of scope by construction.
 
 ``block-until-ready``
-    ``.block_until_ready()`` anywhere in ``src/repro`` outside the
-    engine's designated sync point (which must carry the pragma).
+    ``.block_until_ready()`` anywhere in ``src/repro`` outside a
+    **designated sync point**.  Designated syncs are registered in
+    :data:`DESIGNATED_SYNCS` — a ``{repo-relative path: (function
+    names,)}`` registry — rather than hardcoded: the overlapped engine's
+    one-tick-delayed commit (``ContinuousEngine._sync_inflight``) is the
+    canonical entry.  A ``block_until_ready`` inside a registered
+    (file, enclosing function) pair is allowed; anywhere else it is
+    flagged, pragma or not having to be spelled per site.
 
 ``bare-assert``
     ``assert`` statements in jit-reachable code.  Shape/geometry
@@ -77,6 +83,15 @@ JIT_MODULES: Sequence[str] = (
 # re-grow ops PR 3 eliminated.
 HOT_PATH_MODULES: Sequence[str] = ("kernels/", "models/", "serving/")
 
+# Designated sync registry: the ONLY (file, enclosing function) pairs where
+# a `jax.block_until_ready` / `.block_until_ready()` call is legitimate.
+# The overlapped engine pipelines ticks and funnels every commit through
+# exactly one delayed sync; growing a second sync site means either
+# registering it here (a reviewed, documented decision) or failing lint.
+DESIGNATED_SYNCS: Dict[str, Sequence[str]] = {
+    "serving/engine.py": ("_sync_inflight",),
+}
+
 _PRAGMA_RE = re.compile(r"#\s*jitlint:\s*disable=([\w,\- ]+)")
 
 _HOT_OPS = {"concatenate", "repeat", "sort", "argsort"}
@@ -117,14 +132,25 @@ def _dotted(node: ast.AST) -> Optional[str]:
 
 
 class _Visitor(ast.NodeVisitor):
-    def __init__(self, path: str, jit_reachable: bool, hot_path: bool):
+    def __init__(self, path: str, jit_reachable: bool, hot_path: bool,
+                 designated: Sequence[str] = ()):
         self.path = path
         self.jit_reachable = jit_reachable
         self.hot_path = hot_path
+        self.designated = set(designated)
+        self._func_stack: List[str] = []
         self.raw: List[Finding] = []
 
     def _add(self, rule: str, node: ast.AST, msg: str) -> None:
         self.raw.append(Finding(rule, self.path, node.lineno, msg))
+
+    def _visit_func(self, node) -> None:
+        self._func_stack.append(node.name)
+        self.generic_visit(node)
+        self._func_stack.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
 
     def visit_Assert(self, node: ast.Assert) -> None:
         if self.jit_reachable:
@@ -142,10 +168,13 @@ class _Visitor(ast.NodeVisitor):
                 if self.jit_reachable:
                     self._add("host-sync", node,
                               "`.item()` forces a device sync")
-            if fn.attr == "block_until_ready":
+            if (fn.attr == "block_until_ready"
+                    and not (self._func_stack
+                             and self._func_stack[-1] in self.designated)):
                 self._add("block-until-ready", node,
-                          "`.block_until_ready()` outside the engine's "
-                          "designated sync point")
+                          "`.block_until_ready()` outside a designated "
+                          "sync point (register the enclosing function "
+                          "in analysis.lint.DESIGNATED_SYNCS)")
         if dotted is not None:
             tail = dotted.split(".", 1)
             if dotted in ("jax.device_get",) and self.jit_reachable:
@@ -192,12 +221,15 @@ def lint_source(source: str, path: str, jit_reachable: bool,
                 hot_path: bool) -> List[Finding]:
     """Lint one file's source text with explicit scope flags (the fixture
     corpus forces both True; :func:`lint_tree` derives them from the
-    path)."""
+    path).  ``path`` also keys the designated-sync registry, so only the
+    registered files' registered functions may hold a
+    ``block_until_ready``."""
     try:
         tree = ast.parse(source, filename=path)
     except SyntaxError as e:                      # pragma: no cover
         return [Finding("parse-error", path, e.lineno or 0, str(e))]
-    v = _Visitor(path, jit_reachable, hot_path)
+    v = _Visitor(path, jit_reachable, hot_path,
+                 designated=DESIGNATED_SYNCS.get(path, ()))
     v.visit(tree)
     lines = source.splitlines()
     pragmas = _pragmas(lines)

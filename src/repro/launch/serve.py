@@ -11,6 +11,14 @@ either
 * ``--one-shot`` — the legacy static-batch ``Engine`` (prefill the whole
   batch, decode lockstep), kept as the baseline.
 
+Stream mode runs with **overlapped (double-buffered) ticks** by default:
+tick t+1 is dispatched into JAX's async stream before tick t's tokens
+are synced to host, hiding the host/dispatch gap behind device compute.
+``--no-overlap`` restores the serial loop — it is the token-identity
+oracle (greedy and seeded output are identical either way).  ``--server``
+swaps the synthetic request wave for an asyncio HTTP frontend with
+per-request NDJSON streaming (``repro.serving.frontend``).
+
 ``--mesh DP,TP`` serves the stream on a device mesh: the pooled state
 shards slots over the data axis and KV heads over the model axis
 (``repro.distributed.serving_sharding``) with token-identical greedy
@@ -94,6 +102,24 @@ def main(argv=None):
                          "shard over the data axis, KV heads over the "
                          "model axis; greedy output is token-identical "
                          "to the unsharded engine")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="stream mode: disable the double-buffered tick "
+                         "pipeline (overlap is ON by default — tick t+1 "
+                         "dispatches before tick t's tokens sync; "
+                         "--no-overlap is the serial token-identity "
+                         "oracle)")
+    ap.add_argument("--server", action="store_true",
+                    help="stream mode: instead of driving a synthetic "
+                         "request stream, serve an asyncio HTTP frontend "
+                         "— POST /v1/generate streams newline-delimited "
+                         "JSON token frames, POST /v1/cancel aborts, "
+                         "GET /healthz probes, POST /v1/shutdown drains "
+                         "the pipeline and exits (snapshotting first "
+                         "under --snapshot-dir)")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="with --server: bind address")
+    ap.add_argument("--port", type=int, default=8731,
+                    help="with --server: port (0 = pick a free one)")
     ap.add_argument("--audit", action="store_true",
                     help="stream mode: retrace audit — serve one warmup "
                          "request, snapshot stable_trace_counts(), then "
@@ -170,6 +196,13 @@ def main(argv=None):
     if args.degrade_queue and not args.spec_k:
         ap.error("--degrade-queue needs --spec-k (it degrades by dropping "
                  "the draft window)")
+    if args.server and args.one_shot:
+        ap.error("--server is stream-mode only (the one-shot engine has "
+                 "no scheduler to serve requests through)")
+    if args.server and args.audit:
+        ap.error("--server and --audit are mutually exclusive (--audit "
+                 "drives its own synthetic warmup + stream; run the "
+                 "retrace audit without --server)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -269,7 +302,7 @@ def main(argv=None):
         if args.spec_k else None,
         mesh=mesh, paged=args.paged, phys_blocks=args.phys_blocks,
         max_queue=args.max_queue, degrade_queue=args.degrade_queue,
-        obs=obs)
+        obs=obs, overlap=not args.no_overlap)
     if args.paged:
         print(f"[serve] paged pool: {eng.pool.n_phys} physical blocks of "
               f"{eng.pool.bs} tokens behind {slots}x{eng.pool.max_blocks} "
@@ -288,6 +321,38 @@ def main(argv=None):
         kv_key = next(k for k in place if k.endswith("k_values"))
         print(f"[serve] placement: pos={place['pos']} "
               f"kv={ {kv_key: place[kv_key]} }")
+    if args.server:
+        from repro.serving import ServerFrontend
+
+        def on_shutdown():
+            if args.snapshot_dir:
+                step = eng.save_snapshot(args.snapshot_dir)
+                print(f"[serve] snapshot: step {step} -> "
+                      f"{args.snapshot_dir} ({len(eng._trie)} prefix "
+                      "blocks persisted)")
+            if obs is not None:
+                obs.close()
+            if metrics_server is not None:
+                metrics_server.close()
+
+        front = ServerFrontend(eng, host=args.host, port=args.port,
+                               on_shutdown=on_shutdown)
+
+        def ready(port):
+            print(f"[serve] server: http://{args.host}:{port} — "
+                  "POST /v1/generate {'prompt': [ids...]} streams NDJSON "
+                  "token frames; GET /healthz; POST /v1/cancel; "
+                  "POST /v1/shutdown", flush=True)
+
+        try:
+            front.run(ready)
+        except KeyboardInterrupt:
+            pass
+        print(f"[serve] server drained after {front.loop_thread.ticks} "
+              f"ticks, {front.requests_served} requests; jit traces: "
+              f"{eng.trace_counts()}")
+        return 0
+
     baseline = None
     if args.audit:
         # warmup: one request touches every entry point (submit/prefill/

@@ -143,8 +143,15 @@ class Observability:
     # -- request lifecycle ----------------------------------------------
 
     def request_submitted(self, rid: int, prompt_len: int,
-                          now: float) -> None:
+                          now: float,
+                          queue_depth: Optional[int] = None) -> None:
         self._submitted.inc()
+        if queue_depth is not None:
+            # submit-path refresh: the asyncio frontend submits between
+            # ticks, where obs.tick cannot see a shed leave the gauge
+            # stale; the engine passes the post-submit depth (a shed never
+            # entered the queue, so the gauge and the shed counter agree)
+            self._queue_depth.set(queue_depth)
         if self.trace is not None:
             if rid not in self._named_req_rows:
                 self._named_req_rows.add(rid)
@@ -209,15 +216,23 @@ class Observability:
                                       "tokens": n_tokens, "final": final})
 
     def decode_tick(self, start: float, dur: float, n_slots: int,
-                    spec: bool) -> None:
+                    spec: bool, overlapped: bool = False) -> None:
+        """One decode/verify window's device span.  Under the overlapped
+        engine the span runs dispatch -> the one-tick-DELAYED sync, so it
+        reflects true pipelined wall clock (host work only shows where it
+        failed to hide behind the device); the metric keeps its mode label
+        and the trace event gains an ``overlapped`` arg."""
         mode = "spec" if spec else "plain"
         self.registry.histogram(
             "repro_decode_tick_seconds",
             "decode dispatch through the token sync", mode=mode).observe(dur)
         if self.trace is not None:
+            args: Dict[str, Any] = {"slots": n_slots}
+            if overlapped:
+                args["overlapped"] = True
             self.trace.complete("verify" if spec else "decode", start, dur,
                                 pid=PID_ENGINE, tid=1, cat="device",
-                                args={"slots": n_slots})
+                                args=args)
 
     def prefix_match(self, hit_blocks: int, lookup_blocks: int) -> None:
         self.registry.counter(

@@ -3,6 +3,7 @@ from .engine import (Engine, ContinuousEngine, retrace_count,
 from .cache_pool import ARENA_KEYS, BlockAllocator, CachePool
 from .faults import (ALL_SITES, ENGINE_SITES, Fault, FaultError, FaultPlan,
                      corrupt_snapshot)
+from .frontend import EngineLoop, ServerFrontend, params_from_json
 from .sampling import RequestMetrics, RequestOutput, SamplingParams
 from .scheduler import PrefixTrie, Request, Scheduler, block_hashes
 from .spec import AdaptiveDraft, Drafter, NGramDrafter, SpecConfig

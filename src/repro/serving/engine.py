@@ -26,7 +26,7 @@ broadcast lane in the legacy engine) — argmax is just the
 """
 from __future__ import annotations
 
-from typing import (Any, Callable, Dict, Iterator, List, Optional)
+from typing import (Any, Callable, Dict, Iterator, List, Optional, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -304,6 +304,30 @@ class ContinuousEngine:
     failures at the named host sites for the fault-injection harness.
     :meth:`save_snapshot` / :meth:`load_snapshot` persist the paged
     arena + prefix index for crash-safe warm restarts.
+
+    **Overlapped (double-buffered) ticks** (``overlap=True``): the tick
+    loop is pipelined — tick *t+1*'s device work is dispatched BEFORE
+    tick *t*'s tokens are synced, so host scheduler work (admission,
+    stop scanning, callbacks, releases) hides behind the in-flight
+    device step instead of serializing with it.  On the plain decode
+    path the input token chains **on device**: :attr:`_decode_chain`
+    consumes the previous tick's un-synced token vector (a jax async
+    value) and host-overrides only the lanes where the chain breaks (a
+    slot fresh out of prefill, re-admitted, or the first tick after an
+    idle pipeline).  Under speculation the in-flight verify window is
+    committed after the next tick's admission/prefill dispatch but
+    before drafting (the n-gram drafter needs the committed history and
+    the paged refreeze scatter needs exact tail mirrors).  Either way
+    there is exactly ONE sync site — :meth:`_sync_inflight`, the
+    registry-designated ``jax.block_until_ready`` — and commit re-checks
+    ``(slot, rid)`` liveness, so a request that expired, was cancelled,
+    or finished while its window was in flight never has speculatively
+    dispatched tokens committed.  Greedy *and* seeded-sampled output is
+    token-identical to ``overlap=False`` (the oracle): each request's
+    RNG stream is a pure function of its sampled-token count, and
+    discarded speculative draws happen strictly after the request's
+    last committed draw.  :meth:`quiesce` drains the pipeline (snapshot
+    paths call it implicitly).
     """
 
     def __init__(self, params, cfg, ctx=NULL_CTX, slots: int = 4,
@@ -315,7 +339,7 @@ class ContinuousEngine:
                  checkify: Optional[bool] = None,
                  max_queue: int = 0, degrade_queue: int = 0,
                  faults: Optional[FaultPlan] = None, clock=None,
-                 obs=None):
+                 obs=None, overlap: bool = False):
         if mesh is not None:
             # mesh-sharded serving: slots over the data axes, KV heads over
             # the model axis.  The ctx also constrains activations inside
@@ -488,6 +512,41 @@ class ContinuousEngine:
                                 (par_sh, st_sh, tok_sh, vec_sh, vec_sh),
                                 (tok_sh, tok_sh, vec_sh, st_sh))
 
+        # overlapped pipeline: the chained decode entry consumes the
+        # PREVIOUS tick's un-synced token vector as a device operand and
+        # host-overrides only the broken-chain lanes — the input panel of
+        # tick t+1 never round-trips through the host, so the scheduler
+        # tick runs while the device computes.  Same forward, same sampler,
+        # one extra shape family; built only when overlap is on so the
+        # serial engine's trace_counts() are untouched.
+        self.overlap = bool(overlap)
+        self._inflight: Optional[Dict[str, Any]] = None
+        if self.overlap:
+            def _decode_chain(p, st, prev, ov, ovm, m):
+                t = jnp.where(ovm, ov, prev)[:, None]
+                logits, st = lm.forward_panel_pooled(p, st, t, m, cfg, ctx,
+                                                     bs_)
+                tok, logp, lanes = sampling.sample_step(
+                    logits[:, 0], st["sample"], m)
+                return tok, logp, {**st, "sample": lanes}
+
+            self._decode_chain = _jit(
+                _decode_chain,
+                (par_sh, st_sh, vec_sh, vec_sh, vec_sh, vec_sh),
+                (vec_sh, vec_sh, st_sh))
+            # steady-state device-operand caches: on an uninterrupted
+            # chain the override vectors are all-zero and the decode mask
+            # repeats, so reuse ONE transferred array per shape instead of
+            # a fresh device_put every tick.  All entries are built with
+            # jnp.asarray(np.ndarray) so every dispatch hands
+            # _decode_chain the same operand provenance (the jit cache
+            # keys committed device_puts apart from jit outputs — mixing
+            # them would double-compile).
+            self._ov_zero: Optional[Tuple[jax.Array, jax.Array]] = None
+            self._mask_cache: Dict[Tuple[int, ...], jax.Array] = {}
+        else:
+            self._decode_chain = None
+
         # host mirrors (avoid a device sync per tick)
         self._tail_len = np.zeros(slots, np.int64)
         self._last_tok: Dict[int, int] = {}           # slot -> last token
@@ -556,11 +615,20 @@ class ContinuousEngine:
         toks = [int(t) for t in np.asarray(prompt)]
         rid = self.scheduler.submit(toks, params)
         if self._obs is not None:
+            # queue_depth is passed from the post-submit queue so the gauge
+            # is consistent even when the request was shed at submit time
+            # (sheds never enter the queue) — the asyncio frontend submits
+            # between ticks, where obs.tick cannot refresh it
             self._obs.request_submitted(rid, len(toks),
-                                        self.scheduler.clock())
+                                        self.scheduler.clock(),
+                                        queue_depth=len(self.scheduler.queue))
         req = self.scheduler.finished.get(rid)
         if req is not None and req.finish_reason == "shed":
-            self.fault_counters["shed"] += 1
+            # one counter path: the scheduler sheds, the scheduler counts
+            # (Scheduler.shed_count); the engine mirror re-syncs instead of
+            # incrementing so a shed can never be double-counted no matter
+            # which layer observed it first
+            self.fault_counters["shed"] = self.scheduler.shed_count
             out = req.output()
             if self._obs is not None:
                 self._obs.request_finished(out, self.scheduler.clock())
@@ -638,6 +706,7 @@ class ContinuousEngine:
         ``{request id: RequestOutput}``."""
         while not self.scheduler.done():
             self.step()
+        self.quiesce()
         return {rid: req.output()
                 for rid, req in self.scheduler.finished.items()}
 
@@ -649,6 +718,19 @@ class ContinuousEngine:
         extends the stream."""
         while not self.scheduler.done():
             yield from self.step()
+        yield from self.quiesce()
+
+    def quiesce(self) -> List[RequestOutput]:
+        """Drain the overlapped pipeline: commit (or, for requests that
+        died in flight, discard) the in-flight tick's window and flush any
+        pending releases.  A no-op on the serial engine or when nothing is
+        in flight.  Snapshot paths and the asyncio frontend's shutdown
+        call this so the arena is never serialized under an un-synced
+        dispatch; returns the snapshots it committed."""
+        events: List[RequestOutput] = []
+        self._sync_inflight(events)
+        self._flush_releases()
+        return events
 
     def generate_batch(self, prompts: jax.Array,
                        params: Optional[SamplingParams] = None) -> jax.Array:
@@ -671,6 +753,8 @@ class ContinuousEngine:
             counts["assign"] = retrace_count(self._assign)
         if self._verify is not None:
             counts["verify"] = retrace_count(self._verify)
+        if self._decode_chain is not None:
+            counts["decode_chain"] = retrace_count(self._decode_chain)
         return counts
 
     def entry_points(self, chunk: int = 0):
@@ -719,6 +803,11 @@ class ContinuousEngine:
             qn = self._spec.k + 1
             out["verify"] = (self._verify,
                              (p, st, i32(b, qn), boolv, i32(b)))
+        if self._decode_chain is not None:
+            # the overlapped dispatch path: prev is the in-flight tick's
+            # un-synced token vector, (ov, ovm) the host override lanes
+            out["decode_chain"] = (self._decode_chain,
+                                   (p, st, i32(b), i32(b), boolv, boolv))
         return out
 
     @property
@@ -750,6 +839,9 @@ class ContinuousEngine:
         server can hit on.  Returns the step number written.
         """
         self._snapshot_guard("save_snapshot")
+        # quiesce first: the arena must never be serialized while a
+        # dispatched-but-unsynced tick could still scatter into it
+        self.quiesce()
         from repro.checkpoint.manager import CheckpointManager
         t0 = self.scheduler.clock() if self._obs is not None else 0.0
         pairs = self._alloc.export_registered()
@@ -786,6 +878,7 @@ class ContinuousEngine:
         pages.
         """
         self._snapshot_guard("load_snapshot")
+        self.quiesce()
         t0 = self.scheduler.clock() if self._obs is not None else 0.0
         if self.scheduler.active or self.scheduler.queue or self._blocks:
             raise ValueError("load_snapshot on a busy engine: restore "
@@ -1003,28 +1096,110 @@ class ContinuousEngine:
                 if out is not None:
                     events.append(out)
 
-        # refreeze before decode appends: any slot with a full tail (only
-        # decoding slots can fill one; the host list must mirror the
-        # device-side ``tail_len == tail`` mask exactly, because the paged
-        # fold scatters into precisely the rows the device deems full)
+        if self.overlap and self._spec is not None:
+            # SPEC PIPELINE (shallow): the verify dispatched last tick is
+            # still in flight — the admission work above and the prefill
+            # dispatch below overlap it on the host.  It must commit before
+            # the refreeze decision (the paged fold scatters into exactly
+            # the rows the device deems full, so the tail mirrors need the
+            # data-dependent accept counts) and before drafting (the n-gram
+            # drafter reads the committed history) — so the designated sync
+            # sits between the prefill dispatch and this tick's
+            # draft/verify dispatch, which tick t+1 will sync in turn.
+            self._prefill_tick(events)
+            self._sync_inflight(events)
+            self._refreeze_tick(events)
+            slots = sch.decoding_slots()
+            if not slots:
+                return events
+            return self._spec_tick(slots, events)
+
+        # refreeze before decode appends (under overlap the mirrors are
+        # still exact here: a plain decode appends exactly one token, and
+        # the in-flight tick's +1 was applied at its dispatch)
+        self._refreeze_tick(events)
+        self._prefill_tick(events)
+
+        # decode tick for every slot with a live request past prefill
+        slots = sch.decoding_slots()
+        if not slots:
+            if self.overlap:
+                self._sync_inflight(events)   # pipeline drains when idle
+            return events
+        if self._spec is not None:
+            return self._spec_tick(slots, events)
+        if self.overlap:
+            return self._overlap_decode_tick(slots, events)
+        b = self.pool.slots
+        t_dec = sch.clock() if self._obs is not None else 0.0
+        tokens = np.zeros((b, 1), np.int32)
+        mask = np.zeros((b,), bool)
+        for s in slots:
+            tokens[s, 0] = self._last_tok[s]
+            mask[s] = True
+        tok, logp, self.state = self._decode(
+            self.params, self.state, jnp.asarray(tokens), jnp.asarray(mask))
+        picked, logps = np.asarray(tok), np.asarray(logp)
+        if self._obs is not None:
+            # span covers dispatch through the np.asarray token sync — the
+            # tick's designated host<->device boundary
+            self._obs.decode_tick(t_dec, sch.clock() - t_dec, len(slots),
+                                  spec=False)
+        for s in slots:
+            if s not in sch.active:
+                continue      # cancelled mid-tick (reentrant callback):
+                              # the sampled token dies with the slot
+            self._tail_len[s] += 1
+            self._emit(s, [int(picked[s])], [float(logps[s])], events)
+        return events
+
+    def _refreeze_tick(self, events: List[RequestOutput]) -> None:
+        """Refreeze every slot whose tail ring is full (only decoding slots
+        can fill one; the host list must mirror the device-side
+        ``tail_len == tail`` mask exactly, because the paged fold scatters
+        into precisely the rows the device deems full)."""
         full = [s for s in range(self.pool.slots)
                 if self._tail_len[s] >= self.pool.tail]
-        if full:
-            if self._alloc is not None:
-                tb = self.pool.tail // self.pool.bs
-                ids = np.zeros((self.pool.slots, tb), np.int32)
-                for s in full:
-                    fresh = self._alloc.alloc(tb)    # CoW: never shared pages
-                    ids[s] = fresh
-                    self._blocks.setdefault(s, []).extend(fresh)
-                    self._reserved[s] = max(0, self._reserved.get(s, 0) - tb)
-                self.state = self._refreeze(self.state, jnp.asarray(ids))
-            else:
-                self.state = self._refreeze(self.state)
+        if not full:
+            return
+        if self._alloc is not None:
+            tb = self.pool.tail // self.pool.bs
+            if (self._inflight is not None
+                    and len(full) * tb + sum(self._reserved.values())
+                    > self._alloc.free_blocks()):
+                # a slot whose FINISHING window is still in flight can show
+                # a speculatively-full tail one tick past its reservation;
+                # folding it would alloc pages admission promised to other
+                # requests.  Rare fallback: drain the pipeline first — the
+                # commit releases dead slots (and their pages) and drops
+                # them out of `full`, restoring the never-fails invariant.
+                self._sync_inflight(events)
+                self._flush_releases()
+                full = [s for s in range(self.pool.slots)
+                        if self._tail_len[s] >= self.pool.tail]
+                if not full:
+                    return
+            ids = np.zeros((self.pool.slots, tb), np.int32)
             for s in full:
-                self._tail_len[s] = 0
+                fresh = self._alloc.alloc(tb)    # CoW: never shared pages
+                ids[s] = fresh
+                self._blocks.setdefault(s, []).extend(fresh)
+                self._reserved[s] = max(0, self._reserved.get(s, 0) - tb)
+            self.state = self._refreeze(self.state, jnp.asarray(ids))
+        else:
+            self.state = self._refreeze(self.state)
+        for s in full:
+            self._tail_len[s] = 0
 
-        # one prefill chunk for the oldest request still owed prompt work
+    def _prefill_tick(self, events: List[RequestOutput]) -> None:
+        """One prefill chunk for the oldest request still owed prompt work.
+
+        The final chunk's first-token sync stays SYNCHRONOUS even under
+        overlap — it happens once per request and is the TTFT the SLO
+        benchmarks measure; the one-tick commit delay applies to the
+        steady-state decode/verify windows only.
+        """
+        sch = self.scheduler
         req = sch.next_prefill()
         if req is not None:
             t_pf = sch.clock() if self._obs is not None else 0.0
@@ -1070,34 +1245,134 @@ class ContinuousEngine:
                                         sch.clock() - t_pf, len(chunk),
                                         final)
 
-        # decode tick for every slot with a live request past prefill
-        slots = sch.decoding_slots()
-        if not slots:
-            return events
-        if self._spec is not None:
-            return self._spec_tick(slots, events)
+    def _overlap_decode_tick(self, slots: List[int],
+                             events: List[RequestOutput]
+                             ) -> List[RequestOutput]:
+        """DEEP PIPELINE: dispatch this tick's decode BEFORE committing the
+        previous one.
+
+        The input token panel chains on device: each slot's token is the
+        in-flight decode's un-synced output (a jax async value the device
+        already holds), host-overridden only where the chain breaks — a
+        slot fresh out of prefill, a slot re-admitted since the record was
+        taken, or the first tick after an idle pipeline.  The host tail
+        mirror advances at dispatch; a plain decode appends exactly one
+        token, so the mirror stays exact without waiting, which is what
+        keeps the refreeze decision (made before this sync) correct.  The
+        dispatched tick is recorded and committed one tick later by
+        :meth:`_sync_inflight` — where ``(slot, rid)`` liveness is
+        re-checked, so tokens speculatively dispatched for a request that
+        dies this tick are never committed.
+        """
+        sch = self.scheduler
         b = self.pool.slots
         t_dec = sch.clock() if self._obs is not None else 0.0
-        tokens = np.zeros((b, 1), np.int32)
-        mask = np.zeros((b,), bool)
+        rec = self._inflight
+        if rec is None:
+            # cold pipeline (first tick, or just drained): there is no
+            # device token to chain on, so dispatch through the regular
+            # decode entry from the host mirrors — same computation, and
+            # _decode_chain only ever sees jit-output `prev` operands
+            # (mixing host arrays in would key a second compile-cache
+            # entry and break the zero-retrace bar)
+            tokens = np.zeros((b, 1), np.int32)
+            mask = np.zeros((b,), bool)
+            for s in slots:
+                tokens[s, 0] = self._last_tok[s]
+                mask[s] = True
+            tok, logp, self.state = self._decode(
+                self.params, self.state, jnp.asarray(tokens),
+                jnp.asarray(mask))
+        else:
+            chained = set()
+            if rec["kind"] == "decode":
+                for s, rid in rec["slots"]:
+                    req = sch.active.get(s)
+                    if req is not None and req.rid == rid:
+                        chained.add(s)
+            broken = [s for s in slots if s not in chained]
+            if broken:
+                ov = np.zeros((b,), np.int32)
+                ovm = np.zeros((b,), bool)
+                for s in broken:
+                    ovm[s] = True
+                    ov[s] = self._last_tok[s]
+                dov, dovm = jnp.asarray(ov), jnp.asarray(ovm)
+            else:
+                # unbroken chain (the steady state): constant all-zero
+                # overrides, transferred once and reused
+                if self._ov_zero is None:
+                    self._ov_zero = (
+                        jnp.asarray(np.zeros((b,), np.int32)),
+                        jnp.asarray(np.zeros((b,), bool)))
+                dov, dovm = self._ov_zero
+            mkey = tuple(slots)
+            dmask = self._mask_cache.get(mkey)
+            if dmask is None:
+                if len(self._mask_cache) >= 64:
+                    self._mask_cache.clear()
+                mask = np.zeros((b,), bool)
+                mask[list(slots)] = True
+                dmask = self._mask_cache[mkey] = jnp.asarray(mask)
+            tok, logp, self.state = self._decode_chain(
+                self.params, self.state, rec["tok"], dov, dovm, dmask)
         for s in slots:
-            tokens[s, 0] = self._last_tok[s]
-            mask[s] = True
-        tok, logp, self.state = self._decode(
-            self.params, self.state, jnp.asarray(tokens), jnp.asarray(mask))
-        picked, logps = np.asarray(tok), np.asarray(logp)
-        if self._obs is not None:
-            # span covers dispatch through the np.asarray token sync — the
-            # tick's designated host<->device boundary
-            self._obs.decode_tick(t_dec, sch.clock() - t_dec, len(slots),
-                                  spec=False)
-        for s in slots:
-            if s not in sch.active:
-                continue      # cancelled mid-tick (reentrant callback):
-                              # the sampled token dies with the slot
             self._tail_len[s] += 1
-            self._emit(s, [int(picked[s])], [float(logps[s])], events)
+        new_rec = {"kind": "decode", "tok": tok, "logp": logp,
+                   "ncommit": None, "dlen": None,
+                   "slots": [(s, sch.active[s].rid) for s in slots],
+                   "t0": t_dec, "n_slots": len(slots)}
+        # commit tick t-1 while tick t computes behind it
+        self._sync_inflight(events)
+        self._inflight = new_rec
         return events
+
+    def _sync_inflight(self, events: List[RequestOutput]) -> None:
+        """Commit the in-flight tick's token window — THE designated sync
+        point of the overlapped pipeline.
+
+        This is the engine's only ``jax.block_until_ready`` and is
+        registered (file, function) in
+        :data:`repro.analysis.lint.DESIGNATED_SYNCS`; the block-until-ready
+        lint rule flags the call anywhere else in the tree.  Liveness is
+        re-checked per slot against the rid recorded at dispatch: a request
+        that expired, was cancelled, or whose slot was re-admitted while
+        the window was in flight has its tokens DISCARDED — the release /
+        lane-set transitions already wiped the slot's device state, so the
+        speculative appends were dead writes.  No-op when nothing is in
+        flight (serial engine, drained pipeline).
+        """
+        rec, self._inflight = self._inflight, None
+        if rec is None:
+            return
+        sch = self.scheduler
+        jax.block_until_ready((rec["tok"], rec["logp"]))
+        picked = np.asarray(rec["tok"])
+        logps = np.asarray(rec["logp"])
+        ncs = (np.asarray(rec["ncommit"])
+               if rec["ncommit"] is not None else None)
+        if self._obs is not None:
+            # the decode/verify span under overlap runs dispatch ->
+            # delayed sync: true device wall-clock, host work included
+            # only where it failed to hide
+            now = sch.clock()
+            self._obs.decode_tick(rec["t0"], now - rec["t0"],
+                                  rec["n_slots"], spec=ncs is not None,
+                                  overlapped=True)
+        for s, rid in rec["slots"]:
+            req = sch.active.get(s)
+            if req is None or req.rid != rid:
+                continue          # died in flight: the window is discarded
+            if ncs is None:
+                self._emit(s, [int(picked[s])], [float(logps[s])], events)
+            else:
+                nc = int(ncs[s])
+                self._tail_len[s] += nc      # t0 + accepted stay appended
+                self.spec_hist[nc - 1] += 1  # nc - 1 = accepted drafts
+                if self._adaptive is not None:
+                    self._adaptive.update(s, int(rec["dlen"][s]), nc - 1)
+                self._emit(s, [int(t) for t in picked[s, :nc]],
+                           [float(l) for l in logps[s, :nc]], events)
 
     def _spec_tick(self, slots: List[int],
                    events: List[RequestOutput]) -> List[RequestOutput]:
@@ -1151,6 +1426,7 @@ class ContinuousEngine:
                     drafts = []
                 dlen[s] = len(drafts)
                 tokens[s, 1:1 + len(drafts)] = drafts
+        slot_rids = [(s, sch.active[s].rid) for s in slots]
         tok, logp, ncommit, self.state = self._verify(
             self.params, self.state, jnp.asarray(tokens),
             jnp.asarray(mask), jnp.asarray(dlen))
@@ -1164,6 +1440,16 @@ class ContinuousEngine:
                     sch.active[self._faults.choose(alive)].rid)
                 if out is not None:
                     events.append(out)
+        if self.overlap:
+            # shallow pipeline: the window was dispatched, not synced — it
+            # commits at the NEXT tick's _sync_inflight (after that tick's
+            # admission/prefill dispatch), rid-checked so a cancellation
+            # landing between now and then discards it
+            self._inflight = {"kind": "spec", "tok": tok, "logp": logp,
+                              "ncommit": ncommit, "dlen": dlen,
+                              "slots": slot_rids, "t0": t_dec,
+                              "n_slots": len(slots)}
+            return events
         picked, logps = np.asarray(tok), np.asarray(logp)
         ncs = np.asarray(ncommit)
         if self._obs is not None:

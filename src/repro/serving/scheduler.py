@@ -191,6 +191,11 @@ class Scheduler:
         self.active: Dict[int, Request] = {}          # slot -> request
         self.finished: Dict[int, Request] = {}        # rid -> request
         self._next_rid = 0
+        # sheds happen HERE (the queue bound is scheduler state), so the
+        # scheduler owns the authoritative count; layers above mirror it
+        # instead of incrementing their own, which keeps shed accounting
+        # single-sourced no matter how many frontends submit
+        self.shed_count = 0
 
     # -- submission ---------------------------------------------------------
     def submit(self, prompt: List[int],
@@ -217,9 +222,14 @@ class Scheduler:
         now = self.clock()
         req = Request(rid, list(prompt), params, arrival_time=now)
         if self.max_queue and len(self.queue) >= self.max_queue:
+            # shed at submit time: admitted_time stays None (the request
+            # was never admitted — queue-time metrics must not invent a
+            # zero-length admission) and the scheduler's own counter is
+            # the one counter path
             req.finish_reason = "shed"
             req.finished_time = now
             self.finished[rid] = req
+            self.shed_count += 1
         else:
             self.queue.append(req)
         return rid

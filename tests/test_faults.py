@@ -450,12 +450,17 @@ def _drive_matrix(eng, prompts, plan=None, max_ticks=400):
     return done
 
 
-@pytest.mark.parametrize("seed", [0, 1])
-def test_fault_matrix_engine_survives(seed):
+@pytest.mark.parametrize("seed,overlap",
+                         [(0, False), (1, False), (0, True), (1, True)],
+                         ids=["s0", "s1", "s0-overlap", "s1-overlap"])
+def test_fault_matrix_engine_survives(seed, overlap):
     """Every engine fault site fires (seeded schedule); the engine ends
     drained and conserves refcounts, steady-state traces stay flat, and
     every request the plan didn't cancel is token-identical to the
-    fault-free run."""
+    fault-free run.  The overlap variants replay the same plans against
+    the double-buffered pipeline — the baseline stays serial, so every
+    identity claim also proves overlapped faulted output matches
+    serial fault-free output."""
     cfg, params = _setup()
     prompts = _fault_wave(cfg)
     kw = dict(slots=2, max_tokens=96, bs=16, prefill_chunk=32, paged=True,
@@ -467,7 +472,8 @@ def test_fault_matrix_engine_survives(seed):
                  for (_, i), req in base.items()}
 
     plan = FaultPlan.generate(seed=seed, ticks=16)
-    eng = ContinuousEngine(params, cfg, **kw, faults=plan, max_queue=8)
+    eng = ContinuousEngine(params, cfg, **kw, faults=plan, max_queue=8,
+                           overlap=overlap)
     done = _drive_matrix(eng, prompts, plan=plan)
     assert plan.exhausted(), f"plan stuck: {plan.pending()}"
     assert len(plan.fired) == len(ENGINE_SITES)

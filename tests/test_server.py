@@ -1,0 +1,207 @@
+"""Asyncio HTTP frontend: submit over HTTP, stream tokens, shut down.
+
+The frontend (:mod:`repro.serving.frontend`) bridges an asyncio HTTP
+server to the engine's dedicated thread through a tick-boundary inbox.
+This file pins down:
+
+* **Param parsing** — ``params_from_json`` accepts exactly the
+  whitelisted scalar fields and ignores everything else.
+* **In-process serving** — ``ServerFrontend`` on an ephemeral port:
+  ``/healthz`` liveness, ``POST /v1/generate`` streaming NDJSON frames
+  whose concatenated tokens are bit-identical to a direct serial-engine
+  run of the same prompt, ``POST /v1/cancel`` aborting a mid-flight
+  stream with a terminal ``cancelled`` frame, malformed requests
+  answered with 400/404 (never a dead connection), and
+  ``POST /v1/shutdown`` draining the engine thread (overlapped pipeline
+  quiesced) before ``run()`` returns.
+* **CLI smoke** — ``python -m repro.launch.serve --server`` end to end
+  in a subprocess: parse the printed URL, generate, shut down, exit 0.
+  This is the exact flow the CI frontend-smoke step drives.
+"""
+import dataclasses
+import http.client
+import json
+import os
+import re
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serving import (ContinuousEngine, SamplingParams,
+                           ServerFrontend, params_from_json)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_params_from_json_whitelist():
+    p = params_from_json({"temperature": 0.5, "top_k": 3,
+                          "max_new_tokens": 4, "seed": 9,
+                          "deadline_s": 2.5,
+                          "unknown_field": 1, "stop_ids": [2, 3]})
+    assert (p.temperature, p.top_k, p.max_new_tokens, p.seed,
+            p.deadline_s) == (0.5, 3, 4, 9, 2.5)
+    d = SamplingParams()
+    assert p.stop_ids == d.stop_ids            # excluded from the wire
+    assert p.top_p == d.top_p                  # absent -> default
+    assert params_from_json({}) == d
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3-0.6b").reduced()
+    cfg = dataclasses.replace(cfg, kv_k_sparsity=0.3, kv_v_sparsity=0.5,
+                              kv_tail=16, compute_dtype="float32",
+                              param_dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _conn(port, timeout=120):
+    return http.client.HTTPConnection("127.0.0.1", port, timeout=timeout)
+
+
+def _post(port, path, obj, timeout=60):
+    c = _conn(port, timeout)
+    c.request("POST", path, json.dumps(obj),
+              {"Content-Type": "application/json"})
+    r = c.getresponse()
+    body = json.loads(r.read())
+    c.close()
+    return r.status, body
+
+
+def _stream(resp):
+    """Read NDJSON frames off a chunked response until the terminal one."""
+    frames = []
+    while True:
+        line = resp.readline()
+        assert line, "stream ended without a terminal frame"
+        frames.append(json.loads(line))
+        if frames[-1]["finished"]:
+            return frames
+
+
+def test_server_generate_cancel_shutdown(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab, (14,)).tolist()
+
+    # oracle: the serial engine's greedy stream for the same prompt
+    serial = ContinuousEngine(params, cfg, slots=2, max_tokens=96, bs=16,
+                              prefill_chunk=32, overlap=False)
+    rid = serial.submit(prompt, SamplingParams(max_new_tokens=6))
+    want = list(serial.run()[rid].token_ids)
+
+    eng = ContinuousEngine(params, cfg, slots=2, max_tokens=96, bs=16,
+                           prefill_chunk=32, overlap=True)
+    front = ServerFrontend(eng, port=0)
+    started = threading.Event()
+    front._port_box = None
+
+    def ready(port):
+        front._port_box = port
+        started.set()
+
+    t = threading.Thread(target=front.run, args=(ready,), daemon=True)
+    t.start()
+    assert started.wait(60), "server never came up"
+    port = front._port_box
+
+    # liveness
+    c = _conn(port, 30)
+    c.request("GET", "/healthz")
+    r = c.getresponse()
+    health = json.loads(r.read())
+    assert r.status == 200 and health["ok"]
+    c.close()
+
+    # generate: streamed deltas concatenate to the oracle's tokens
+    c = _conn(port)
+    c.request("POST", "/v1/generate",
+              json.dumps({"prompt": prompt, "max_new_tokens": 6}),
+              {"Content-Type": "application/json"})
+    r = c.getresponse()
+    assert r.status == 200
+    assert r.getheader("Content-Type") == "application/x-ndjson"
+    frames = _stream(r)
+    toks = [tok for f in frames for tok in f["tokens"]]
+    assert toks == want
+    assert frames[-1]["finish_reason"] == "length"
+    c.close()
+
+    # cancel a longer request mid-stream: terminal frame says cancelled
+    c2 = _conn(port)
+    c2.request("POST", "/v1/generate",
+               json.dumps({"prompt": prompt, "max_new_tokens": 64}),
+               {"Content-Type": "application/json"})
+    r2 = c2.getresponse()
+    first = json.loads(r2.readline())
+    status, body = _post(port, "/v1/cancel",
+                         {"request_id": first["request_id"]})
+    assert status == 200 and body["cancelled"] is True
+    frames = [first] + _stream(r2)
+    assert frames[-1]["finish_reason"] == "cancelled"
+    got = [tok for f in frames for tok in f["tokens"]]
+    assert got == want[:len(got)]              # committed prefix only
+    c2.close()
+
+    # malformed requests answer, they don't hang the connection
+    assert _post(port, "/v1/generate", {"nope": 1})[0] == 400
+    assert _post(port, "/v1/cancel", {})[0] == 400
+    assert _post(port, "/v1/nothing", {})[0] == 404
+
+    # clean shutdown: run() returns, engine thread joined and quiesced
+    status, body = _post(port, "/v1/shutdown", {})
+    assert status == 200 and body["shutting_down"]
+    t.join(timeout=120)
+    assert not t.is_alive(), "run() did not return after shutdown"
+    assert front.loop_thread.error is None
+    assert eng._inflight is None and not eng.scheduler.active
+    assert front.requests_served == 2
+
+
+def test_serve_cli_server_smoke():
+    """``launch/serve --server`` in a subprocess: the CI smoke path."""
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve", "--arch",
+         "qwen3-0.6b", "--reduced", "--server", "--port", "0",
+         "--slots", "2", "--prompt-len", "32", "--steps", "8",
+         "--prefill-chunk", "16"],
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        cwd=REPO, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True)
+    try:
+        port = None
+        lines = []
+        for line in proc.stdout:
+            lines.append(line)
+            m = re.search(r"http://127\.0\.0\.1:(\d+)", line)
+            if m:
+                port = int(m.group(1))
+                break
+        assert port, "server URL never printed:\n" + "".join(lines)
+
+        c = _conn(port)
+        c.request("POST", "/v1/generate",
+                  json.dumps({"prompt": list(range(1, 17)),
+                              "max_new_tokens": 5}),
+                  {"Content-Type": "application/json"})
+        frames = _stream(c.getresponse())
+        toks = [tok for f in frames for tok in f["tokens"]]
+        assert len(toks) == 5
+        assert frames[-1]["finish_reason"] == "length"
+        c.close()
+
+        assert _post(port, "/v1/shutdown", {})[1]["shutting_down"]
+        assert proc.wait(timeout=120) == 0
+        rest = proc.stdout.read()
+        assert "server drained" in rest
+    finally:
+        if proc.poll() is None:
+            proc.kill()
